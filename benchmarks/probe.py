@@ -1,0 +1,86 @@
+"""Fast §Perf iteration probe: compile a 1-layer-per-segment unrolled
+variant of one (arch x shape) cell and print wire bytes + top collectives.
+
+The full dry-run (layer differencing + memory proof) is the measurement of
+record; this probe is the inner loop of hypothesis->change->measure, ~10x
+faster per iteration.
+
+  PYTHONPATH=src python -m benchmarks.probe --arch command-r-plus-104b \
+      --shape train_4k --remat dots --seq-shard-acts
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--seq-shard-acts", action="store_true")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--decode-shardmap", action="store_true")
+    ap.add_argument("--serve-ep2d", action="store_true")
+    ap.add_argument("--fsdp", default=None, choices=["on", "off"])
+    ap.add_argument("--tp-off", action="store_true")
+    ap.add_argument("--block-k", type=int, default=1024)
+    ap.add_argument("--redundancy", default="none",
+                    choices=["none", "dmr_temporal", "dmr_spatial",
+                             "tmr_temporal", "tmr_spatial"])
+    ap.add_argument("--compare", default="bitwise",
+                    choices=["bitwise", "hash"])
+    ap.add_argument("--fault-hook", action="store_true")
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import _compile_variant, arch_opts, _costs
+    from repro.launch.mesh import make_ctx, make_production_mesh
+    from repro.configs import get_config
+    from repro.core import RedundancyPolicy
+    from repro.models.config import with_segment_counts, segment_counts
+
+    level = {"none": 1, "dmr": 2, "tmr": 3}[args.redundancy.split("_")[0]]
+    placement = (args.redundancy.split("_")[1]
+                 if "_" in args.redundancy else "temporal")
+    policy = RedundancyPolicy(level=level, placement=placement,
+                              compare=args.compare)
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    cfg = get_config(args.arch)
+    cfg1 = with_segment_counts(cfg, [1] * len(segment_counts(cfg)))
+    opts = arch_opts(args.arch)
+    use_fsdp = opts["fsdp"] if args.fsdp is None else args.fsdp == "on"
+    if args.serve_ep2d:
+        use_fsdp = False
+    pod_role = ("replica" if (level > 1 and placement == "spatial")
+                else "data")
+    ctx = make_ctx(mesh, pod_role=pod_role, fsdp=use_fsdp,
+                   vocab_size=cfg.vocab_size, d_model=cfg.d_model,
+                   unroll=True, pallas=False, remat=args.remat,
+                   seq_shard_acts=args.seq_shard_acts,
+                   block_k=args.block_k, tp_off=args.tp_off,
+                   decode_shardmap=args.decode_shardmap,
+                   serve_ep2d=args.serve_ep2d)
+    comp = _compile_variant(cfg1, args.shape, mesh, ctx, policy,
+                            opts["opt"], 1, args.grad_compression,
+                            args.fault_hook)
+    c = _costs(comp)
+    print(f"{args.arch} {args.shape} probe: wire={c['wire']/1e9:.3f} GB  "
+          f"flops={c['flops']/1e12:.2f} T  bytes={c['bytes']/1e9:.1f} GB")
+    for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        if c["coll"][k]:
+            print(f"  {k:20s} {c['coll'][k]/1e9:9.3f} GB")
+    for t in c["coll"]["top"][:args.top]:
+        print(f"    {t['op'][:70]:70s} {t['wire_bytes']/1e9:8.3f} GB "
+              f"x{t['count']}")
+
+
+if __name__ == "__main__":
+    main()

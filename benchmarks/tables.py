@@ -1,0 +1,107 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.tables --dir results/dryrun
+  PYTHONPATH=src python -m benchmarks.tables --dir results/dryrun \
+      --mesh 16x16 --markdown
+  PYTHONPATH=src python -m benchmarks.tables --compare results/dryrun_v0 \
+      --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+
+def load(d: str, tag: str = "baseline") -> dict:
+    recs = {}
+    for f in sorted(pathlib.Path(d).glob(f"{tag}_*.json")):
+        r = json.loads(f.read_text())
+        if r.get("ok"):
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:.2f}"
+
+
+def table(recs: dict, mesh: str | None, markdown: bool) -> str:
+    rows = []
+    hdr = ["arch", "shape", "mesh", "comp_ms", "mem_ms", "coll_ms",
+           "dominant", "frac", "frac_bw", "useful", "live_GiB/chip"]
+    for (a, sh, m), r in sorted(recs.items()):
+        if mesh and m != mesh:
+            continue
+        ro = r["roofline"]
+        chips = ro["chips"]
+        live = r["memory"]["live_est_gib"] / chips
+        # decode is bandwidth-bound by nature: also report how close the
+        # bound is to the HBM roofline (frac is FLOPs-ideal and ~0 there)
+        bound = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        frac_bw = ro["memory_s"] / bound if bound else 0.0
+        rows.append([
+            a, sh, m, fmt_ms(ro["compute_s"]), fmt_ms(ro["memory_s"]),
+            fmt_ms(ro["collective_s"]), ro["dominant"],
+            f"{ro['roofline_fraction']:.3f}",
+            f"{frac_bw:.3f}" if sh.startswith(("decode", "long")) else "-",
+            f"{ro['useful_ratio']:.3f}",
+            f"{live:.2f}",
+        ])
+    if markdown:
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        out += ["| " + " | ".join(r) + " |" for r in rows]
+    else:
+        w = [max(len(str(r[i])) for r in rows + [hdr])
+             for i in range(len(hdr))]
+        out = [" ".join(h.ljust(w[i]) for i, h in enumerate(hdr))]
+        out += [" ".join(str(c).ljust(w[i]) for i, c in enumerate(r))
+                for r in rows]
+    fr = [float(r[7]) for r in rows]
+    if fr:
+        out.append("")
+        out.append(f"cells={len(rows)} median_frac={np.median(fr):.3f} "
+                   f"min={min(fr):.3f} max={max(fr):.3f}")
+    return "\n".join(out)
+
+
+def compare(old: dict, new: dict, mesh: str | None) -> str:
+    out = [f"{'cell':55s} {'coll_ms old':>12s} {'coll_ms new':>12s} "
+           f"{'x':>8s}  {'frac old':>8s} {'frac new':>8s}"]
+    for key in sorted(set(old) & set(new)):
+        a, sh, m = key
+        if mesh and m != mesh:
+            continue
+        o, n = old[key]["roofline"], new[key]["roofline"]
+        ratio = (o["collective_s"] / n["collective_s"]
+                 if n["collective_s"] else float("inf"))
+        out.append(
+            f"{a + '/' + sh + '/' + m:55s} "
+            f"{o['collective_s']*1e3:12.2f} {n['collective_s']*1e3:12.2f} "
+            f"{ratio:8.1f}  {o['roofline_fraction']:8.3f} "
+            f"{n['roofline_fraction']:8.3f}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--compare", default=None,
+                    help="old dir to diff against --dir")
+    args = ap.parse_args()
+    new = load(args.dir, args.tag)
+    if args.compare:
+        old = load(args.compare, args.tag)
+        print(compare(old, new, args.mesh))
+    else:
+        print(table(new, args.mesh, args.markdown))
+
+
+if __name__ == "__main__":
+    main()

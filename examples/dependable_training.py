@@ -1,0 +1,127 @@
+"""Dependable training on unreliable hardware (paper §IV, end to end).
+
+Trains the same small LM three times under a campaign of injected soft
+errors (single bit flips in one replica's freshly computed trainer state):
+
+  A. no redundancy     — the strike silently corrupts training,
+  B. DMR               — every strike is *detected* (bitwise compare of the
+                         two replica states) and repaired by the runtime's
+                         third tie-breaking execution from the immutable
+                         previous buffer,
+  C. TMR               — every strike is *corrected in-graph* by bitwise
+                         majority vote (no host round-trip).
+
+It then shows the §IV permanent-fault localization: a device that keeps
+faulting crosses the ledger threshold and is flagged for maintenance.
+
+Run:  PYTHONPATH=src python examples/dependable_training.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import (
+    FaultLedger, FaultSpec, HostRunner, RedundancyPolicy, run_scan,
+)
+from repro.data.pipeline import DataConfig
+from repro.models.lm_cells import TrainConfig, make_train_program
+from repro.optim.adamw import OptConfig
+
+STEPS = 40
+cfg = get_reduced("internlm2-1.8b")
+cfg = dataclasses.replace(cfg, d_model=128, n_layers=2, d_ff=384,
+                          n_heads=2, n_kv_heads=1)
+tcfg = TrainConfig(
+    data=DataConfig(batch=8, seq_len=64, vocab=cfg.vocab_size, kind="bigram"),
+    opt=OptConfig(peak_lr=2e-3, warmup_steps=8, decay_steps=STEPS),
+)
+
+
+def make(policy):
+    prog = make_train_program(cfg, tcfg).with_policies({"trainer": policy})
+    return prog, prog.init_states(jax.random.PRNGKey(0))
+
+
+# a campaign of strikes against the trainer cell's params (leaf 5 = a weight)
+def campaign(prog, n=4, replica=0):
+    rng = np.random.default_rng(7)
+    return [
+        FaultSpec.at(step=int(s), cell_id=prog.cell_id("trainer"),
+                     replica=replica, leaf=5,
+                     index=int(rng.integers(1024)), bit=30)
+        for s in np.linspace(5, STEPS - 5, n).astype(int)
+    ]
+
+
+# ---- reference: clean run (no faults, no redundancy) ----------------------
+prog0, st0 = make(RedundancyPolicy())
+runner0 = HostRunner(prog0)
+clean = runner0.run(st0, STEPS)
+clean_loss = float(jax.device_get(clean["trainer"]["metrics"]["loss"]))
+print(f"clean run           : final loss {clean_loss:.4f}")
+
+# ---- A: unprotected, struck ------------------------------------------------
+progA, stA = make(RedundancyPolicy())
+faults = campaign(progA, n=1)
+# without replication the flip lands in the *canonical* state: corrupt result
+finalA, _, _ = run_scan(progA, stA, STEPS, fault=faults[0])
+lossA = float(jax.device_get(finalA["trainer"]["metrics"]["loss"]))
+pdiff = float(
+    sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()
+        for a, b in zip(jax.tree.leaves(finalA["trainer"]["params"]),
+                        jax.tree.leaves(clean["trainer"]["params"])))
+)
+print(f"A unprotected       : final loss {lossA:.4f}  "
+      f"max param drift vs clean = {pdiff:.3e}  <- silent corruption")
+
+# ---- B: DMR detect + host tie-break ---------------------------------------
+progB, stB = make(RedundancyPolicy(level=2))
+runnerB = HostRunner(progB, ledger=FaultLedger())
+finalB = runnerB.run(stB, STEPS, faults=campaign(progB, n=4))
+lossB = float(jax.device_get(
+    finalB["trainer"]["metrics"]["loss"]).reshape(-1)[0])
+driftB = float(
+    sum(jnp.abs(a[0].astype(jnp.float32) - b.astype(jnp.float32)).max()
+        for a, b in zip(jax.tree.leaves(finalB["trainer"]["params"]),
+                        jax.tree.leaves(clean["trainer"]["params"])))
+)
+print(f"B DMR               : final loss {lossB:.4f}  detected "
+      f"{runnerB.ledger.totals['trainer']['events']:.0f} strikes, "
+      f"{len(runnerB.recoveries)} tie-break recoveries, "
+      f"drift vs clean = {driftB:.3e}")
+
+# ---- C: TMR corrects in-graph ----------------------------------------------
+progC, stC = make(RedundancyPolicy(level=3))
+stC_final, reports, _ = run_scan(progC, stC, STEPS,
+                                 fault=campaign(progC, n=1)[0])
+lossC = float(jax.device_get(
+    stC_final["trainer"]["metrics"]["loss"]).reshape(-1)[0])
+driftC = float(
+    sum(jnp.abs(a[0].astype(jnp.float32) - b.astype(jnp.float32)).max()
+        for a, b in zip(jax.tree.leaves(stC_final["trainer"]["params"]),
+                        jax.tree.leaves(clean["trainer"]["params"])))
+)
+print(f"C TMR               : final loss {lossC:.4f}  "
+      f"votes corrected {float(reports['trainer']['events']):.0f} strike(s) "
+      f"in-graph, drift vs clean = {driftC:.3e}")
+
+# ---- permanent-fault localization (paper §IV last paragraph) ---------------
+progD, stD = make(RedundancyPolicy(level=2))
+runnerD = HostRunner(progD, ledger=FaultLedger(threshold=3))
+# replica 1's "device" is going bad: it faults every 4th step
+bad = [FaultSpec.at(step=s, cell_id=progD.cell_id("trainer"), replica=1,
+                    leaf=5, index=17, bit=22)
+       for s in range(4, STEPS, 4)]
+runnerD.run(stD, STEPS, faults=bad)
+suspects = runnerD.ledger.permanent_fault_suspects()
+print(f"\npermanent-fault localization: ledger flagged {suspects} "
+      "(cell, replica slot) -> maintenance + elastic remesh "
+      "(src/repro/ft/elastic.py)")
+
+assert abs(lossB - clean_loss) < 1e-3 and driftB < 1e-4, "DMR failed"
+assert abs(lossC - clean_loss) < 1e-3 and driftC < 1e-4, "TMR failed"
+print("\nDMR/TMR preserved the clean trajectory under strikes; "
+      "the unprotected run drifted.")

@@ -1,0 +1,94 @@
+"""Paper Listing 1, verbatim: progressive image blend in the MISO textual IR.
+
+The source below is the paper's example program (ImageBlend + StaticImage).
+It is parsed by the MISO front-end (src/repro/core/ir.py), dependencies are
+extracted from the transition expressions, and the compiled program runs on
+the same JAX back-ends as the LM training stack.  The runtime loads the two
+"images" (paper: "loading input and output data can be performed by the
+runtime") and streams intermediate states out — the paper's video-animation
+output, rendered here as ASCII frames.
+
+Run:  PYTHONPATH=src python examples/image_blend.py
+"""
+import numpy as np
+import jax
+
+from repro.core import run_scan
+from repro.core.ir import compile_source
+
+W, H = 24, 12
+N = W * H
+
+SOURCE = """
+// paper Listing 1 (image size reduced for the terminal)
+cell ImageBlend {
+  var r:Float = 0;
+  var g:Float = 0;
+  var b:Float = 0;
+
+  transition {
+    r = .99 * r + .01 * image2(this.pos).r;
+    g = .99 * g + .01 * image2(this.pos).g;
+    b = .99 * b + .01 * image2(this.pos).b;
+  }
+}
+cell StaticImage {
+  var r:Float = 0;
+  var g:Float = 0;
+  var b:Float = 0;
+}
+image1 = new ImageBlend(%d)
+image2 = new StaticImage(%d)
+""" % (N, N)
+
+
+def make_image(kind: str) -> dict:
+    """Runtime-side input loading: two synthetic RGB images."""
+    y, x = np.mgrid[0:H, 0:W]
+    if kind == "rings":
+        v = (np.hypot(x - W / 2, y - H / 2) % 6 < 3) * 255.0
+    else:
+        v = ((x // 3 + y // 3) % 2) * 255.0
+    return {"r": v.reshape(-1), "g": (255 - v).reshape(-1),
+            "b": v.reshape(-1) * 0.5}
+
+
+img1, img2 = make_image("rings"), make_image("checker")
+program = compile_source(SOURCE, inputs={"image1": img1, "image2": img2})
+program.validate()
+
+states = program.init_states(jax.random.PRNGKey(0))
+
+RAMP = " .:-=+*#%@"
+
+
+def ascii_frame(state) -> str:
+    lum = np.asarray(state["r"] + state["g"] + state["b"]).reshape(H, W)
+    lum = lum / max(lum.max(), 1e-9)
+    return "\n".join(
+        "".join(RAMP[int(v * (len(RAMP) - 1))] for v in row) for row in lum
+    )
+
+
+# the runtime streams intermediate states (the paper's "video" output)
+frames = (0, 60, 240, 600)
+total = 0
+for i, upto in enumerate(frames):
+    n = upto - total
+    if n:
+        states, _, _ = run_scan(program, states, n)
+        total = upto
+    print(f"\n--- transition {total} ---")
+    print(ascii_frame(states["image1"]))
+
+# convergence check: after many transitions image1 -> image2
+err = float(np.abs(np.asarray(states["image1"]["r"]) - img2["r"]).mean())
+print(f"\nmean |image1.r - image2.r| after {total} transitions: {err:.2f} "
+      f"(0.99^{total} of initial contrast ~ "
+      f"{0.99 ** total * np.abs(img1['r'] - img2['r']).mean():.2f})")
+
+# the dependency extractor saw exactly what the paper promises:
+g = program.graph()
+print("\nextracted reads:",
+      {c.name: list(c.reads) for c in program.cells.values()})
+print("dependency components (wavefront units):", g.condensation()[0])

@@ -1,0 +1,109 @@
+"""Quickstart: the MISO cell calculus in five minutes.
+
+Builds a tiny MISO program with the Python front-end (cells = state +
+transition, paper §II), runs it three ways:
+
+  1. lock-step scan (the production schedule),
+  2. wavefront (dependency-aware, no global barrier — paper §III),
+  3. with DMR replication + an injected bit flip (paper §IV): the mismatch
+     is detected, and the runtime's third tie-breaking execution repairs it.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    CellType, FaultSpec, HostRunner, MisoProgram, RedundancyPolicy,
+    WavefrontRunner, compile_step, run_scan,
+)
+
+# ---------------------------------------------------------------------------
+# 1. A MISO program: a 1-D heat rod (SIMD stencil cell) + a probe cell (MIMD)
+# ---------------------------------------------------------------------------
+N = 64
+
+
+def rod_init(key):
+    t = jnp.zeros((N,), jnp.float32).at[N // 2].set(100.0)
+    return {"t": t}
+
+
+def rod_transition(prev):
+    """Reads ONLY the previous state (paper §II read-prev/write-next)."""
+    t = prev["rod"]["t"]
+    left = jnp.roll(t, 1).at[0].set(t[0])
+    right = jnp.roll(t, -1).at[-1].set(t[-1])
+    return {"t": 0.25 * left + 0.5 * t + 0.25 * right}
+
+
+def probe_init(key):
+    return {"peak": jnp.float32(0), "mean": jnp.float32(0)}
+
+
+def probe_transition(prev):
+    # a *different* cell type (MIMD) reading the rod's previous state
+    t = prev["rod"]["t"]
+    return {"peak": jnp.max(t), "mean": jnp.mean(t)}
+
+
+def standalone_init(key):
+    return {"x": jnp.float32(1.0)}
+
+
+def standalone_transition(prev):
+    # no reads outside itself -> independent dependency component:
+    # the wavefront scheduler can run it ahead without a global barrier
+    return {"x": prev["lfsr"]["x"] * 1.000001 + 0.5}
+
+
+prog = MisoProgram()
+prog.add(CellType("rod", rod_init, rod_transition, instances=N))
+prog.add(CellType("probe", probe_init, probe_transition, reads=("rod",)))
+prog.add(CellType("lfsr", standalone_init, standalone_transition))
+prog.validate()  # checks the §II single-output contract structurally
+
+states0 = prog.init_states(jax.random.PRNGKey(0))
+
+# ---------------------------------------------------------------------------
+# 2. Lock-step execution (jit + scan)
+# ---------------------------------------------------------------------------
+final, reports, _ = run_scan(prog, states0, n_steps=100)
+print("lock-step  : after 100 steps  "
+      f"peak={float(final['probe']['peak']):7.3f} "
+      f"mean={float(final['probe']['mean']):6.3f} (heat diffused)")
+
+# ---------------------------------------------------------------------------
+# 3. Wavefront execution (paper §III: independent cells, no global barrier)
+# ---------------------------------------------------------------------------
+wf = WavefrontRunner(prog, window=4)
+wfinal = wf.run(states0, n_steps=100)
+same = jnp.allclose(wfinal["rod"]["t"], final["rod"]["t"])
+print(f"wavefront  : identical result={bool(same)}, "
+      f"max unit lead={wf.max_lead()} steps "
+      "(>0 proves barrier-free overlap)")
+
+# ---------------------------------------------------------------------------
+# 4. Dependability (paper §IV): DMR + injected soft error
+# ---------------------------------------------------------------------------
+dmr = prog.with_policies({"rod": RedundancyPolicy(level=2)})
+runner = HostRunner(dmr)
+fault = FaultSpec.at(step=50, cell_id=dmr.cell_id("rod"),
+                     replica=0, leaf=0, index=N // 2, bit=30)
+dstates = dmr.init_states(jax.random.PRNGKey(0))
+dfinal = runner.run(dstates, 100, faults=[fault])
+repaired = jnp.allclose(dfinal["rod"]["t"][0], final["rod"]["t"])
+print(f"DMR        : bit flip at step 50 -> detected events="
+      f"{runner.ledger.totals['rod']['events']:.0f}, "
+      f"tie-break recoveries={len(runner.recoveries)}, "
+      f"final state repaired={bool(repaired)}")
+
+# TMR corrects in-graph (majority vote), no host round-trip:
+tmr = prog.with_policies({"rod": RedundancyPolicy(level=3)})
+tstates = tmr.init_states(jax.random.PRNGKey(0))
+tfinal, treports, _ = run_scan(tmr, tstates, 100, fault=fault)
+ok = jnp.allclose(tfinal["rod"]["t"][0], final["rod"]["t"])
+print(f"TMR        : corrected in-graph={bool(ok)} "
+      f"(votes fixed {float(treports['rod']['events']):.0f} strike)")
+print("\nThe same program scales to the 512-chip mesh unchanged — see "
+      "src/repro/launch/dryrun.py")

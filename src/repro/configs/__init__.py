@@ -1,0 +1,48 @@
+"""Assigned architecture configs (--arch <id>).
+
+Each module defines ``CONFIG`` (the exact published configuration) and
+``reduced()`` (a tiny same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "deepseek_v3_671b",
+    "granite_moe_1b_a400m",
+    "h2o_danube_3_4b",
+    "internlm2_1_8b",
+    "granite_20b",
+    "command_r_plus_104b",
+    "mamba2_2_7b",
+    "musicgen_large",
+    "zamba2_2_7b",
+    "qwen2_vl_7b",
+]
+
+# canonical --arch ids as assigned (dots and dashes preserved)
+CANONICAL = [
+    "deepseek-v3-671b",
+    "granite-moe-1b-a400m",
+    "h2o-danube-3-4b",
+    "internlm2-1.8b",
+    "granite-20b",
+    "command-r-plus-104b",
+    "mamba2-2.7b",
+    "musicgen-large",
+    "zamba2-2.7b",
+    "qwen2-vl-7b",
+]
+
+def _key(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_key(name)}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str):
+    mod = importlib.import_module(f"repro.configs.{_key(name)}")
+    return mod.reduced()

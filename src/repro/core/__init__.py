@@ -1,0 +1,30 @@
+"""MISO core: the paper's intermediate language as a JAX-native calculus.
+
+Cells (state + transition, paper §II), dependency-derived scheduling
+(§III), and runtime-managed replication for dependability (§IV).
+"""
+from .cell import (  # noqa: F401
+    CellType,
+    MisoSemanticsError,
+    RedundancyPolicy,
+    NO_REDUNDANCY,
+    state_spec,
+)
+from .fault import FaultSpec, random_fault_campaign  # noqa: F401
+from .graph import DependencyGraph  # noqa: F401
+from .program import MisoProgram  # noqa: F401
+from .redundancy import (  # noqa: F401
+    FaultLedger,
+    bit_mismatch_elems,
+    canonical_state,
+    fingerprint,
+    majority_vote,
+    replicate_state,
+)
+from .schedule import (  # noqa: F401
+    HostRunner,
+    WavefrontRunner,
+    compile_step,
+    run_scan,
+)
+from . import ir  # noqa: F401

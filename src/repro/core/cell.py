@@ -1,0 +1,155 @@
+"""MISO cells: state + transition function (paper §II).
+
+A *cell* is the unit of the MISO intermediate language: a named, typed state
+and a transition function from the previous program state to the cell's next
+state.  The semantic contract from the paper:
+
+    "there can be only writes to the current state, or local variables.
+     Reads can be performed from the previous state of either the current
+     cell or any other cell."
+
+In JAX this contract is enforced *by construction*: a transition is a pure
+function ``(prev_states: dict[str, pytree]) -> new_own_state`` — it cannot
+mutate anything, and it only receives the states it declared in ``reads``
+(plus its own).  MISO = Multiple-Input (the read states) Single-Output (the
+cell's own next state); the single-output invariant is checked structurally
+with ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Transition = Callable[[Mapping[str, Pytree]], Pytree]
+
+
+class MisoSemanticsError(Exception):
+    """A cell violates the MISO §II contract (reads/shape/single-output)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RedundancyPolicy:
+    """Paper §IV: runtime-selected replication level for a cell.
+
+    level      -- 1 = none, 2 = DMR (detect + host tie-break), 3 = TMR
+                  (detect + in-graph majority-vote correction).
+    placement  -- "temporal": replicas computed on the same devices (the
+                  replica axis is *not* mesh-sharded; cost = level x compute);
+                  "spatial": the replica axis is sharded over a mesh axis
+                  (by convention "pod") so each replica runs on distinct
+                  hardware — the 2016 paper's "different processors and
+                  memories", mapped to TPU pods.
+    compare    -- "bitwise": full-state bitwise comparison (paper-faithful);
+                  "hash": 128-bit fingerprint comparison (beyond-paper
+                  optimization; collective bytes drop from O(state) to O(1)).
+    compare_every -- compare replicas every k-th transition (beyond-paper
+                  amortization; k=1 is paper-faithful).
+    """
+
+    level: int = 1
+    placement: str = "temporal"
+    compare: str = "bitwise"
+    compare_every: int = 1
+
+    def __post_init__(self):
+        if self.level not in (1, 2, 3):
+            raise ValueError(f"redundancy level must be 1|2|3, got {self.level}")
+        if self.placement not in ("temporal", "spatial"):
+            raise ValueError(f"bad placement {self.placement!r}")
+        if self.compare not in ("bitwise", "hash"):
+            raise ValueError(f"bad compare mode {self.compare!r}")
+        if self.compare_every < 1:
+            raise ValueError("compare_every must be >= 1")
+
+
+NO_REDUNDANCY = RedundancyPolicy(level=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellType:
+    """One MISO cell type (paper §II).
+
+    name       -- unique cell name within a program.
+    init       -- ``(jax.random.PRNGKey) -> state pytree``.  The leading axis
+                  of leaves is by convention the *instance* axis when the cell
+                  is data-parallel (SIMD, many instances of the same cell).
+    transition -- ``(prev: dict[name, state]) -> new own state``.  ``prev``
+                  contains exactly ``{self.name} | set(reads)`` — the runtime
+                  never passes states that were not declared, which makes the
+                  read restriction structural.
+    reads      -- names of other cells whose *previous* state the transition
+                  may read.  Self-reads are always allowed and need not be
+                  declared.
+    instances  -- informational SIMD width (the actual vectorization is the
+                  leading axis of the state leaves).
+    redundancy -- RedundancyPolicy (paper §IV).
+    critical   -- marks the cell for selective replication sweeps.
+    """
+
+    name: str
+    init: Callable[..., Pytree]
+    transition: Transition
+    reads: tuple[str, ...] = ()
+    instances: int = 1
+    redundancy: RedundancyPolicy = NO_REDUNDANCY
+    critical: bool = False
+
+    def __post_init__(self):
+        if not self.name.isidentifier():
+            raise ValueError(f"cell name {self.name!r} must be an identifier")
+        if self.name in self.reads:
+            # self-reads are implicit; keep `reads` for *other* cells only.
+            object.__setattr__(
+                self, "reads", tuple(r for r in self.reads if r != self.name)
+            )
+
+    def with_redundancy(self, policy: RedundancyPolicy) -> "CellType":
+        """Selective replication: same cell, different runtime policy (§IV)."""
+        return dataclasses.replace(self, redundancy=policy)
+
+
+def state_spec(state: Pytree) -> Pytree:
+    """ShapeDtypeStruct skeleton of a state pytree."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), state
+    )
+
+
+def check_single_output(
+    cell: CellType, prev_specs: Mapping[str, Pytree]
+) -> None:
+    """MISO single-output invariant: the transition must produce a state with
+    exactly the structure/shapes/dtypes of the cell's own state (so the
+    double-buffered update is well-formed for every step)."""
+    own = prev_specs[cell.name]
+    allowed = {cell.name, *cell.reads}
+    restricted = {k: v for k, v in prev_specs.items() if k in allowed}
+    try:
+        out = jax.eval_shape(cell.transition, restricted)
+    except KeyError as e:  # read of an undeclared cell
+        raise MisoSemanticsError(
+            f"cell {cell.name!r}: transition reads undeclared cell {e}"
+        ) from None
+    own_flat, own_def = jax.tree.flatten(own)
+    out_flat, out_def = jax.tree.flatten(out)
+    if own_def != out_def:
+        raise MisoSemanticsError(
+            f"cell {cell.name!r}: transition output structure {out_def} "
+            f"!= state structure {own_def}"
+        )
+    for i, (a, b) in enumerate(zip(own_flat, out_flat)):
+        if a.shape != b.shape or a.dtype != b.dtype:
+            raise MisoSemanticsError(
+                f"cell {cell.name!r}: state leaf {i} drifts across the "
+                f"transition: {a.shape}/{a.dtype} -> {b.shape}/{b.dtype}"
+            )
+
+
+def restrict_reads(cell: CellType, states: Mapping[str, Pytree]) -> dict:
+    """The view of the program state a transition is allowed to see."""
+    allowed = {cell.name, *cell.reads}
+    return {k: states[k] for k in allowed if k in states}

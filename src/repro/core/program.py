@@ -1,0 +1,102 @@
+"""MisoProgram: a set of cells + the program-level operations of the paper.
+
+The program object is the *intermediate representation* proper: front-ends
+(the textual MISO DSL in ``core/ir.py``, or the Python API used by the LM
+stack) construct a MisoProgram; back-ends (``core/schedule.py``, the
+launcher) compile it for a device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .cell import (
+    CellType,
+    MisoSemanticsError,
+    RedundancyPolicy,
+    check_single_output,
+    state_spec,
+)
+from .graph import DependencyGraph
+from .redundancy import replicate_state
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class MisoProgram:
+    cells: dict[str, CellType] = dataclasses.field(default_factory=dict)
+
+    # -- construction ------------------------------------------------------
+    def add(self, cell: CellType) -> "MisoProgram":
+        if cell.name in self.cells:
+            raise ValueError(f"duplicate cell {cell.name!r}")
+        self.cells[cell.name] = cell
+        return self
+
+    def with_policies(
+        self, policies: Mapping[str, RedundancyPolicy]
+    ) -> "MisoProgram":
+        """Selective replication (§IV): the *same* program under different
+        runtime redundancy decisions."""
+        out = MisoProgram()
+        for name, cell in self.cells.items():
+            out.add(cell.with_redundancy(policies.get(name, cell.redundancy)))
+        return out
+
+    # -- queries -----------------------------------------------------------
+    def cell_id(self, name: str) -> int:
+        return list(self.cells).index(name)
+
+    def levels(self) -> dict[str, int]:
+        return {n: c.redundancy.level for n, c in self.cells.items()}
+
+    def graph(self) -> DependencyGraph:
+        return DependencyGraph.from_cells(self.cells)
+
+    # -- state management ---------------------------------------------------
+    def init_states(self, key: jax.Array) -> dict[str, Pytree]:
+        """Initialize all cell states; replicated cells get their replica
+        axis here ('the memory contents may be duplicated')."""
+        keys = jax.random.split(key, max(len(self.cells), 1))
+        states = {}
+        for k, (name, cell) in zip(keys, self.cells.items()):
+            base = cell.init(k)
+            states[name] = replicate_state(base, cell.redundancy.level)
+        return states
+
+    def unreplicated_specs(self, states: Mapping[str, Pytree]) -> dict:
+        specs = {}
+        for name, cell in self.cells.items():
+            s = state_spec(states[name])
+            if cell.redundancy.level > 1:
+                s = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), s
+                )
+            specs[name] = s
+        return specs
+
+    # -- validation ----------------------------------------------------------
+    def validate(self, key: Optional[jax.Array] = None) -> None:
+        """Check the MISO §II contract for every cell:
+        * declared reads exist (graph construction checks this),
+        * transitions touch only declared states (KeyError -> semantics error),
+        * single-output invariant: state structure is transition-invariant.
+        """
+        self.graph()  # validates read targets
+        key = key if key is not None else jax.random.PRNGKey(0)
+        states = jax.eval_shape(lambda k: self.init_states(k), key)
+        # strip replica axes for the per-transition view
+        specs = {}
+        for name, cell in self.cells.items():
+            s = states[name]
+            if cell.redundancy.level > 1:
+                s = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), s
+                )
+            specs[name] = s
+        for cell in self.cells.values():
+            check_single_output(cell, specs)

@@ -1,0 +1,1 @@
+from .sharding import ShardCtx, param_pspecs, cache_pspecs  # noqa: F401

@@ -1,0 +1,82 @@
+"""Compressed gradient collectives (beyond-paper distributed optimization).
+
+``compressed_psum_int8`` replaces a bf16 ring all-reduce (~4 bytes/element on
+the wire) with the two-hop quantized pattern used by THC/CocktailSGD-style
+systems (~2 bytes/element, 2x wire reduction; 4x vs fp32):
+
+  1. chunk the flat gradient into |axis| chunks, quantize int8 blockwise,
+  2. ``all_to_all``: device i receives everyone's chunk i       (1 B/elem)
+  3. dequantize + sum in fp32, requantize,
+  4. ``all_gather`` of the reduced chunks                        (1 B/elem)
+
+Quantization error is fed back via an error-feedback buffer (the standard
+EF-SGD trick), so the *accumulated* gradient is unbiased over steps.
+
+Used inside a partial-manual ``shard_map`` over the data axes (the model/tp
+axis stays auto).  MoE archs keep uncompressed reductions (their expert
+shard_map owns the mesh); the launcher only enables this for dense archs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+_QBLOCK = 512
+
+
+def _quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (n,) fp32 -> (int8 (n,), scales (n/_QBLOCK,))."""
+    blocks = x.reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.reshape(-1, _QBLOCK).astype(jnp.float32)
+            * scale[:, None]).reshape(-1)
+
+
+def compressed_psum_int8(
+    flat: jax.Array,       # (n,) fp32 local gradient (flattened)
+    ef: jax.Array,         # (n,) fp32 error-feedback buffer
+    axis: str | tuple[str, ...],
+) -> tuple[jax.Array, jax.Array]:
+    """Mean over `axis` with int8 wire format.  Returns (mean, new_ef)."""
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_dev = 1
+    for a in axes:
+        n_dev *= jax.lax.axis_size(a)
+    n = flat.shape[0]
+    assert n % (n_dev * _QBLOCK) == 0, (n, n_dev)
+    x = flat + ef
+
+    chunks = x.reshape(n_dev, n // n_dev)
+    q, scale = jax.vmap(_quant)(chunks)             # (n_dev, c), (n_dev, s)
+    sent = jax.vmap(_dequant)(q, scale)             # what the wire carries
+    local_err = x - sent.reshape(-1)                # EF: error of *my* send
+
+    # hop 1: everyone receives its own chunk index from all peers
+    ax = axes[0] if len(axes) == 1 else axes
+    q_r = jax.lax.all_to_all(q, ax, split_axis=0, concat_axis=0, tiled=False)
+    s_r = jax.lax.all_to_all(scale, ax, split_axis=0, concat_axis=0,
+                             tiled=False)
+    q_r = q_r.reshape(n_dev, n // n_dev)
+    s_r = s_r.reshape(n_dev, -1)
+    summed = jnp.sum(jax.vmap(_dequant)(q_r, s_r), axis=0) / n_dev
+
+    # hop 2: share the reduced chunk with everyone
+    q2, s2 = _quant(summed)
+    q_all = jax.lax.all_gather(q2, ax, tiled=True)
+    s_all = jax.lax.all_gather(s2, ax, tiled=True)
+    mean = _dequant(q_all, s_all)
+    return mean, local_err
+
+
+def psum_mean(flat: jax.Array, axis) -> jax.Array:
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    return jax.lax.pmean(flat, axes if len(axes) > 1 else axes[0])

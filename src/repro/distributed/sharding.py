@@ -1,0 +1,361 @@
+"""Sharding rules: logical axes -> mesh PartitionSpecs, per architecture.
+
+Logical axes used by the model code:
+  dp   -- batch-parallel axes (("data",) single-pod; ("pod","data") when the
+          pod axis carries data parallelism; just ("data",) when the pod axis
+          carries MISO replicas)
+  tp   -- tensor-parallel axis ("model"): attention heads, FFN hidden,
+          vocabulary, experts
+  fsdp -- optional parameter/optimizer sharding over the data axes (ZeRO-3
+          style, needed to fit the 671B config)
+
+Rules are name-based over the parameter tree; any dimension whose size does
+not divide the assigned mesh axes falls back to replication (e.g. KV heads
+when n_kv < |model|).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Everything the model needs to know about the mesh, or None of it."""
+
+    mesh: Optional[Mesh] = None
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+    fsdp_axes: tuple = ()            # () = ZeRO-1 only; ("data",) = FSDP
+    embed_strategy: str = "gather"   # gather | onehot (vocab-sharded)
+    block_k: int = 1024              # blockwise-attention KV block
+    seq_shard_acts: bool = False     # Megatron-SP style activation constraint
+    remat: str = "full"              # none | full | dots
+    pallas: Optional[bool] = None    # kernel path override
+    unroll: bool = False             # unroll layer scans (dry-run: makes XLA
+                                     # cost analysis count every layer)
+    tp_off: bool = False             # fold the model axis into data
+                                     # parallelism (small dense archs where
+                                     # TP-16 is collective-bound)
+    decode_shardmap: bool = False    # flash-decoding shard_map for decode
+                                     # attention (beyond-paper; §Perf)
+    serve_ep2d: bool = False         # serve-mode weight layout: experts
+                                     # sharded E over (model x data) = 1
+                                     # expert/chip, dense/embed TP-only (no
+                                     # fsdp) — kills per-step weight
+                                     # collectives at decode (§Perf)
+    manual_axes: tuple = ()          # mesh axes already manual (inside an
+                                     # enclosing shard_map): constraints
+                                     # must not mention them
+
+    # -- logical -> physical ------------------------------------------------
+    def _axes(self, logical) -> Any:
+        if logical == "dp":
+            axes = self.data_axes
+            if self.tp_off:
+                axes = axes + (self.model_axis,)
+            return axes if len(axes) > 1 else axes[0]
+        if logical == "tp":
+            return None if self.tp_off else self.model_axis
+        if logical == "fsdp":
+            if not self.fsdp_axes:
+                return None
+            return self.fsdp_axes if len(self.fsdp_axes) > 1 else \
+                self.fsdp_axes[0]
+        return logical
+
+    def pspec(self, *logical) -> P:
+        return P(*(self._axes(a) for a in logical))
+
+    def constrain(self, x: jax.Array, *logical) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = self.pspec(*logical)
+        if self.manual_axes:
+            # inside an enclosing shard_map those axes are already manual;
+            # a constraint may only mention the remaining (auto) axes
+            drop = set(self.manual_axes)
+
+            def keep(entry):
+                if entry is None:
+                    return None
+                if isinstance(entry, tuple):
+                    left = tuple(a for a in entry if a not in drop)
+                    return left if len(left) > 1 else \
+                        (left[0] if left else None)
+                return None if entry in drop else entry
+
+            spec = P(*(keep(e) for e in spec))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        ax = self._axes(logical)
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[ax]
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+
+LOCAL = ShardCtx()
+
+
+# --------------------------------------------------------------------------
+# parameter rules (matched on the last path component)
+# --------------------------------------------------------------------------
+def _rule(name: str) -> tuple:
+    """Logical spec for the *trailing* dims of the named parameter."""
+    table = {
+        # embeddings / heads
+        "embed": ("tp", None),           # (V, d) vocab-sharded
+        "lm_head": (None, "tp"),         # (d, V)
+        "mtp_proj": ("fsdp", None),
+        # attention
+        "wq": ("fsdp", "tp"),
+        "wk": ("fsdp", "tp@kv"),         # shard only if kv heads divide
+        "wv": ("fsdp", "tp@kv"),
+        "wo": ("tp", "fsdp"),
+        "bq": ("tp",), "bk": ("tp@kv",), "bv": ("tp@kv",),
+        # MLA
+        "wq_a": ("fsdp", None),
+        "wq_b": (None, "tp"),
+        "wkv_a": ("fsdp", None),
+        "wkv_b": (None, "tp"),
+        # MLP
+        "w1": ("fsdp", "tp"),
+        "w3": ("fsdp", "tp"),
+        "w2": ("tp", "fsdp"),
+        # MoE (experts over tp on dim 0; rules applied to trailing 3 dims)
+        "router": (None, None),
+        # mamba
+        "w_z": ("fsdp", "tp"),
+        "w_x": ("fsdp", "tp"),
+        "w_bc": ("fsdp", None),
+        "w_dt": ("fsdp", None),
+        "conv_x": (None, "tp"),
+        "conv_x_b": ("tp",),
+        "conv_bc": (None, None),
+        "conv_bc_b": (None,),
+        "out_proj": ("tp", "fsdp"),
+        "in_proj": ("fsdp", None),       # zamba concat-proj (2d, d)
+        "d_skip": (None,), "a_log": (None,), "dt_bias": (None,),
+    }
+    return table.get(name, ())
+
+
+_MOE_EXPERT_RULES = {
+    "w1": ("tp", "fsdp", None),
+    "w3": ("tp", "fsdp", None),
+    "w2": ("tp", None, "fsdp"),
+}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_pspecs(ctx: ShardCtx, params: Pytree, cfg=None) -> Pytree:
+    """PartitionSpec tree for a parameter tree (stack dims -> None)."""
+    mesh = ctx.mesh
+    kv_divides = True
+    if cfg is not None and mesh is not None:
+        kv_divides = (
+            cfg.n_kv_heads > 0
+            and cfg.n_kv_heads % ctx.axis_size("tp") == 0
+        )
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        in_moe = any(n in ("experts", "moe") for n in names)
+        if ctx.serve_ep2d and in_moe and name in _MOE_EXPERT_RULES:
+            # serve layout: one expert (slice) per chip, weights stationary
+            ep_axes = tuple(ctx.data_axes) + (ctx.model_axis,)
+            n_ep = 1
+            for a in ep_axes:
+                n_ep *= mesh.shape[a]
+            if leaf.shape[-3] % n_ep == 0:
+                return P(*(None,) * (jnp.ndim(leaf) - 3), ep_axes, None,
+                         None)
+        rule = (_MOE_EXPERT_RULES.get(name) if in_moe and name in
+                _MOE_EXPERT_RULES else _rule(name))
+        if not rule:
+            return P()
+        if ctx.serve_ep2d:
+            # dense/embed weights: TP only (replicated over data) — serving
+            # reads weights every step; fsdp would re-gather them per layer
+            rule = tuple(None if r == "fsdp" else r for r in rule)
+        # resolve conditional kv rule
+        rule = tuple(
+            ("tp" if kv_divides else None) if r == "tp@kv" else r
+            for r in rule
+        )
+        ndim = jnp.ndim(leaf)
+        pad = ndim - len(rule)
+        if pad < 0:
+            return P()
+        logical = (None,) * pad + rule
+        # drop axes that don't divide
+        phys = []
+        for dim, log in zip(leaf.shape, logical):
+            ax = ctx._axes(log) if log else None
+            size = 1
+            if ax is not None:
+                sizes = [mesh.shape[a] for a in
+                         (ax if isinstance(ax, tuple) else (ax,))]
+                for s in sizes:
+                    size *= s
+            if ax is not None and dim % size == 0 and size > 1:
+                phys.append(ax)
+            else:
+                phys.append(None)
+        return P(*phys)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def cache_pspecs(ctx: ShardCtx, cache: Pytree, cfg=None) -> Pytree:
+    """Decode-cache sharding: batch over dp; heads/latent over tp when they
+    divide; slot_pos tables over dp only."""
+    mesh = ctx.mesh
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = jnp.ndim(leaf)
+        if name in ("k", "v"):           # (..., B, H, S, D)
+            kv_ok = (cfg is not None and cfg.n_kv_heads
+                     % max(ctx.axis_size("tp"), 1) == 0)
+            # kv heads shard when they divide; otherwise sequence-shard the
+            # cache (flash-decoding style partial softmax under GSPMD)
+            rule = (("dp", "tp", None, None) if kv_ok
+                    else ("dp", None, "tp", None))
+        elif name == "ckv" or name == "krope":   # (..., B, S, r)
+            rule = ("dp", "tp", None)            # sequence-sharded latent
+        elif name == "slot_pos":
+            rule = ("dp", None)
+        elif name == "ssm":              # (..., B, H, N, P)
+            rule = ("dp", "tp", None, None)
+        elif name in ("conv_x",):        # (..., B, k-1, C)
+            rule = ("dp", None, "tp")
+        elif name in ("conv_bc",):
+            rule = ("dp", None, None)
+        elif name == "pos":
+            rule = ("dp",)
+        else:
+            return P()
+        pad = nd - len(rule)
+        if pad < 0:
+            return P()
+        logical = (None,) * pad + tuple(rule)
+        phys = []
+        for dim, log in zip(leaf.shape, logical):
+            ax = ctx._axes(log) if log else None
+            size = 1
+            if ax is not None:
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    size *= mesh.shape[a]
+            if ax is not None and size > 1 and dim % size == 0:
+                phys.append(ax)
+            else:
+                phys.append(None)
+        return P(*phys)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def zero_pspecs(ctx: ShardCtx, param_specs: Pytree, opt_state: Pytree,
+                params: Pytree) -> Pytree:
+    """ZeRO-1 sharding for optimizer state: each moment/master leaf takes its
+    parameter's spec plus the data axes on the first still-unsharded,
+    divisible dimension.  Quantized moments ({"q","scale"}) keep the param
+    shape so the same spec applies; scale drops the last dim."""
+    mesh = ctx.mesh
+    dp = ctx.data_axes
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    dp_axes = dp if len(dp) > 1 else dp[0]
+
+    pleaves, ptree = jax.tree.flatten(params)
+    sleaves = ptree.flatten_up_to(param_specs)
+    spec_by_id = {}
+    for i, (pl, sp) in enumerate(zip(pleaves, sleaves)):
+        spec_by_id[i] = (pl.shape, sp)
+
+    def zspec(shape, base: P) -> P:
+        base_t = tuple(base) + (None,) * (len(shape) - len(tuple(base)))
+        used = set()
+        for s in base_t:
+            for a in (s if isinstance(s, tuple) else (s,)):
+                if a is not None:
+                    used.add(a)
+        dp_free = [a for a in (dp if isinstance(dp, tuple) else (dp,))
+                   if a not in used]
+        if not dp_free:
+            return P(*base_t)   # already fully sharded over the data axes
+        free_size = 1
+        for a in dp_free:
+            free_size *= mesh.shape[a]
+        out = list(base_t)
+        for i, (dim, s) in enumerate(zip(shape, base_t)):
+            if s is None and dim % free_size == 0 and free_size > 1:
+                out[i] = tuple(dp_free) if len(dp_free) > 1 else dp_free[0]
+                break
+        return P(*out)
+
+    def build(tree_m):
+        """tree_m mirrors params except quantized leaves become dicts."""
+        flat = ptree.flatten_up_to(tree_m)
+        out = []
+        for i, leaf in enumerate(flat):
+            shape, base = spec_by_id[i]
+            if isinstance(leaf, dict) and "q" in leaf:
+                qspec = zspec(shape, base)
+                sspec = P(*tuple(qspec)[:-1], *(
+                    () if len(tuple(qspec)) < len(shape) else (None,)
+                ))
+                # scale has shape param.shape[:-1] + (nblocks,)
+                sspec = P(*(tuple(qspec)[:-1] + (None,)))
+                out.append({"q": qspec, "scale": sspec})
+            else:
+                out.append(zspec(leaf.shape, base))
+        return ptree.unflatten(out)
+
+    specs = {"step": P()}
+    specs["m"] = build(opt_state["m"])
+    specs["v"] = build(opt_state["v"])
+    if "master" in opt_state:
+        specs["master"] = build(opt_state["master"])
+    return specs
+
+
+def named(ctx: ShardCtx, pspecs: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,95 @@
+"""Fault tolerance beyond the MISO cell replication: fail-stop recovery
+(elastic restart) and straggler mitigation policy.
+
+What the MISO machinery (core/redundancy.py) covers is *silent* corruption.
+This module covers the rest of the 1000-node story:
+
+  * fail-stop (a pod/host dies): the HostRunner checkpoints the immutable
+    previous buffer every k steps; ``elastic_restore`` re-places the state
+    under a *new* mesh (e.g. data axis 16 -> 12) and training resumes.  The
+    data cell's PRNG-keyed stream makes the replay deterministic.
+  * stragglers: under spatial DMR the two pods compute identical
+    transitions; ``StragglerPolicy("first_wins")`` lets the runtime adopt
+    the faster replica's state when the gap exceeds ``slack`` and skip the
+    compare for that step (the compare deficit is repaid on the next
+    compare step).  On CPU CI we *simulate* replica latencies; on real
+    hardware the same policy consumes per-pod completion timestamps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.distributed.sharding import ShardCtx
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# fail-stop: elastic restore
+# --------------------------------------------------------------------------
+def elastic_restore(
+    directory: str,
+    like: Pytree,
+    new_ctx: ShardCtx,
+    pspec_fn: Optional[Callable[[ShardCtx, Pytree], Pytree]] = None,
+    step: Optional[int] = None,
+):
+    """Restore a checkpoint onto a (possibly different) mesh.
+
+    ``pspec_fn(ctx, like) -> PartitionSpec tree`` supplies the shardings for
+    the new mesh; None places everything unsharded (single host)."""
+    shardings = None
+    if new_ctx.mesh is not None and pspec_fn is not None:
+        from repro.distributed.sharding import named
+
+        shardings = named(new_ctx, pspec_fn(new_ctx, like))
+    return ckpt.restore(directory, like, step=step, shardings=shardings)
+
+
+@dataclasses.dataclass
+class FailureLog:
+    events: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, kind: str, detail: str = ""):
+        self.events.append({"step": step, "kind": kind, "detail": detail,
+                            "t": time.time()})
+
+
+# --------------------------------------------------------------------------
+# stragglers
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    mode: str = "wait"        # wait | first_wins
+    slack: float = 1.5        # adopt fast replica if slow/fast > slack
+
+
+@dataclasses.dataclass
+class StragglerStats:
+    adopted_fast: int = 0
+    waited: int = 0
+    compare_deficit: int = 0  # compares skipped, to be repaid
+
+
+def simulate_spatial_step(
+    policy: StragglerPolicy,
+    stats: StragglerStats,
+    replica_times: tuple[float, float],
+) -> str:
+    """Decide what the runtime does for one spatially-replicated step given
+    per-replica completion times.  Returns 'wait' or 'adopt:<i>'."""
+    t0, t1 = replica_times
+    slow, fast = max(t0, t1), min(t0, t1)
+    fast_idx = int(t1 < t0)
+    if policy.mode == "first_wins" and slow / max(fast, 1e-9) > policy.slack:
+        stats.adopted_fast += 1
+        stats.compare_deficit += 1
+        return f"adopt:{fast_idx}"
+    stats.waited += 1
+    return "wait"

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+flash_attention -- blocked online-softmax attention (GQA/causal/SWA)
+ssd_scan        -- Mamba2 state-space-duality chunked scan
+tmr_vote        -- fused bitwise majority vote + mismatch counts (paper §IV)
+state_hash      -- fused 4-accumulator state fingerprint (hash-compare)
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
+wrappers with automatic Pallas/XLA path selection.
+"""
+from . import ops, ref  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .ssd_scan import ssd_scan  # noqa: F401
+from .state_hash import state_hash  # noqa: F401
+from .tmr_vote import tmr_vote  # noqa: F401

@@ -1,0 +1,163 @@
+"""jit'd public wrappers around the Pallas kernels, with an XLA fallback.
+
+Path selection: the Pallas kernels are the TPU-target implementation; on the
+CPU containers used for CI/dry-runs they run in ``interpret=True`` mode for
+correctness tests only, and the models default to the pure-JAX (XLA) path,
+which is what the dry-run rooflines measure.  ``use_pallas()`` picks
+automatically; every wrapper takes an explicit override.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+from .state_hash import state_hash
+from .tmr_vote import tmr_vote
+
+Pytree = Any
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas(override: bool | None = None) -> bool:
+    return on_tpu() if override is None else override
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def attention(
+    q, k, v, *, causal=True, window=None, scale=None, q_offset=0,
+    pallas: bool | None = None, interpret: bool = False,
+    block_q: int = 128, block_k: int = 128,
+):
+    if use_pallas(pallas):
+        return flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, block_q=block_q, block_k=block_k,
+            interpret=interpret,
+        )
+    return ref.attention_ref(
+        q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset
+    )
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD
+# --------------------------------------------------------------------------
+def ssd(
+    x, dt, a, b, c, *, h0=None, chunk=128,
+    pallas: bool | None = None, interpret: bool = False,
+):
+    if use_pallas(pallas):
+        return ssd_scan(x, dt, a, b, c, h0=h0, chunk=chunk,
+                        interpret=interpret)
+    return ref.ssd_ref(x, dt, a, b, c, h0=h0)
+
+
+# --------------------------------------------------------------------------
+# pytree <-> uint32 word stream (for vote/hash over arbitrary states)
+# --------------------------------------------------------------------------
+def flatten_to_u32(tree: Pytree, *, multiple: int = 1) -> jax.Array:
+    """Concatenate a pytree into one uint32 word vector (zero-padded to a
+    multiple).  Sub-32-bit dtypes are packed pairwise/quadwise."""
+    words = []
+    for leaf in jax.tree.leaves(tree):
+        x = leaf
+        if x.dtype == jnp.bool_:
+            x = x.astype(jnp.uint8)
+        nbits = x.dtype.itemsize * 8
+        u = jax.lax.bitcast_convert_type(
+            x, jnp.dtype(f"uint{nbits}")
+        ).reshape(-1)
+        if nbits < 32:
+            per = 32 // nbits
+            pad = (-u.shape[0]) % per
+            if pad:
+                u = jnp.pad(u, (0, pad))
+            u = jax.lax.bitcast_convert_type(
+                u.reshape(-1, per), jnp.uint32
+            ).reshape(-1)
+        elif nbits == 64:
+            u = jax.lax.bitcast_convert_type(
+                u.reshape(-1, 1), jnp.uint32
+            ).reshape(-1)
+        words.append(u)
+    flat = (jnp.concatenate(words) if words
+            else jnp.zeros((0,), jnp.uint32))
+    pad = (-flat.shape[0]) % multiple
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat
+
+
+def tmr_vote_pytree(
+    replicated: Pytree, *, pallas: bool | None = None, interpret: bool = False
+):
+    """Vote a 3-replicated state pytree (leading axis 3).  Returns
+    (voted pytree, counts[3]).  Fused single-pass on the Pallas path."""
+    reps = [jax.tree.map(lambda x, i=i: x[i], replicated) for i in range(3)]
+    if use_pallas(pallas):
+        block = 64 * 1024
+        flats = [flatten_to_u32(r, multiple=block) for r in reps]
+        voted_flat, counts = tmr_vote(*flats, block=block,
+                                      interpret=interpret)
+        voted = _unflatten_like(voted_flat, reps[0])
+        return voted, counts
+    from repro.core.redundancy import bit_mismatch_elems, majority_vote
+
+    voted = majority_vote(*reps)
+    counts = jnp.stack(
+        [bit_mismatch_elems(r, voted).astype(jnp.int32) for r in reps]
+    )
+    return voted, counts
+
+
+def _unflatten_like(flat_u32: jax.Array, like: Pytree) -> Pytree:
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        nbits = (8 if leaf.dtype == jnp.bool_ else leaf.dtype.itemsize * 8)
+        n_elems = leaf.size
+        n_words = -(-n_elems * nbits // 32)
+        w = flat_u32[off:off + n_words]
+        off += n_words
+        if nbits < 32:
+            per = 32 // nbits
+            u = jax.lax.bitcast_convert_type(
+                w, jnp.dtype(f"uint{nbits}")
+            ).reshape(-1)[:n_elems]
+        elif nbits == 64:
+            u = jax.lax.bitcast_convert_type(
+                w.reshape(-1, 2), jnp.uint64
+            ).reshape(-1)[:n_elems]
+        else:
+            u = w[:n_elems]
+        if leaf.dtype == jnp.bool_:
+            out.append(u.astype(jnp.bool_).reshape(leaf.shape))
+        else:
+            out.append(
+                jax.lax.bitcast_convert_type(
+                    u.reshape(leaf.shape), leaf.dtype
+                )
+            )
+    return jax.tree.unflatten(treedef, out)
+
+
+def fingerprint_fused(
+    state: Pytree, *, pallas: bool | None = None, interpret: bool = False
+) -> jax.Array:
+    """4 x uint32 fingerprint of a whole state pytree in one fused pass."""
+    block = 128 * 1024
+    flat = flatten_to_u32(state, multiple=block)
+    if use_pallas(pallas):
+        return state_hash(flat, block=block, interpret=interpret)
+    return ref.state_hash_ref(flat)

@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: small, obviously-right, O(L^2) where
+that is the simplest formulation.  Kernel tests sweep shapes/dtypes and
+assert allclose (or bit-equality for the integer kernels) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# flash attention oracle
+# --------------------------------------------------------------------------
+def attention_ref(
+    q: jax.Array,   # (B, Hq, Sq, D)
+    k: jax.Array,   # (B, Hkv, Sk, D)
+    v: jax.Array,   # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,   # sliding-window size (None = full)
+    scale: float | None = None,
+    q_offset: int = 0,           # absolute position of q[0] (decode/chunked)
+) -> jax.Array:
+    """Materialized-scores softmax attention with GQA head mapping."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, G, axis=1)
+    vf = jnp.repeat(vf, G, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (can happen with windows) -> zeros, not NaN
+    probs = jnp.where(jnp.any(mask, -1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD oracle (quadratic "attention-like" formulation)
+# --------------------------------------------------------------------------
+def ssd_ref(
+    x: jax.Array,    # (B, L, H, P)
+    dt: jax.Array,   # (B, L, H)          positive step sizes
+    a: jax.Array,    # (H,)               negative decay rates
+    b: jax.Array,    # (B, L, G, N)
+    c: jax.Array,    # (B, L, G, N)
+    *,
+    h0: jax.Array | None = None,  # (B, H, N, P) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """y_t = C_t . h_t with h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t^T.
+
+    Returns (y: (B,L,H,P), final_state: (B,H,N,P)).
+    O(L^2) masked formulation — the oracle for the chunked kernel.
+    """
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert H % G == 0
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = jnp.repeat(b.astype(jnp.float32), rep, axis=2)  # (B,L,H,N)
+    cf = jnp.repeat(c.astype(jnp.float32), rep, axis=2)
+
+    da = dtf * af[None, None, :]                    # (B,L,H)
+    cum = jnp.cumsum(da, axis=1)                    # (B,L,H)
+    # decay(i,j) = exp(cum_i - cum_j), i >= j
+    diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Li,Lj,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bihn,bjhn->bijh", cf, bf)      # (B,Li,Lj,H)
+    w = cb * decay * dtf[:, None, :, :]             # weight of j on i
+    y = jnp.einsum("bijh,bjhp->bihp", w, xf)        # (B,L,H,P)
+    if h0 is not None:
+        # contribution of the initial state: C_i exp(cum_i) h0
+        y = y + jnp.einsum(
+            "bihn,bih,bhnp->bihp", cf, jnp.exp(cum), h0.astype(jnp.float32)
+        )
+    # final state: h_L = sum_j exp(cum_L - cum_j) dt_j B_j x_j^T (+ decayed h0)
+    wlast = jnp.exp(cum[:, -1:, :] - cum) * dtf     # (B,L,H)
+    hT = jnp.einsum("bjh,bjhn,bjhp->bhnp", wlast, bf, xf)
+    if h0 is not None:
+        hT = hT + jnp.exp(cum[:, -1, :])[:, :, None, None] * h0.astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype), hT
+
+
+# --------------------------------------------------------------------------
+# TMR majority vote oracle
+# --------------------------------------------------------------------------
+def tmr_vote_ref(a: jax.Array, b: jax.Array, c: jax.Array):
+    """(voted, per-replica mismatch counts) over uint32 words."""
+    voted = (a & b) | (a & c) | (b & c)
+    counts = jnp.stack(
+        [jnp.sum((r != voted).astype(jnp.int32)) for r in (a, b, c)]
+    )
+    return voted, counts
+
+
+# --------------------------------------------------------------------------
+# state fingerprint oracle (must match kernels/state_hash.py bit-for-bit)
+# --------------------------------------------------------------------------
+_PHI = jnp.uint32(0x9E3779B9)
+_MIX = jnp.uint32(2654435761)
+
+
+def state_hash_ref(v: jax.Array) -> jax.Array:
+    """4 x uint32 fingerprint of a flat uint32 array (position-weighted)."""
+    v = v.astype(jnp.uint32).reshape(-1)
+    n = v.shape[0]
+    i = jax.lax.iota(jnp.uint32, n)
+    w = i * _MIX + _PHI
+    h1 = jnp.sum(v * w, dtype=jnp.uint32)
+    h2 = jnp.sum((v ^ w) * _MIX, dtype=jnp.uint32)
+    h3 = jax.lax.reduce(v ^ (w * _PHI), jnp.uint32(0),
+                        jax.lax.bitwise_xor, (0,))
+    h4 = jnp.sum((v + w) ^ (v >> 7), dtype=jnp.uint32)
+    return jnp.stack([h1, h2, h3, h4])

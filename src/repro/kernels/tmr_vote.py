@@ -1,0 +1,66 @@
+"""TMR bitwise majority vote + per-replica mismatch counts (paper §IV).
+
+The dependability hot path: after a triple-replicated transition the runtime
+must vote the three states word-by-word and count, per replica, how many
+words disagreed with the vote (the permanent-fault localization signal).
+This is pure memory bandwidth — a naive composition reads each replica
+twice (once to vote, once to compare).  The kernel fuses vote + three
+compares + count into a single pass: 3 reads + 1 write per word.
+
+Operates on uint32 words; ``ops.py`` flattens/bitcasts arbitrary state
+pytrees.  Counts are emitted per grid block and reduced by the wrapper
+(deterministic integer sums).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _vote_kernel(a_ref, b_ref, c_ref, voted_ref, counts_ref):
+    a, b, c = a_ref[...], b_ref[...], c_ref[...]
+    v = (a & b) | (a & c) | (b & c)
+    voted_ref[...] = v
+    counts_ref[0, 0] = jnp.sum((a != v).astype(jnp.int32))
+    counts_ref[0, 1] = jnp.sum((b != v).astype(jnp.int32))
+    counts_ref[0, 2] = jnp.sum((c != v).astype(jnp.int32))
+    counts_ref[0, 3] = jnp.int32(0)
+
+
+def tmr_vote(
+    a: jax.Array, b: jax.Array, c: jax.Array,
+    *, block: int = 64 * 1024, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(voted, counts[3]) over flat uint32 arrays of equal length.
+
+    block: words per grid step; 64Ki words = 256 KiB per operand, so the
+    working set (3 in + 1 out) is 1 MiB — comfortably inside VMEM while long
+    enough to amortize the HBM->VMEM pipeline.
+    """
+    assert a.ndim == 1 and a.shape == b.shape == c.shape
+    assert a.dtype == jnp.uint32
+    n = a.shape[0]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    g = n // block
+    a2, b2, c2 = (r.reshape(g, block) for r in (a, b, c))
+    voted, partial = pl.pallas_call(
+        _vote_kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))] * 3,
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, block), jnp.uint32),
+            jax.ShapeDtypeStruct((g, 4), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(a2, b2, c2)
+    return voted.reshape(n), jnp.sum(partial, axis=0)[:3]

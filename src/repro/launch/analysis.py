@@ -1,0 +1,326 @@
+"""Roofline accounting from compiled XLA artifacts (no hardware needed).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Sources:
+  * ``compiled.cost_analysis()`` -> HLO flops / bytes accessed of the
+    per-device SPMD program;
+  * ``compiled.as_text()``       -> post-partitioning HLO, parsed for
+    collective ops; wire bytes use the standard ring-model factors
+    (all-reduce ~2x operand, all-gather ~received bytes, reduce-scatter /
+    all-to-all / collective-permute ~operand bytes).
+
+Terms (seconds, per step, per chip — SPMD makes per-chip == critical path):
+  compute    = flops_per_chip / peak
+  memory     = hbm_bytes_per_chip / hbm_bw
+  collective = wire_bytes_per_chip / ici_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s
+    "ici_bw": 50e9,         # bytes/s/link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9_]+\[[0-9,]*\]\S*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\("
+)
+_DEF_RE = re.compile(r"%?([\w.\-]+)\s*=\s")
+_OPERANDS_RE = re.compile(
+    r"(?:all-gather|all-to-all|collective-permute)(?:-start)?\((.*?)\)"
+)
+
+
+def _converted_operand(line: str, defs: dict, hops: int = 3) -> bool:
+    """True when the collective's first operand traces back (through
+    copies/bitcasts/get-tuple-element) to a convert — the signature of a
+    CPU-promotion convert hoisted across the collective."""
+    om = _OPERANDS_RE.search(line)
+    if not om:
+        return False
+    name = om.group(1).split(",")[0].strip().lstrip("%")
+    for _ in range(hops):
+        if "convert" in name:
+            return True
+        d = defs.get(name)
+        if d is None:
+            return False
+        if not any(k in d for k in ("get-tuple-element", "copy(", "bitcast",
+                                    "fusion(")):
+            return False
+        inner = re.search(r"\(([^)]*)", d.split("=", 1)[1])
+        if not inner or not inner.group(1).strip():
+            return False
+        name = inner.group(1).split(",")[0].strip().lstrip("%")
+    return False
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum byte sizes of every typed shape in `text` (a type or tuple)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)            # replica_groups=[G,S]<=[N]
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)       # replica_groups={{0,1,..},..}
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str, top: int = 0) -> dict:
+    """Per-device wire bytes by collective kind.
+
+    Post-optimization HLO prints operand names without types, so sizes come
+    from the *result* type + the ring-model factors with group size S:
+      all-reduce        2 x bytes x (S-1)/S     (result == operand shape)
+      all-gather        bytes x (S-1)/S         (result is the gathered)
+      reduce-scatter    bytes x (S-1)           (result is the shard)
+      all-to-all        bytes x (S-1)/S
+      collective-permute bytes
+
+    top>0 additionally returns the `top` largest (op, result-shape) groups
+    with their total wire bytes and occurrence count — the profile the
+    §Perf iterations read.
+
+    CPU-backend correction: XLA's BFloat16Normalization pass promotes every
+    bf16 reduction collective to f32 on CPU (the reducer region is renamed
+    ``*_promoted``), doubling its apparent bytes.  TPU — the target this
+    roofline models — reduces in bf16 natively, so promoted collectives are
+    counted at their source width (/2).  Verified against an explicit
+    ``psum(bf16)`` microprogram; see EXPERIMENTS.md §Perf iteration 0.
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "ops": 0}
+    groups: dict = {}
+    lines = hlo_text.splitlines()
+    # def map for the convert-hoist correction on data-movement collectives
+    defs: dict = {}
+    for ln in lines:
+        dm = _DEF_RE.match(ln.strip())
+        if dm:
+            defs[dm.group(1)] = ln
+    for line in lines:
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        res = _shape_bytes(m.group("result"))
+        if "promoted" in line and op in ("all-reduce", "reduce-scatter"):
+            res /= 2.0        # bf16 source promoted to f32 by the CPU pass
+        elif op in ("all-gather", "all-to-all", "collective-permute") \
+                and "f32[" in line and _converted_operand(line, defs):
+            # CPU FloatNormalization promotes every bf16 scatter to f32 and
+            # the resulting converts hoist across data-movement collectives,
+            # widening them to f32.  TPU scatters/moves bf16 natively; count
+            # at source width when the operand is a hoisted convert.
+            res /= 2.0
+        s = _group_size(line)
+        frac = (s - 1) / s
+        if op == "all-reduce":
+            wire = 2.0 * res * frac
+        elif op == "all-gather":
+            wire = res * frac
+        elif op == "reduce-scatter":
+            wire = res * (s - 1)
+        elif op == "all-to-all":
+            wire = res * frac
+        else:
+            wire = res
+        out[op] += wire
+        out["ops"] += 1
+        if top:
+            key = f"{op} {m.group('result')}"
+            g = groups.setdefault(key, [0.0, 0])
+            g[0] += wire
+            g[1] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("ops", "total"))
+    if top:
+        ranked = sorted(groups.items(), key=lambda kv: -kv[1][0])[:top]
+        out["top"] = [
+            {"op": k, "wire_bytes": v[0], "count": v[1]} for k, v in ranked
+        ]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    model_flops: float            # 6*N_active*tokens (or 2*N for inference)
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs time / bound time == achievable MFU upper bound."""
+        ideal_s = self.model_flops / (self.chips * HW["peak_flops"])
+        return ideal_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def roofline_from_compiled(
+    compiled, *, chips: int, model_flops: float,
+    hlo_text: Optional[str] = None,
+) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(
+        compute_s=flops / HW["peak_flops"],
+        memory_s=hbm / HW["hbm_bw"],
+        collective_s=coll["total"] / HW["ici_bw"],
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        wire_bytes_per_chip=coll["total"],
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def analytic_hbm_bytes(cfg, shape, *, chips: int, tp: int, dp: int,
+                       remat: str = "full", redundancy: int = 1) -> float:
+    """Napkin per-chip HBM traffic per step, assuming TPU-grade fusion.
+
+    The XLA ``bytes accessed`` of a CPU-compiled module over-counts TPU HBM
+    traffic (the CPU pipeline fuses far less), so the memory roofline term
+    uses this explicit model; the XLA number is reported alongside as an
+    unfused upper bound.  Components:
+
+      train:  3x param reads (fwd, bwd, remat recompute) + grad write/read
+              + optimizer state read+write + activation checkpoints (one
+              (B,S,d) residual per layer, write+read) + logits write+read
+      prefill: 1x param read + activations + logits + cache write
+      decode: 1x param read + full cache read + slot write
+    """
+    n_active = cfg.n_active_params()
+    shard = tp * (dp if _uses_fsdp(cfg) else 1)
+    p_loc = 2.0 * n_active / shard                 # bf16 local params touched
+    # MoE: routed experts not chosen still live in HBM but aren't touched;
+    # n_active underestimates per-chip touched bytes when capacity shuffles
+    # tokens — keep n_active (documented).
+    B_loc = max(shape.global_batch // dp, 1)
+    S = shape.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers
+    act = 2.0 * B_loc * S * d                      # one bf16 residual
+    logits_loc = 2.0 * B_loc * S * cfg.vocab_size / tp * cfg.n_codebooks
+
+    if shape.kind == "train":
+        reads = 3.0 if remat == "full" else 2.0
+        params_traffic = reads * p_loc + 2.0 * p_loc          # + grad w/r
+        opt = 2.0 * (12.0 if True else 6.0) * (
+            cfg.n_active_params() / chips)                    # zero-sharded
+        acts = (2.0 + (1.0 if remat == "full" else 0.0)) * act * L
+        total = params_traffic + opt + acts + 2.0 * logits_loc
+    elif shape.kind == "prefill":
+        total = p_loc + 2.0 * act * L + logits_loc + _cache_bytes(
+            cfg, B_loc, S, tp)
+    else:  # decode
+        total = p_loc + _cache_bytes(cfg, B_loc, S, tp) + 2.0 * B_loc * d * L
+    return total * redundancy
+
+
+def _uses_fsdp(cfg) -> bool:
+    return cfg.n_params() > 3e10
+
+
+def _cache_bytes(cfg, B_loc: int, S: int, tp: int) -> float:
+    if cfg.mixer_type == "mamba2":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.headdim
+        per_layer = 4.0 * B_loc * H * s.state * s.headdim / tp
+        total = per_layer * cfg.n_layers
+        if cfg.shared_attn_every:
+            S_eff = min(S, 10**9)
+            inv = cfg.n_layers // cfg.shared_attn_every
+            total += inv * 2.0 * B_loc * cfg.n_kv_heads * S_eff * \
+                (cfg.d_model // max(cfg.n_heads, 1)) * 2 / tp
+        return total
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return 2.0 * B_loc * S * (m.kv_lora_rank + m.qk_rope_dim) \
+            * cfg.n_layers / tp
+    S_eff = min(S, cfg.window) if cfg.window else S
+    dh = cfg.d_model // max(cfg.n_heads, 1)
+    kv_shard = tp if cfg.n_kv_heads % tp == 0 else tp  # seq- or head-shard
+    return 2.0 * 2.0 * B_loc * cfg.n_kv_heads * S_eff * dh \
+        * cfg.n_layers / kv_shard
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N_active*tokens for training; 2*N_active*tokens for inference."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch   # decode: one token per sequence

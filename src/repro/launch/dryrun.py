@@ -1,0 +1,471 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell against 512 placeholder CPU devices, prove the sharding config is
+coherent, and extract memory/cost/collective analyses for the roofline.
+
+Cost extraction uses LAYER DIFFERENCING: XLA's cost analysis counts a
+``while`` (scan) body once, so the full-depth module (compiled with scans —
+fast, and the artifact whose ``memory_analysis`` proves the state fits) is
+complemented by tiny *unrolled* variants with segment counts (1,..) and
+(2,..): the cost delta of adding one layer, times the real layer count,
+gives exact full-depth flops / bytes / collective traffic.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, CANONICAL, get_config
+from repro.core import FaultSpec, RedundancyPolicy, compile_step
+from repro.data.pipeline import DataConfig
+from repro.distributed import sharding as shd
+from repro.launch import analysis
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.models.config import (
+    SHAPES, applicable_shapes, segment_counts, sub_quadratic,
+    with_segment_counts,
+)
+from repro.models.lm_cells import (
+    ServeConfig, TrainConfig, make_serve_program, make_train_program,
+)
+from repro.models import transformer as T
+from repro.optim.adamw import OptConfig
+
+
+def arch_opts(arch: str) -> dict:
+    big = arch in ("deepseek-v3-671b",)
+    large = arch in ("command-r-plus-104b", "granite-20b")
+    return {
+        "fsdp": big or large,
+        "opt": OptConfig(quantized_state=big, master_fp32=not big),
+    }
+
+
+def _prepend(spec: P, axis) -> P:
+    return P(axis, *tuple(spec))
+
+
+def _tree_prepend(pspecs, axis):
+    return jax.tree.map(
+        lambda s: _prepend(s, axis), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _to_sds(shapes, pspecs, mesh):
+    return jax.tree.map(
+        lambda sh, sp: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, pspecs,
+    )
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; never allocates)
+# --------------------------------------------------------------------------
+def train_state_specs(cfg, tcfg, prog, ctx, policy: RedundancyPolicy):
+    mesh = ctx.mesh
+    shapes = jax.eval_shape(prog.init_states, jax.random.PRNGKey(0))
+    dp = ctx.data_axes
+    dp_ax = dp if len(dp) > 1 else dp[0]
+
+    data_specs = {"tokens": P(dp_ax, None), "key": P()}
+    if cfg.n_codebooks > 1:
+        data_specs["tokens"] = P(dp_ax, None, None)
+    if cfg.n_vision_tokens:
+        data_specs["vision_embeds"] = P(dp_ax, None, None)
+
+    params_shapes = shapes["trainer"]["params"]
+    opt_shapes = shapes["trainer"]["opt"]
+    if policy.level > 1:
+        strip = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), t)
+        params_shapes, opt_shapes = strip(params_shapes), strip(opt_shapes)
+    pspec = shd.param_pspecs(ctx, params_shapes, cfg)
+    ospec = shd.zero_pspecs(ctx, pspec, opt_shapes, params_shapes)
+    tspec = {
+        "params": pspec,
+        "opt": ospec,
+        "metrics": jax.tree.map(lambda _: P(), shapes["trainer"]["metrics"]),
+    }
+    if "ef" in shapes["trainer"]:
+        tspec["ef"] = P(dp_ax)
+    if policy.level > 1:
+        axis = "pod" if policy.placement == "spatial" else None
+        tspec = _tree_prepend(tspec, axis)
+    return _to_sds(shapes, {"data": data_specs, "trainer": tspec}, mesh)
+
+
+def serve_state_specs(cfg, scfg, prog, ctx, policy: RedundancyPolicy):
+    mesh = ctx.mesh
+    shapes = jax.eval_shape(prog.init_states, jax.random.PRNGKey(0))
+    dp = ctx.data_axes
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    batch_shardable = scfg.batch % _axsize(ctx) == 0
+
+    wspec = {"params": shd.param_pspecs(ctx, shapes["weights"]["params"],
+                                        cfg)}
+    cache_shapes = shapes["decoder"]["cache"]
+    if policy.level > 1:
+        cache_shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            cache_shapes)
+    cspec = shd.cache_pspecs(ctx, cache_shapes, cfg)
+    if not batch_shardable:
+        cspec = jax.tree.map(
+            lambda s: P(None, *tuple(s)[1:]), cspec,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    tok_spec = P(dp_ax if batch_shardable else None, None)
+    if cfg.n_codebooks > 1:
+        tok_spec = P(*tuple(tok_spec), None)
+    dspec = {"cache": cspec, "tokens": tok_spec, "n_decoded": P()}
+    if policy.level > 1:
+        axis = "pod" if policy.placement == "spatial" else None
+        dspec = _tree_prepend(dspec, axis)
+    return _to_sds(shapes, {"weights": wspec, "decoder": dspec}, mesh)
+
+
+def _axsize(ctx) -> int:
+    n = 1
+    for a in ctx.data_axes:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def input_specs(cfg, shape_name: str, mesh, ctx, *,
+                policy=RedundancyPolicy(), opt: OptConfig = OptConfig(),
+                grad_compression: str = "none"):
+    """(program|None, ShapeDtypeStruct stand-ins) for one cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tcfg = TrainConfig(
+            data=DataConfig(batch=shape.global_batch, seq_len=shape.seq_len,
+                            vocab=cfg.vocab_size, kind="uniform",
+                            n_codebooks=cfg.n_codebooks),
+            opt=opt,
+            grad_compression=grad_compression,
+        )
+        prog = make_train_program(cfg, tcfg, ctx).with_policies(
+            {"trainer": policy})
+        return prog, train_state_specs(cfg, tcfg, prog, ctx, policy)
+    if shape.kind == "decode":
+        scfg = ServeConfig(batch=shape.global_batch, max_len=shape.seq_len,
+                           prefill_len=shape.seq_len - 1)
+        prog = make_serve_program(cfg, scfg, ctx).with_policies(
+            {"decoder": policy})
+        return prog, serve_state_specs(cfg, scfg, prog, ctx, policy)
+    # prefill: forward with cache fill
+    dp = ctx.data_axes
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, S) if cfg.n_codebooks == 1 else (B, S, cfg.n_codebooks)
+    tok_spec = (P(dp_ax, None) if cfg.n_codebooks == 1
+                else P(dp_ax, None, None))
+    params_shapes = jax.eval_shape(
+        lambda k: T.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspec = shd.param_pspecs(ctx, params_shapes, cfg)
+    inputs = {
+        "params": _to_sds(params_shapes, pspec, mesh),
+        "tokens": jax.ShapeDtypeStruct(
+            tok_shape, jnp.int32, sharding=NamedSharding(mesh, tok_spec)),
+    }
+    if cfg.n_vision_tokens:
+        inputs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), cfg.compute_dtype,
+            sharding=NamedSharding(mesh, P(dp_ax, None, None)))
+    return None, inputs
+
+
+# --------------------------------------------------------------------------
+# compile one variant, return its cost numbers
+# --------------------------------------------------------------------------
+def _compile_variant(cfg, shape_name, mesh, ctx, policy, opt,
+                     compare_every: int, grad_compression: str = "none",
+                     fault_hook: bool = False):
+    prog, specs = input_specs(cfg, shape_name, mesh, ctx,
+                              policy=policy, opt=opt,
+                              grad_compression=grad_compression)
+    if prog is not None:
+        if compare_every > 1:
+            from repro.core.schedule import compile_step as _cs
+
+            base_cmp = _cs(prog, with_compare=True)
+            base_plain = _cs(prog, with_compare=False)
+
+            def step(states, idx, fault):
+                for j in range(compare_every - 1):
+                    states, _ = base_plain(states, idx + j, fault)
+                return base_cmp(states, idx + compare_every - 1, fault)
+        else:
+            step = compile_step(prog)
+        fn = jax.jit(step, donate_argnums=0)
+        # the §IV fault-injection hook is a test facility; production steps
+        # compile without it (fault=None statically elides inject()).
+        args = (specs, jax.ShapeDtypeStruct((), jnp.int32),
+                jax.eval_shape(FaultSpec.none) if fault_hook else None)
+    else:
+        def prefill(params, tokens, vision_embeds=None):
+            logits, cache, _ = T.forward(
+                cfg, params, tokens, ctx=ctx,
+                vision_embeds=vision_embeds, fill_cache=True)
+            return logits, cache
+
+        fn = jax.jit(prefill)
+        args = (specs["params"], specs["tokens"])
+        if "vision_embeds" in specs:
+            args = args + (specs["vision_embeds"],)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    return compiled
+
+
+def _costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = analysis.collective_bytes(hlo, top=12)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": coll["total"],
+        "coll": coll,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             policy=RedundancyPolicy(), remat: str = "full",
+             seq_shard_acts: bool = False, compare_every: int = 1,
+             fsdp=None, block_k: int = 1024, tp_off: bool = False,
+             decode_shardmap: bool = False, grad_compression: str = "none",
+             fault_hook: bool = False, serve_ep2d: bool = False,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "redundancy": f"{policy.level}/{policy.placement}/{policy.compare}"
+                      f"/k{compare_every}",
+        "remat": remat, "seq_shard_acts": seq_shard_acts,
+        "block_k": block_k, "tp_off": tp_off,
+        "decode_shardmap": decode_shardmap,
+        "grad_compression": grad_compression, "fault_hook": fault_hook,
+        "serve_ep2d": serve_ep2d, "ok": False,
+    }
+    if shape_name == "long_500k" and not sub_quadratic(cfg):
+        rec["skipped"] = "pure full-attention arch (see DESIGN.md §6)"
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opts = arch_opts(arch)
+    use_fsdp = opts["fsdp"] if fsdp is None else fsdp
+    if serve_ep2d:
+        use_fsdp = False   # serve layout supersedes fsdp (weights TP/EP2D)
+    pod_role = "replica" if (policy.level > 1
+                             and policy.placement == "spatial") else "data"
+    mk = lambda unroll: make_ctx(
+        mesh, pod_role=pod_role, fsdp=use_fsdp,
+        vocab_size=cfg.vocab_size, d_model=cfg.d_model,
+        remat=remat, seq_shard_acts=seq_shard_acts,
+        block_k=block_k, pallas=False, unroll=unroll, tp_off=tp_off,
+        decode_shardmap=decode_shardmap, serve_ep2d=serve_ep2d)
+    chips = mesh.devices.size
+
+    try:
+        # 1) full-depth module (scan): sharding coherence + memory proof
+        full = _compile_variant(cfg, shape_name, mesh, mk(False), policy,
+                                opts["opt"], compare_every,
+                                grad_compression, fault_hook)
+        mem = full.memory_analysis()
+        rec["memory"] = {
+            "argument_gib": mem.argument_size_in_bytes / 2**30,
+            "output_gib": mem.output_size_in_bytes / 2**30,
+            "temp_gib": mem.temp_size_in_bytes / 2**30,
+            "alias_gib": mem.alias_size_in_bytes / 2**30,
+            "live_est_gib": (mem.argument_size_in_bytes
+                             + mem.temp_size_in_bytes
+                             + mem.output_size_in_bytes
+                             - mem.alias_size_in_bytes) / 2**30,
+        }
+        rec["compile_full_s"] = round(time.time() - t0, 1)
+
+        # 2) layer differencing on small unrolled variants
+        t1 = time.time()
+        counts = segment_counts(cfg)
+        base_counts = [1] * len(counts)
+        cbase = _costs(_compile_variant(
+            with_segment_counts(cfg, base_counts), shape_name, mesh,
+            mk(True), policy, opts["opt"], compare_every,
+            grad_compression, fault_hook))
+        per_layer, cbumped = [], []
+        for i in range(len(counts)):
+            bumped = list(base_counts)
+            bumped[i] = 2
+            ci = _costs(_compile_variant(
+                with_segment_counts(cfg, bumped), shape_name, mesh,
+                mk(True), policy, opts["opt"], compare_every,
+                grad_compression, fault_hook))
+            cbumped.append(ci)
+            per_layer.append({
+                k: ci[k] - cbase[k] for k in ("flops", "bytes", "wire")
+            })
+        total = {
+            k: cbase[k] + sum(
+                (counts[i] - 1) * per_layer[i][k]
+                for i in range(len(counts)))
+            for k in ("flops", "bytes", "wire")
+        }
+        rec["layerwise"] = {
+            "base": {k: cbase[k] for k in ("flops", "bytes", "wire")},
+            "per_layer": per_layer, "counts": counts,
+            "base_coll": cbase["coll"],
+            "bumped_coll": [c["coll"] for c in cbumped],
+        }
+        rec["compile_variants_s"] = round(time.time() - t1, 1)
+
+        # 3) roofline terms
+        mf = analysis.model_flops_for(cfg, shape) * compare_every
+        tp = 1 if tp_off else mesh.shape["model"]
+        dp = chips // tp // (2 if pod_role == "replica" else 1)
+        hbm_model = analysis.analytic_hbm_bytes(
+            cfg, shape, chips=chips, tp=tp, dp=dp, remat=remat,
+            redundancy=(policy.level if policy.placement == "temporal"
+                        else 1),
+        ) * compare_every
+        roof = {
+            "compute_s": total["flops"] / analysis.HW["peak_flops"],
+            "memory_s_xla": total["bytes"] / analysis.HW["hbm_bw"],
+            "memory_s": hbm_model / analysis.HW["hbm_bw"],
+            "collective_s": total["wire"] / analysis.HW["ici_bw"],
+            "flops_per_chip": total["flops"],
+            "hbm_bytes_model": hbm_model,
+            "hbm_bytes_xla": total["bytes"],
+            "wire_bytes_per_chip": total["wire"],
+            "model_flops": mf,
+            "chips": chips,
+        }
+        terms = {"compute": roof["compute_s"], "memory": roof["memory_s"],
+                 "collective": roof["collective_s"]}
+        roof["dominant"] = max(terms, key=terms.get)
+        bound = max(terms.values())
+        ideal = mf / (chips * analysis.HW["peak_flops"])
+        roof["bound_s"] = bound
+        roof["roofline_fraction"] = ideal / bound if bound else 0.0
+        roof["useful_ratio"] = mf / (total["flops"] * chips) \
+            if total["flops"] else 0.0
+        rec["roofline"] = roof
+        rec["ok"] = True
+        if verbose:
+            print(
+                f"OK  {arch:24s} {shape_name:12s} {rec['mesh']:8s} "
+                f"comp={roof['compute_s']*1e3:9.2f}ms "
+                f"mem={roof['memory_s']*1e3:9.2f}ms "
+                f"coll={roof['collective_s']*1e3:9.2f}ms "
+                f"dom={roof['dominant']:10s} "
+                f"live={rec['memory']['live_est_gib']:7.2f}GiB "
+                f"frac={roof['roofline_fraction']:.3f} "
+                f"[{rec['compile_full_s']}s+{rec['compile_variants_s']}s]",
+                flush=True,
+            )
+    except Exception as e:  # noqa: BLE001 - record and continue the matrix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"FAIL {arch} {shape_name} {rec['mesh']}: {rec['error']}",
+                  flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--redundancy", default="none",
+                    choices=["none", "dmr_temporal", "dmr_spatial",
+                             "tmr_temporal", "tmr_spatial"])
+    ap.add_argument("--compare", default="bitwise",
+                    choices=["bitwise", "hash"])
+    ap.add_argument("--compare-every", type=int, default=1)
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--seq-shard-acts", action="store_true")
+    ap.add_argument("--block-k", type=int, default=1024)
+    ap.add_argument("--fsdp", default=None, choices=["on", "off"])
+    ap.add_argument("--tp-off", action="store_true")
+    ap.add_argument("--decode-shardmap", action="store_true")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--serve-ep2d", action="store_true",
+                    help="serve weight layout: experts E over (data x "
+                         "model), dense TP-only (decode cells)")
+    ap.add_argument("--fault-hook", action="store_true",
+                    help="compile WITH the fault-injection hook (tests its "
+                         "cost; production steps elide it)")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    level = {"none": 1, "dmr": 2, "tmr": 3}[args.redundancy.split("_")[0]]
+    placement = (args.redundancy.split("_")[1]
+                 if "_" in args.redundancy else "temporal")
+    policy = RedundancyPolicy(level=level, placement=placement,
+                              compare=args.compare)
+
+    archs = [args.arch] if args.arch else list(CANONICAL)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else applicable_shapes(cfg)
+        for shape in shapes:
+            for mp in meshes:
+                fn = (outdir / f"{args.tag}_{arch}_{shape}_"
+                      f"{'multi' if mp else 'single'}.json")
+                if args.skip_existing and fn.exists():
+                    rec = json.loads(fn.read_text())
+                    if rec.get("ok") or "skipped" in rec:
+                        results.append(rec)
+                        continue
+                rec = run_cell(
+                    arch, shape, multi_pod=mp, policy=policy,
+                    remat=args.remat, seq_shard_acts=args.seq_shard_acts,
+                    compare_every=args.compare_every, block_k=args.block_k,
+                    fsdp=None if args.fsdp is None else args.fsdp == "on",
+                    tp_off=args.tp_off,
+                    decode_shardmap=args.decode_shardmap,
+                    grad_compression=args.grad_compression,
+                    fault_hook=args.fault_hook,
+                    serve_ep2d=args.serve_ep2d,
+                )
+                results.append(rec)
+                fn.write_text(json.dumps(rec, indent=1))
+    n_ok = sum(bool(r.get("ok")) for r in results)
+    n_skip = sum("skipped" in r for r in results)
+    print(f"\n{n_ok} ok / {n_skip} skipped / "
+          f"{len(results) - n_ok - n_skip} failed of {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

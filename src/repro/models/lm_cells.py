@@ -1,0 +1,286 @@
+"""The LM training/serving stack as a MISO program (DESIGN.md §5).
+
+Training:
+    cell data     -- source cell (in-graph deterministic batches)
+    cell trainer  -- state = (params, optimizer state, metrics);
+                     transition = fwd + bwd + AdamW update, reading the data
+                     cell's *previous* batch (double-buffered input pipeline)
+
+Serving:
+    cell weights  -- static cell (empty transition — the paper's StaticImage
+                     pattern) holding the model parameters
+    cell decoder  -- state = (KV/SSM cache, last tokens, position);
+                     transition = one greedy decode step for the whole batch
+
+Replication (paper §IV) then applies to the trainer/decoder cells through
+the generic MISO machinery: `program.with_policies({"trainer": DMR...})`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CellType, MisoProgram
+from repro.data.pipeline import DataConfig, data_cell, sample_batch
+from repro.distributed.collectives import compressed_psum_int8
+from repro.distributed.sharding import LOCAL, ShardCtx
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state
+from .config import ModelConfig
+from . import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    data: DataConfig
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    grad_compression: str = "none"   # none | int8_ef (dense archs only)
+    param_seed: int = 0
+
+
+def _make_batch(cfg: ModelConfig, data_state: dict) -> dict:
+    batch = {"tokens": data_state["tokens"]}
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = data_state["vision_embeds"]
+    return batch
+
+
+def make_data_cell(cfg: ModelConfig, tcfg: TrainConfig) -> CellType:
+    base = data_cell(tcfg.data)
+    if not cfg.n_vision_tokens:
+        return base
+
+    # extend the source cell with the vision-frontend stub output
+    def init(key):
+        st = base.init(key)
+        st["vision_embeds"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(st["key"], 77),
+            (tcfg.data.batch, cfg.n_vision_tokens, cfg.d_model),
+            jnp.float32,
+        ).astype(cfg.compute_dtype)
+        return st
+
+    def transition(prev):
+        st = base.transition(prev)
+        st["vision_embeds"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(st["key"], 77),
+            (tcfg.data.batch, cfg.n_vision_tokens, cfg.d_model),
+            jnp.float32,
+        ).astype(cfg.compute_dtype)
+        return st
+
+    return CellType(name=base.name, init=init, transition=transition,
+                    instances=base.instances)
+
+
+def make_trainer_cell(
+    cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx = LOCAL,
+    *, data_name: str = "data",
+) -> CellType:
+    loss = functools.partial(T.loss_fn, cfg, ctx=ctx)
+    if tcfg.grad_compression == "int8_ef":
+        # the compressed path runs the loss INSIDE a shard_map over the
+        # data axes — sharding constraints may then only mention the
+        # remaining (auto) axes
+        loss = functools.partial(
+            T.loss_fn, cfg,
+            ctx=dataclasses.replace(ctx, manual_axes=tuple(ctx.data_axes)))
+
+    def init(key):
+        params = T.init_params(cfg, jax.random.fold_in(key, tcfg.param_seed))
+        st = {
+            "params": params,
+            "opt": init_opt_state(params, tcfg.opt),
+            "metrics": {
+                "loss": jnp.float32(0), "grad_norm": jnp.float32(0),
+                "lr": jnp.float32(0),
+            },
+        }
+        if tcfg.grad_compression == "int8_ef":
+            n = sum(p.size for p in jax.tree.leaves(params))
+            pad = (-n) % (512 * _dp_size(ctx))
+            st["ef"] = jnp.zeros((n + pad,), jnp.float32)
+        return st
+
+    def grads_plain(params, batch):
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch
+        )
+        return grads, metrics
+
+    def grads_microbatched(params, batch):
+        mb = tcfg.microbatches
+        toks = batch["tokens"]
+        B = toks.shape[0]
+        assert B % mb == 0
+
+        def body(acc, i):
+            sl = {
+                k: jax.lax.dynamic_slice_in_dim(v, i * (B // mb), B // mb, 0)
+                for k, v in batch.items()
+            }
+            (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, sl)
+            acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / mb, acc, g
+            )
+            return acc, m
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        grads, ms = jax.lax.scan(body, zero, jnp.arange(mb))
+        metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+        return grads, metrics
+
+    def transition(prev):
+        st = prev["trainer"]
+        batch = _make_batch(cfg, prev[data_name])
+        params = st["params"]
+        gfn = grads_microbatched if tcfg.microbatches > 1 else grads_plain
+
+        if tcfg.grad_compression == "int8_ef":
+            grads, metrics, new_ef = _compressed_grads(
+                gfn, params, batch, st["ef"], ctx
+            )
+        else:
+            grads, metrics = gfn(params, batch)
+            new_ef = None
+        new_params, new_opt, info = apply_updates(
+            params, grads, st["opt"], tcfg.opt
+        )
+        out = {
+            "params": new_params,
+            "opt": new_opt,
+            "metrics": {
+                "loss": metrics["loss"].astype(jnp.float32),
+                "grad_norm": info["grad_norm"],
+                "lr": info["lr"],
+            },
+        }
+        if new_ef is not None:
+            out["ef"] = new_ef
+        return out
+
+    return CellType(name="trainer", init=init, transition=transition,
+                    reads=(data_name,))
+
+
+def _dp_size(ctx: ShardCtx) -> int:
+    n = 1
+    if ctx.mesh is not None:
+        for a in ctx.data_axes:
+            n *= ctx.mesh.shape[a]
+    return n
+
+
+def _compressed_grads(gfn, params, batch, ef, ctx: ShardCtx):
+    """Per-dp-shard grads + int8 error-feedback reduction, under a
+    partial-manual shard_map over the data axes (tp stays auto)."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = ctx.data_axes
+    leaves, tdef = jax.tree.flatten(params)
+    sizes = [p.size for p in leaves]
+    n = sum(sizes)
+    pad = ef.shape[0] - n
+
+    def local(params, batch, ef):
+        g, metrics = gfn(params, batch)
+        flat = jnp.concatenate(
+            [x.astype(jnp.float32).reshape(-1) for x in jax.tree.leaves(g)]
+        )
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        mean, new_ef = compressed_psum_int8(flat, ef, dp)
+        metrics = jax.tree.map(
+            lambda x: jax.lax.pmean(x, dp if len(dp) > 1 else dp[0]), metrics
+        )
+        return mean, metrics, new_ef
+
+    mean, metrics, new_ef = jax.shard_map(
+        local,
+        mesh=ctx.mesh,
+        in_specs=(P(), P(dp if len(dp) > 1 else dp[0]), P()),
+        out_specs=(P(), P(), P()),
+        axis_names=set(dp),
+        check_vma=False,
+    )(params, batch, ef)
+    out, off = [], 0
+    for p, s in zip(leaves, sizes):
+        out.append(mean[off:off + s].reshape(p.shape))
+        off += s
+    return tdef.unflatten(out), metrics, new_ef
+
+
+def make_train_program(
+    cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx = LOCAL,
+) -> MisoProgram:
+    prog = MisoProgram()
+    prog.add(make_data_cell(cfg, tcfg))
+    prog.add(make_trainer_cell(cfg, tcfg, ctx))
+    return prog
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    max_len: int          # cache capacity == shape seq_len
+    param_seed: int = 0
+    prefill_len: int = 0  # >0: dry-run-style warm cache position
+
+
+def make_serve_program(
+    cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL,
+) -> MisoProgram:
+    def w_init(key):
+        return {"params": T.init_params(
+            cfg, jax.random.fold_in(key, scfg.param_seed))}
+
+    weights = CellType(
+        name="weights", init=w_init, transition=lambda prev: prev["weights"],
+    )
+
+    def d_init(key):
+        cache = T.init_cache(cfg, scfg.batch, scfg.max_len)
+        if scfg.prefill_len:
+            cache["pos"] = jnp.full((scfg.batch,), scfg.prefill_len,
+                                    jnp.int32)
+        shape = (scfg.batch, 1)
+        if cfg.n_codebooks > 1:
+            shape = shape + (cfg.n_codebooks,)
+        return {
+            "cache": cache,
+            "tokens": jnp.zeros(shape, jnp.int32),
+            "n_decoded": jnp.zeros((), jnp.int32),
+        }
+
+    def d_transition(prev):
+        st = prev["decoder"]
+        logits, cache = T.decode_step(
+            cfg, prev["weights"]["params"], st["cache"], st["tokens"],
+            ctx=ctx,
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
+        if cfg.n_codebooks == 1:
+            nxt = nxt.reshape(st["tokens"].shape)
+        return {
+            "cache": cache,
+            "tokens": nxt,
+            "n_decoded": st["n_decoded"] + 1,
+        }
+
+    decoder = CellType(
+        name="decoder", init=d_init, transition=d_transition,
+        reads=("weights",), instances=scfg.batch,
+    )
+    prog = MisoProgram()
+    prog.add(weights)
+    prog.add(decoder)
+    return prog

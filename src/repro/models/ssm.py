@@ -1,0 +1,154 @@
+"""Mamba2 (SSD) block: in-proj -> causal depthwise conv -> selective SSM ->
+gated norm -> out-proj, with a chunked-scan train path (Pallas kernel or
+pure-JAX oracle) and an O(1)-state recurrent decode path.
+
+Projections and depthwise convs are stored per-component (z, x, BC, dt)
+rather than fused: depthwise ops are per-channel, so the split is exact, and
+it lets tensor parallelism shard the d_inner-aligned components over the
+model axis while the small B/C/dt components stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from .config import ModelConfig, SSMConfig
+from .layers import dense_init, rmsnorm
+
+Params = dict
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    return s, d_inner, n_heads
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    s, d_inner, H = _dims(cfg)
+    d, dt = cfg.d_model, cfg.compute_dtype
+    gn = 2 * s.ngroups * s.state
+    ks = jax.random.split(key, 6)
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (H,), jnp.float32)
+        * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min)
+    )
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "w_z": dense_init(ks[0], d, d_inner, dt),
+        "w_x": dense_init(ks[1], d, d_inner, dt),
+        "w_bc": dense_init(ks[2], d, gn, dt),
+        "w_dt": dense_init(ks[3], d, H, dt),
+        "conv_x": (jax.random.normal(ks[5], (s.conv_kernel, d_inner),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_x_b": jnp.zeros((d_inner,), dt),
+        "conv_bc": (jax.random.normal(ks[5], (s.conv_kernel, gn),
+                                      jnp.float32) * 0.1).astype(dt),
+        "conv_bc_b": jnp.zeros((gn,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(ks[5], d_inner, d, dt),
+    }
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    s, d_inner, H = _dims(cfg)
+    gn = 2 * s.ngroups * s.state
+    return {
+        "conv_x": jnp.zeros((batch, s.conv_kernel - 1, d_inner),
+                            cfg.compute_dtype),
+        "conv_bc": jnp.zeros((batch, s.conv_kernel - 1, gn),
+                             cfg.compute_dtype),
+        "ssm": jnp.zeros((batch, H, s.state, s.headdim), jnp.float32),
+    }
+
+
+def _causal_dwconv(seq: jax.Array, w: jax.Array, b: jax.Array,
+                   kernel: int) -> jax.Array:
+    """seq (B,S,C), w (k,C): per-channel causal conv, silu-activated."""
+    B, S, C = seq.shape
+    pad = jnp.zeros((B, kernel - 1, C), seq.dtype)
+    ext = jnp.concatenate([pad, seq], axis=1)
+    acc = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(kernel):
+        acc = acc + ext[:, i:i + S].astype(jnp.float32) * w[i].astype(
+            jnp.float32)
+    return jax.nn.silu(acc + b.astype(jnp.float32)).astype(seq.dtype)
+
+
+def _dwconv_step(hist: jax.Array, new: jax.Array, w, b):
+    """hist (B,k-1,C) + new (B,1,C) -> (out (B,1,C), new_hist)."""
+    full = jnp.concatenate([hist, new], axis=1)          # (B,k,C)
+    out = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(new.dtype)[:, None]
+    return out, full[:, 1:]
+
+
+def mamba_block(
+    p: Params, x: jax.Array, cfg: ModelConfig, *,
+    cache: Optional[dict] = None,
+    fill_cache: bool = False,
+    pallas: bool | None = None, interpret: bool = False,
+):
+    """x (B, S, d) -> (y, new_cache).  new_cache is None unless decoding
+    (cache given) or prefilling (fill_cache=True)."""
+    s, d_inner, H = _dims(cfg)
+    B, S, d = x.shape
+    gn2 = 2 * s.ngroups * s.state
+    z = x @ p["w_z"]
+    xc = x @ p["w_x"]
+    bcc = x @ p["w_bc"]
+    dtr = x @ p["w_dt"]
+
+    if cache is None:
+        xs = _causal_dwconv(xc, p["conv_x"], p["conv_x_b"], s.conv_kernel)
+        bcs = _causal_dwconv(bcc, p["conv_bc"], p["conv_bc_b"], s.conv_kernel)
+        new_conv_x = xc[:, -(s.conv_kernel - 1):] if fill_cache else None
+        new_conv_bc = bcc[:, -(s.conv_kernel - 1):] if fill_cache else None
+    else:
+        assert S == 1
+        xs, new_conv_x = _dwconv_step(cache["conv_x"], xc, p["conv_x"],
+                                      p["conv_x_b"])
+        bcs, new_conv_bc = _dwconv_step(cache["conv_bc"], bcc, p["conv_bc"],
+                                        p["conv_bc_b"])
+
+    xh = xs.reshape(B, S, H, s.headdim)
+    bh, ch = jnp.split(bcs, 2, axis=-1)
+    bh = bh.reshape(B, S, s.ngroups, s.state)
+    ch = ch.reshape(B, S, s.ngroups, s.state)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                       # (H,)
+
+    if cache is None:
+        h0 = None
+        y, h_final = kops.ssd(xh, dt, a, bh, ch, h0=h0, chunk=s.chunk,
+                              pallas=pallas, interpret=interpret)
+        new_ssm = h_final if fill_cache else None
+    else:
+        h0 = cache["ssm"]                                   # (B,H,N,P)
+        rep = H // s.ngroups
+        bhh = jnp.repeat(bh[:, 0], rep, axis=1)             # (B,H,N)
+        chh = jnp.repeat(ch[:, 0], rep, axis=1)
+        da = jnp.exp(dt[:, 0] * a[None, :])                 # (B,H)
+        upd = (dt[:, 0][..., None, None]
+               * bhh[..., :, None]
+               * xh[:, 0][..., None, :].astype(jnp.float32))
+        h1 = h0 * da[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", chh, h1)[:, None].astype(x.dtype)
+        new_ssm = h1
+
+    y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"]
+    if cache is None and not fill_cache:
+        return out, None
+    return out, {"conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssm": new_ssm}

@@ -1,0 +1,171 @@
+"""AdamW with cosine schedule, global-norm clipping, optional fp32 master
+weights, and optional 8-bit (blockwise-quantized) first/second moments.
+
+The 8-bit mode is what lets the 671B config's optimizer state fit a 512-chip
+v5e slice: m/v are stored int8 with one fp32 scale per 256-element block
+(Dettmers-style dynamic blockwise quantization), dequantized-updated-
+requantized inside the step.  State sharding (ZeRO-1/FSDP) is applied by the
+launcher via ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+_QBLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_fp32: bool = True      # keep an fp32 master copy of bf16 params
+    quantized_state: bool = False # 8-bit m/v (deepseek-v3-671b)
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# --------------------------------------------------------------------------
+# blockwise int8 quantization of optimizer moments
+#
+# Blocks run along the LAST axis and the int8 tensor keeps the parameter's
+# shape, so quantized moments inherit the parameter's tensor-parallel
+# sharding (plus the extra ZeRO data-axis shard) — essential for the 671B
+# config, where flat-layout moments would only shard over the data axis.
+# --------------------------------------------------------------------------
+def _quantizable(p) -> bool:
+    return p.shape and p.shape[-1] % _QBLOCK == 0
+
+
+def _quantize(x: jax.Array) -> dict:
+    blocks = x.reshape(x.shape[:-1] + (-1, _QBLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0      # (..., nb)
+    q = jnp.round(
+        blocks / jnp.maximum(scale[..., None], 1e-20)
+    ).astype(jnp.int8).reshape(x.shape)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize(qs: dict, shape) -> jax.Array:
+    blocks = qs["q"].astype(jnp.float32).reshape(
+        shape[:-1] + (-1, _QBLOCK)
+    )
+    return (blocks * qs["scale"][..., None]).reshape(shape)
+
+
+def _moment_init(p: jax.Array, quantized: bool):
+    if quantized and _quantizable(p):
+        return _quantize(jnp.zeros(p.shape, jnp.float32))
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _moment_read(m, shape, quantized: bool):
+    if quantized and isinstance(m, dict):
+        return _dequantize(m, shape)
+    return m
+
+
+def _moment_write(val: jax.Array, quantized: bool):
+    if quantized and _quantizable(val):
+        return _quantize(val)
+    return val
+
+
+# --------------------------------------------------------------------------
+# state / step
+# --------------------------------------------------------------------------
+def init_opt_state(params: Pytree, cfg: OptConfig) -> dict:
+    q = cfg.quantized_state
+    state = {
+        "m": jax.tree.map(lambda p: _moment_init(p, q), params),
+        "v": jax.tree.map(lambda p: _moment_init(p, q), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def global_norm(grads: Pytree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads))
+    )
+
+
+def apply_updates(
+    params: Pytree, grads: Pytree, state: dict, cfg: OptConfig
+) -> tuple[Pytree, dict, dict]:
+    """Returns (new_params, new_state, info)."""
+    q = cfg.quantized_state
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+    lr = schedule(cfg, step)
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+    is_q = lambda x: isinstance(x, dict) and "q" in x
+
+    def upd(p, master, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = _moment_read(m, p.shape, q)
+        vf = _moment_read(v, p.shape, q)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * gf
+        vf = cfg.b2 * vf + (1 - cfg.b2) * gf * gf
+        mhat = mf / c1
+        vhat = vf / c2
+        base = master.astype(jnp.float32) if cfg.master_fp32 else \
+            p.astype(jnp.float32)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newf = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + wd * base)
+        return (
+            newf.astype(p.dtype),
+            newf if cfg.master_fp32 else None,
+            _moment_write(mf, q),
+            _moment_write(vf, q),
+        )
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_master = jax.tree.leaves(masters) if cfg.master_fp32 else flat_p
+    flat_g = jax.tree.leaves(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(p, mm, g, m, v) for p, mm, g, m, v in
+            zip(flat_p, flat_master, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in outs])
+    new_state = {
+        "m": tdef.unflatten([o[2] for o in outs]),
+        "v": tdef.unflatten([o[3] for o in outs]),
+        "step": step,
+    }
+    if cfg.master_fp32:
+        new_state["master"] = tdef.unflatten([o[1] for o in outs])
+    info = {"grad_norm": gn, "lr": lr}
+    return new_params, new_state, info

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates a REDUCED same-family config and
+runs, on CPU:
+  * one forward pass           -> logits shape + finite,
+  * one MISO train transition  -> loss finite, state structure preserved,
+  * one decode step            -> next-token logits shape + finite.
+The FULL configs are exercised only by the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import CANONICAL, get_config, get_reduced
+from repro.core import compile_step, FaultSpec
+from repro.data.pipeline import DataConfig
+from repro.models import transformer as T
+from repro.models.lm_cells import (
+    ServeConfig, TrainConfig, make_serve_program, make_train_program,
+)
+from repro.optim.adamw import OptConfig
+
+B, S = 2, 16
+
+
+def _finite(x) -> bool:
+    return bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+
+
+@pytest.fixture(scope="module", params=CANONICAL)
+def arch(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def reduced(arch):
+    cfg = get_reduced(arch)
+    assert cfg.n_layers <= 6 and cfg.d_model <= 256, \
+        f"reduced config for {arch} is not CPU-sized"
+    return cfg
+
+
+def test_full_config_matches_assignment(arch):
+    """The full config must carry the published numbers."""
+    published = {
+        "deepseek-v3-671b": (61, 7168, 128, 128, 129280),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 49155),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 32000),
+        "internlm2-1.8b": (24, 2048, 16, 8, 92544),
+        "granite-20b": (52, 6144, 48, 1, 49152),
+        "command-r-plus-104b": (64, 12288, 96, 8, 256000),
+        "mamba2-2.7b": (64, 2560, 0, 0, 50280),
+        "musicgen-large": (48, 2048, 32, 32, 2048),
+        "zamba2-2.7b": (54, 2560, 32, 32, 32000),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 152064),
+    }
+    L, d, h, kv, v = published[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.vocab_size == v
+
+
+def test_forward_shapes_and_finite(reduced):
+    cfg = reduced
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    shape = (B, S) if cfg.n_codebooks == 1 else (B, S, cfg.n_codebooks)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), shape, 0,
+                              cfg.vocab_size, jnp.int32)
+    vis = None
+    if cfg.n_vision_tokens:
+        vis = jnp.zeros((B, min(cfg.n_vision_tokens, S), cfg.d_model),
+                        cfg.compute_dtype)
+    logits, _, (aux, _) = T.forward(cfg, params, toks, vision_embeds=vis)
+    want = ((B, S, cfg.vocab_size) if cfg.n_codebooks == 1
+            else (B, S, cfg.n_codebooks, cfg.vocab_size))
+    assert logits.shape == want
+    assert _finite(logits) and _finite(aux)
+
+
+def test_one_train_transition(reduced):
+    cfg = reduced
+    tcfg = TrainConfig(
+        data=DataConfig(batch=B, seq_len=S, vocab=cfg.vocab_size,
+                        n_codebooks=cfg.n_codebooks),
+        opt=OptConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=8),
+    )
+    prog = make_train_program(cfg, tcfg)
+    prog.validate()
+    states = prog.init_states(jax.random.PRNGKey(0))
+    step = jax.jit(compile_step(prog))
+    new, _ = step(states, jnp.int32(0), FaultSpec.none())
+    assert jax.tree.structure(new) == jax.tree.structure(states)
+    loss = new["trainer"]["metrics"]["loss"]
+    assert _finite(loss) and float(loss) > 0
+
+
+def test_one_decode_step(reduced):
+    cfg = reduced
+    scfg = ServeConfig(batch=B, max_len=32, prefill_len=3)
+    prog = make_serve_program(cfg, scfg)
+    states = prog.init_states(jax.random.PRNGKey(0))
+    step = jax.jit(compile_step(prog))
+    new, _ = step(states, jnp.int32(0), FaultSpec.none())
+    toks = new["decoder"]["tokens"]
+    want = (B, 1) if cfg.n_codebooks == 1 else (B, 1, cfg.n_codebooks)
+    assert toks.shape == want
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab_size)))
+    assert int(new["decoder"]["n_decoded"]) == 1

@@ -1,0 +1,192 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.state_hash import state_hash
+from repro.kernels.tmr_vote import tmr_vote
+from repro.kernels import ops
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d,causal,window,bq,bk",
+    [
+        (1, 2, 2, 64, 64, 32, True, None, 32, 32),     # MHA causal
+        (2, 4, 2, 64, 64, 64, True, None, 32, 32),     # GQA
+        (1, 4, 1, 32, 32, 64, True, None, 16, 16),     # MQA
+        (1, 2, 2, 64, 64, 32, False, None, 32, 32),    # bidirectional
+        (1, 2, 1, 64, 64, 32, True, 24, 16, 16),       # sliding window
+        (1, 2, 2, 32, 96, 32, True, None, 16, 32),     # chunked prefill
+        (1, 3, 3, 48, 48, 16, True, 16, 24, 16),       # odd heads + window
+    ],
+)
+def test_flash_attention_matches_ref(b, hq, hkv, sq, sk, d, causal, window,
+                                     bq, bk, dtype):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(k0, (b, hq, sq, d), dtype)
+    k = _rand(k1, (b, hkv, sk, d), dtype)
+    v = _rand(k2, (b, hkv, sk, d), dtype)
+    q_offset = sk - sq  # queries are the suffix of the kv timeline
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_flash_attention_fully_masked_rows_are_zero():
+    # window so small that some kv blocks never contribute
+    q = _rand(jax.random.PRNGKey(1), (1, 1, 32, 16), jnp.float32)
+    k = _rand(jax.random.PRNGKey(2), (1, 1, 32, 16), jnp.float32)
+    v = _rand(jax.random.PRNGKey(3), (1, 1, 32, 16), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=4, block_q=8,
+                          block_k=8, interpret=True)
+    assert not np.any(np.isnan(np.asarray(out)))
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,l,h,p,g,n,chunk",
+    [
+        (1, 64, 2, 16, 1, 32, 16),
+        (2, 64, 4, 32, 2, 16, 32),
+        (1, 128, 2, 64, 1, 64, 64),
+        (1, 32, 2, 16, 1, 32, 32),   # single chunk
+    ],
+)
+def test_ssd_matches_ref(b, l, h, p, g, n, chunk, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = _rand(keys[0], (b, l, h, p), dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(keys[1], (b, l, h), jnp.float32)
+    ).astype(jnp.float32)
+    a = -jnp.exp(jax.random.normal(keys[2], (h,), jnp.float32) * 0.5)
+    bm = _rand(keys[3], (b, l, g, n), dtype)
+    cm = _rand(keys[4], (b, l, g, n), dtype)
+    y, ht = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    y_ref, ht_ref = ref.ssd_ref(x, dt, a, bm, cm)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(ht), np.asarray(ht_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_initial_state_carries():
+    b, l, h, p, g, n = 1, 32, 2, 16, 1, 8
+    keys = jax.random.split(jax.random.PRNGKey(7), 6)
+    x = _rand(keys[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h))) * 0.5
+    a = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.3)
+    bm = _rand(keys[3], (b, l, g, n), jnp.float32)
+    cm = _rand(keys[4], (b, l, g, n), jnp.float32)
+    h0 = _rand(keys[5], (b, h, n, p), jnp.float32)
+    y, ht = ssd_scan(x, dt, a, bm, cm, h0=h0, chunk=16, interpret=True)
+    y_ref, ht_ref = ref.ssd_ref(x, dt, a, bm, cm, h0=h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ht), np.asarray(ht_ref),
+                               atol=1e-4, rtol=1e-4)
+    # split execution == one-shot execution (the recurrent carry is exact)
+    y1, h1 = ssd_scan(x[:, :16], dt[:, :16], a, bm[:, :16], cm[:, :16],
+                      h0=h0, chunk=16, interpret=True)
+    y2, h2 = ssd_scan(x[:, 16:], dt[:, 16:], a, bm[:, 16:], cm[:, 16:],
+                      h0=h1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.concatenate([y1, y2], axis=1), np.asarray(y),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(ht), atol=1e-4,
+                               rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# TMR vote
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,block", [(256, 64), (1024, 256), (4096, 4096)])
+def test_tmr_vote_matches_ref(n, block):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    b = jnp.array(a)
+    c = jnp.array(a)
+    # corrupt some words of one replica
+    idx = rng.integers(0, n, 5)
+    c = c.at[idx].set(c[idx] ^ jnp.uint32(1 << 7))
+    voted, counts = tmr_vote(a, b, c, block=block, interpret=True)
+    voted_ref, counts_ref = ref.tmr_vote_ref(a, b, c)
+    np.testing.assert_array_equal(np.asarray(voted), np.asarray(voted_ref))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts_ref))
+    assert int(counts[2]) == len(set(idx.tolist()))
+    assert int(counts[0]) == 0
+
+
+def test_tmr_vote_pytree_roundtrip():
+    state = {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": jnp.ones((7,), jnp.bfloat16),
+        "n": jnp.array(3, jnp.int32),
+    }
+    rep = jax.tree.map(lambda x: jnp.stack([x, x, x]), state)
+    # corrupt replica 1's weight
+    rep["w"] = rep["w"].at[1, 0, 0].set(99.0)
+    voted, counts = ops.tmr_vote_pytree(rep, pallas=True, interpret=True)
+    assert float(voted["w"][0, 0]) == 0.0
+    assert int(counts[1]) >= 1 and int(counts[0]) == 0 and int(counts[2]) == 0
+    chex_equal = jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                                   np.asarray(b, np.float32)),
+        {k: v for k, v in voted.items() if k != "w"},
+        {k: v for k, v in state.items() if k != "w"},
+    )
+    del chex_equal
+
+
+# --------------------------------------------------------------------------
+# state hash
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,block", [(128, 32), (1 << 12, 1 << 10),
+                                     (1 << 14, 1 << 14)])
+def test_state_hash_matches_ref(n, block):
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    got = state_hash(v, block=block, interpret=True)
+    want = ref.state_hash_ref(v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_state_hash_detects_single_bitflip():
+    rng = np.random.default_rng(2)
+    v = jnp.asarray(rng.integers(0, 2**32, 2048, dtype=np.uint32))
+    h0 = state_hash(v, block=512, interpret=True)
+    for pos, bit in [(0, 0), (1000, 17), (2047, 31)]:
+        v2 = v.at[pos].set(v[pos] ^ jnp.uint32(1 << bit))
+        h1 = state_hash(v2, block=512, interpret=True)
+        assert not np.array_equal(np.asarray(h0), np.asarray(h1))
+
+
+def test_fingerprint_fused_matches_xla_path():
+    state = {"a": jnp.arange(1000, dtype=jnp.float32),
+             "b": jnp.ones((33,), jnp.bfloat16)}
+    got = ops.fingerprint_fused(state, pallas=True, interpret=True)
+    want = ops.fingerprint_fused(state, pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
