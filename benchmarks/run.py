@@ -51,8 +51,7 @@ def bench_parallelization() -> None:
     The same MISO source runs (a) one instance at a time (the sequential
     semantics) and (b) vectorized across the instance axis (SIMD), which is
     how the mesh shards instances at scale."""
-    from repro.core import run_scan
-    from repro.core.ir import compile_source
+    from repro import api as miso
 
     N = 1 << 14
     SRC = """
@@ -65,20 +64,22 @@ def bench_parallelization() -> None:
     other = new Static({n})
     """
     rng = np.random.default_rng(0)
-    prog = compile_source(
+    prog = miso.compile_source(
         SRC.format(n=N), inputs={"other": {"r": rng.normal(size=N) * 100}})
-    states = prog.init_states(jax.random.PRNGKey(0))
+    exe = miso.compile(prog, donate=False)
+    states = exe.init(jax.random.PRNGKey(0))
 
     steps = 50
-    vec = jax.jit(lambda st: run_scan(prog, st, steps)[0])
+    vec = lambda st: exe.run(st, steps, start_step=0).states
     t_vec = timeit(vec, states)
 
     # sequential semantics: one instance per dispatch — the same source
     # compiled at width 1, which is the baseline the SIMD claim is against.
-    prog1 = compile_source(
+    prog1 = miso.compile_source(
         SRC.format(n=1), inputs={"other": {"r": rng.normal(size=1) * 100}})
-    st1 = prog1.init_states(jax.random.PRNGKey(0))
-    one = jax.jit(lambda st: run_scan(prog1, st, steps)[0])
+    exe1 = miso.compile(prog1, donate=False)
+    st1 = exe1.init(jax.random.PRNGKey(0))
+    one = lambda st: exe1.run(st, steps, start_step=0).states
     t_one = timeit(one, st1)  # per-instance cost
     seq_est = t_one * N
     row("parallelization", "simd_instances", N)
@@ -98,7 +99,8 @@ def bench_mimd_wavefront() -> None:
     (fast stencil / slow stencil) runs lock-step vs wavefront; the wavefront
     trace proves units proceed out of lock-step (max lead > 0) with
     identical final states."""
-    from repro.core import (CellType, MisoProgram, WavefrontRunner, run_scan)
+    from repro import api as miso
+    from repro.core import CellType, MisoProgram
 
     def stencil_cell(name: str, n: int, work: int):
         def init(key):
@@ -115,26 +117,32 @@ def bench_mimd_wavefront() -> None:
     prog = MisoProgram()
     prog.add(stencil_cell("fast", 1 << 10, work=1))
     prog.add(stencil_cell("slow", 1 << 10, work=16))
-    states = prog.init_states(jax.random.PRNGKey(0))
 
     steps = 32
-    t_lock = timeit(lambda: run_scan(prog, states, steps)[0])
-    wf = WavefrontRunner(prog, window=8)
+    lock = miso.compile(prog, backend="lockstep", donate=False)
+    states = lock.init(jax.random.PRNGKey(0))
+    t_lock = timeit(lambda: lock.run(states, steps, start_step=0).states)
+    # two independent chains -> "auto" observes the parallel nature of the
+    # program and resolves to the wavefront back-end
+    wf = miso.compile(prog, backend="auto", window=8)
     t0 = time.perf_counter()
-    wf_final = jax.block_until_ready(wf.run(states, steps))
+    wf_final = jax.block_until_ready(wf.run(states, steps).states)
     t_wf = time.perf_counter() - t0
-    lock_final = run_scan(prog, states, steps)[0]
+    lock_final = lock.run(states, steps, start_step=0).states
     same = all(
         bool(jnp.allclose(a, b))
         for a, b in zip(jax.tree.leaves(wf_final), jax.tree.leaves(lock_final))
     )
+    m = wf.metrics()
+    row("mimd_wavefront", "auto_backend", m["backend"],
+        "compile(backend='auto') resolved")
     row("mimd_wavefront", "lockstep_s", round(t_lock, 4))
     row("mimd_wavefront", "wavefront_s", round(t_wf, 4),
         "same semantics, no global barrier")
     row("mimd_wavefront", "identical_result", same)
-    row("mimd_wavefront", "max_unit_lead_steps", wf.max_lead(),
+    row("mimd_wavefront", "max_unit_lead_steps", m["max_lead"],
         ">0 proves barrier-free overlap")
-    row("mimd_wavefront", "dependency_units", len(wf.units))
+    row("mimd_wavefront", "dependency_units", m["units"])
 
 
 # ===========================================================================
@@ -143,8 +151,9 @@ def bench_mimd_wavefront() -> None:
 def _small_train(redundancy, compare="bitwise", compare_every=1):
     import dataclasses as dc
 
+    from repro import api as miso
     from repro.configs import get_reduced
-    from repro.core import RedundancyPolicy, run_scan
+    from repro.core import RedundancyPolicy
     from repro.data.pipeline import DataConfig
     from repro.models.lm_cells import TrainConfig, make_train_program
     from repro.optim.adamw import OptConfig
@@ -159,12 +168,13 @@ def _small_train(redundancy, compare="bitwise", compare_every=1):
     pol = RedundancyPolicy(level=redundancy, compare=compare,
                            compare_every=compare_every) \
         if redundancy > 1 else RedundancyPolicy()
-    prog = make_train_program(cfg, tcfg).with_policies({"trainer": pol})
-    states = prog.init_states(jax.random.PRNGKey(0))
+    prog = make_train_program(cfg, tcfg)
+    exe = miso.compile(prog, policies={"trainer": pol},
+                       compare_every=compare_every, donate=False)
+    states = exe.init(jax.random.PRNGKey(0))
     steps = 4 * compare_every
 
-    run = jax.jit(
-        lambda st: run_scan(prog, st, steps, compare_every=compare_every)[0])
+    run = lambda st: exe.run(st, steps, start_step=0).states
     return run, states, steps
 
 
@@ -197,9 +207,9 @@ def bench_fault_coverage() -> None:
     A campaign of random single-bit strikes against a DMR/TMR cell; reports
     detection and correction rates (should be 1.0) and the false-positive
     rate on a clean run (should be 0.0)."""
+    from repro import api as miso
     from repro.core import (
-        CellType, FaultSpec, HostRunner, MisoProgram, RedundancyPolicy,
-        run_scan,
+        CellType, FaultSpec, MisoProgram, RedundancyPolicy,
     )
 
     N = 256
@@ -216,8 +226,8 @@ def bench_fault_coverage() -> None:
 
     # --- clean (unreplicated) reference trajectory --------------------------
     plain = MisoProgram().add(CellType("c", init, transition))
-    clean = HostRunner(plain).run(
-        plain.init_states(jax.random.PRNGKey(7)), steps)
+    clean_exe = miso.compile(plain, backend="host")
+    clean = clean_exe.run(clean_exe.init(jax.random.PRNGKey(7)), steps).states
 
     # --- DMR: detect + tie-break correct -----------------------------------
     prog = MisoProgram().add(
@@ -229,10 +239,10 @@ def bench_fault_coverage() -> None:
                          replica=int(rng.integers(2)),
                          index=int(rng.integers(N)),
                          bit=int(rng.integers(32)))
-        r = HostRunner(prog)
-        out = r.run(prog.init_states(jax.random.PRNGKey(7)), steps,
-                    faults=[f])
-        detected += r.ledger.totals.get("c", {"events": 0})["events"] > 0
+        r = miso.compile(prog, backend="host")
+        out = r.run(r.init(jax.random.PRNGKey(7)), steps, faults=[f]).states
+        totals = r.metrics()["fault_totals"]
+        detected += totals.get("c", {"events": 0})["events"] > 0
         corrected += bool(jnp.array_equal(out["c"]["x"][0], clean["c"]["x"]))
     row("fault_coverage", "dmr_detection_rate", detected / n_faults,
         f"{n_faults} random single-bit strikes")
@@ -243,24 +253,25 @@ def bench_fault_coverage() -> None:
     prog3 = MisoProgram().add(
         CellType("c", init, transition,
                  redundancy=RedundancyPolicy(level=3)))
-    st3 = prog3.init_states(jax.random.PRNGKey(7))
+    exe3 = miso.compile(prog3, donate=False)
+    st3 = exe3.init(jax.random.PRNGKey(7))
     voted = 0
     for _ in range(n_faults):
         f = FaultSpec.at(step=int(rng.integers(steps)), cell_id=0,
                          replica=int(rng.integers(3)),
                          index=int(rng.integers(N)),
                          bit=int(rng.integers(32)))
-        out, rep, _ = run_scan(prog3, st3, steps, fault=f)
-        ok = bool(jnp.array_equal(out["c"]["x"][0], clean["c"]["x"]))
-        voted += ok and float(rep["c"]["events"]) > 0
+        res = exe3.run(st3, steps, start_step=0, faults=f)
+        ok = bool(jnp.array_equal(res.states["c"]["x"][0], clean["c"]["x"]))
+        voted += ok and float(res.reports["c"]["events"]) > 0
     row("fault_coverage", "tmr_vote_correction_rate", voted / n_faults,
         "in-graph majority vote")
 
     # --- false positives on a clean run -------------------------------------
-    r = HostRunner(prog)
-    r.run(prog.init_states(jax.random.PRNGKey(7)), steps)
+    r = miso.compile(prog, backend="host")
+    r.run(r.init(jax.random.PRNGKey(7)), steps)
     row("fault_coverage", "false_positive_rate",
-        r.ledger.totals.get("c", {"events": 0})["events"] / steps,
+        r.metrics()["fault_totals"].get("c", {"events": 0})["events"] / steps,
         "replicas of a pure transition are bit-identical")
 
 
@@ -271,7 +282,8 @@ def bench_selective() -> None:
     """Paper §IV: 'Selective replication of key cells may also be applied by
     the runtime, in order to balance the fault tolerance and the overhead.'
     Same two-cell train program, four runtime policies, no code change."""
-    from repro.core import RedundancyPolicy, run_scan
+    from repro import api as miso
+    from repro.core import RedundancyPolicy
     from repro.models.lm_cells import TrainConfig, make_train_program
     from repro.data.pipeline import DataConfig
     from repro.optim.adamw import OptConfig
@@ -293,9 +305,10 @@ def bench_selective() -> None:
     }
     base = None
     for label, pol in policies.items():
-        prog = make_train_program(cfg, tcfg).with_policies(pol)
-        states = prog.init_states(jax.random.PRNGKey(0))
-        fn = jax.jit(lambda s, p=prog: run_scan(p, s, 4)[0])
+        exe = miso.compile(make_train_program(cfg, tcfg), policies=pol,
+                           donate=False)
+        states = exe.init(jax.random.PRNGKey(0))
+        fn = lambda s, e=exe: e.run(s, 4, start_step=0).states
         t = timeit(fn, states, n=3, warmup=1) / 4
         if base is None:
             base = t

@@ -22,10 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api as miso
 from repro.configs import get_reduced
-from repro.core import (
-    FaultLedger, FaultSpec, HostRunner, RedundancyPolicy, run_scan,
-)
+from repro.core import FaultLedger, FaultSpec, RedundancyPolicy
 from repro.data.pipeline import DataConfig
 from repro.models.lm_cells import TrainConfig, make_train_program
 from repro.optim.adamw import OptConfig
@@ -58,8 +57,7 @@ def campaign(prog, n=4, replica=0):
 
 # ---- reference: clean run (no faults, no redundancy) ----------------------
 prog0, st0 = make(RedundancyPolicy())
-runner0 = HostRunner(prog0)
-clean = runner0.run(st0, STEPS)
+clean = miso.compile(prog0, backend="host").run(st0, STEPS).states
 clean_loss = float(jax.device_get(clean["trainer"]["metrics"]["loss"]))
 print(f"clean run           : final loss {clean_loss:.4f}")
 
@@ -67,7 +65,8 @@ print(f"clean run           : final loss {clean_loss:.4f}")
 progA, stA = make(RedundancyPolicy())
 faults = campaign(progA, n=1)
 # without replication the flip lands in the *canonical* state: corrupt result
-finalA, _, _ = run_scan(progA, stA, STEPS, fault=faults[0])
+finalA = miso.compile(progA).run(stA, STEPS, start_step=0,
+                                 faults=faults[0]).states
 lossA = float(jax.device_get(finalA["trainer"]["metrics"]["loss"]))
 pdiff = float(
     sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()
@@ -79,8 +78,9 @@ print(f"A unprotected       : final loss {lossA:.4f}  "
 
 # ---- B: DMR detect + host tie-break ---------------------------------------
 progB, stB = make(RedundancyPolicy(level=2))
-runnerB = HostRunner(progB, ledger=FaultLedger())
-finalB = runnerB.run(stB, STEPS, faults=campaign(progB, n=4))
+exeB = miso.compile(progB, backend="host", ledger=FaultLedger())
+finalB = exeB.run(stB, STEPS, faults=campaign(progB, n=4)).states
+mB = exeB.metrics()
 lossB = float(jax.device_get(
     finalB["trainer"]["metrics"]["loss"]).reshape(-1)[0])
 driftB = float(
@@ -89,14 +89,15 @@ driftB = float(
                         jax.tree.leaves(clean["trainer"]["params"])))
 )
 print(f"B DMR               : final loss {lossB:.4f}  detected "
-      f"{runnerB.ledger.totals['trainer']['events']:.0f} strikes, "
-      f"{len(runnerB.recoveries)} tie-break recoveries, "
+      f"{mB['fault_totals']['trainer']['events']:.0f} strikes, "
+      f"{len(mB['recoveries'])} tie-break recoveries, "
       f"drift vs clean = {driftB:.3e}")
 
 # ---- C: TMR corrects in-graph ----------------------------------------------
 progC, stC = make(RedundancyPolicy(level=3))
-stC_final, reports, _ = run_scan(progC, stC, STEPS,
-                                 fault=campaign(progC, n=1)[0])
+resC = miso.compile(progC).run(stC, STEPS, start_step=0,
+                               faults=campaign(progC, n=1)[0])
+stC_final, reports = resC.states, resC.reports
 lossC = float(jax.device_get(
     stC_final["trainer"]["metrics"]["loss"]).reshape(-1)[0])
 driftC = float(
@@ -110,13 +111,14 @@ print(f"C TMR               : final loss {lossC:.4f}  "
 
 # ---- permanent-fault localization (paper §IV last paragraph) ---------------
 progD, stD = make(RedundancyPolicy(level=2))
-runnerD = HostRunner(progD, ledger=FaultLedger(threshold=3))
+exeD = miso.compile(progD, backend="host",
+                    ledger=FaultLedger(threshold=3))
 # replica 1's "device" is going bad: it faults every 4th step
 bad = [FaultSpec.at(step=s, cell_id=progD.cell_id("trainer"), replica=1,
                     leaf=5, index=17, bit=22)
        for s in range(4, STEPS, 4)]
-runnerD.run(stD, STEPS, faults=bad)
-suspects = runnerD.ledger.permanent_fault_suspects()
+exeD.run(stD, STEPS, faults=bad)
+suspects = exeD.metrics()["suspects"]
 print(f"\npermanent-fault localization: ledger flagged {suspects} "
       "(cell, replica slot) -> maintenance + elastic remesh "
       "(src/repro/ft/elastic.py)")

@@ -13,8 +13,7 @@ Run:  PYTHONPATH=src python examples/image_blend.py
 import numpy as np
 import jax
 
-from repro.core import run_scan
-from repro.core.ir import compile_source
+from repro import api as miso
 
 W, H = 24, 12
 N = W * H
@@ -54,10 +53,14 @@ def make_image(kind: str) -> dict:
 
 
 img1, img2 = make_image("rings"), make_image("checker")
-program = compile_source(SOURCE, inputs={"image1": img1, "image2": img2})
+program = miso.compile_source(SOURCE, inputs={"image1": img1,
+                                              "image2": img2})
 program.validate()
 
-states = program.init_states(jax.random.PRNGKey(0))
+# one front door for the textual IR too: the parsed program compiles to the
+# same executors as the LM training stack
+exe = miso.compile(program, backend="lockstep")
+states = exe.init(jax.random.PRNGKey(0))
 
 RAMP = " .:-=+*#%@"
 
@@ -76,7 +79,7 @@ total = 0
 for i, upto in enumerate(frames):
     n = upto - total
     if n:
-        states, _, _ = run_scan(program, states, n)
+        states = exe.run(states, n).states
         total = upto
     print(f"\n--- transition {total} ---")
     print(ascii_frame(states["image1"]))

@@ -1,22 +1,33 @@
 """Quickstart: the MISO cell calculus in five minutes.
 
-Builds a tiny MISO program with the Python front-end (cells = state +
-transition, paper §II), runs it three ways:
+A MISO program is a set of *cells* — state + transition (paper §II).  You
+write the program ONCE; `miso.compile()` retargets it to any execution
+back-end without touching the source — the paper's central claim, surfaced
+as a single API:
 
-  1. lock-step scan (the production schedule),
-  2. wavefront (dependency-aware, no global barrier — paper §III),
-  3. with DMR replication + an injected bit flip (paper §IV): the mismatch
-     is detected, and the runtime's third tie-breaking execution repairs it.
+    exe = miso.compile(prog, backend="lockstep" | "host" | "wavefront"
+                                      | "auto")
+    states = exe.init(key)                 # replica axes included
+    result = exe.run(states, n_steps)      # -> RunResult(states, reports)
+    exe.metrics()                          # fault ledger / compare stats
+
+This walkthrough compiles one tiny program four ways:
+
+  1. backend="lockstep"  — the fused, jit-able production schedule,
+  2. backend="auto"      — observes the dependency graph and (because this
+     program has an independent cell) resolves to the barrier-free
+     wavefront schedule (paper §III),
+  3. backend="host" + DMR replication + an injected bit flip (paper §IV):
+     the mismatch is detected, and the runtime's third tie-breaking
+     execution repairs it,
+  4. TMR on the lockstep back-end: corrected in-graph by majority vote.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    CellType, FaultSpec, HostRunner, MisoProgram, RedundancyPolicy,
-    WavefrontRunner, compile_step, run_scan,
-)
+from repro import api as miso
 
 # ---------------------------------------------------------------------------
 # 1. A MISO program: a 1-D heat rod (SIMD stencil cell) + a probe cell (MIMD)
@@ -53,57 +64,66 @@ def standalone_init(key):
 
 def standalone_transition(prev):
     # no reads outside itself -> independent dependency component:
-    # the wavefront scheduler can run it ahead without a global barrier
+    # the wavefront back-end can run it ahead without a global barrier
     return {"x": prev["lfsr"]["x"] * 1.000001 + 0.5}
 
 
-prog = MisoProgram()
-prog.add(CellType("rod", rod_init, rod_transition, instances=N))
-prog.add(CellType("probe", probe_init, probe_transition, reads=("rod",)))
-prog.add(CellType("lfsr", standalone_init, standalone_transition))
+prog = miso.MisoProgram()
+prog.add(miso.CellType("rod", rod_init, rod_transition, instances=N))
+prog.add(miso.CellType("probe", probe_init, probe_transition,
+                       reads=("rod",)))
+prog.add(miso.CellType("lfsr", standalone_init, standalone_transition))
 prog.validate()  # checks the §II single-output contract structurally
 
-states0 = prog.init_states(jax.random.PRNGKey(0))
-
 # ---------------------------------------------------------------------------
-# 2. Lock-step execution (jit + scan)
+# 2. Lock-step execution: one compile call, one in-graph scan
 # ---------------------------------------------------------------------------
-final, reports, _ = run_scan(prog, states0, n_steps=100)
+exe = miso.compile(prog, backend="lockstep")
+states0 = exe.init(jax.random.PRNGKey(0))
+final = exe.run(states0, 100, start_step=0).states
 print("lock-step  : after 100 steps  "
       f"peak={float(final['probe']['peak']):7.3f} "
       f"mean={float(final['probe']['mean']):6.3f} (heat diffused)")
 
 # ---------------------------------------------------------------------------
-# 3. Wavefront execution (paper §III: independent cells, no global barrier)
+# 3. backend="auto": the compiler observes the dependency graph.  The lfsr
+#    cell is independent of rod/probe, so auto resolves to the wavefront
+#    schedule (paper §III: no global barrier) — same program, same states.
 # ---------------------------------------------------------------------------
-wf = WavefrontRunner(prog, window=4)
-wfinal = wf.run(states0, n_steps=100)
+wf = miso.compile(prog, backend="auto", window=4)
+wfinal = wf.run(exe.init(jax.random.PRNGKey(0)), 100).states
 same = jnp.allclose(wfinal["rod"]["t"], final["rod"]["t"])
-print(f"wavefront  : identical result={bool(same)}, "
-      f"max unit lead={wf.max_lead()} steps "
+m = wf.metrics()
+print(f"auto       : resolved backend={m['backend']!r}, "
+      f"identical result={bool(same)}, max unit lead={m['max_lead']} steps "
       "(>0 proves barrier-free overlap)")
 
 # ---------------------------------------------------------------------------
-# 4. Dependability (paper §IV): DMR + injected soft error
+# 4. Dependability (paper §IV): DMR + injected soft error.  The SAME program
+#    compiles with a per-cell replication policy; the host back-end runs the
+#    detect/tie-break recovery protocol in the loop.
 # ---------------------------------------------------------------------------
-dmr = prog.with_policies({"rod": RedundancyPolicy(level=2)})
-runner = HostRunner(dmr)
-fault = FaultSpec.at(step=50, cell_id=dmr.cell_id("rod"),
-                     replica=0, leaf=0, index=N // 2, bit=30)
-dstates = dmr.init_states(jax.random.PRNGKey(0))
-dfinal = runner.run(dstates, 100, faults=[fault])
+dmr = miso.compile(prog, backend="host",
+                   policies={"rod": miso.RedundancyPolicy(level=2)})
+fault = miso.FaultSpec.at(step=50, cell_id=prog.cell_id("rod"),
+                          replica=0, leaf=0, index=N // 2, bit=30)
+dfinal = dmr.run(dmr.init(jax.random.PRNGKey(0)), 100, faults=[fault]).states
 repaired = jnp.allclose(dfinal["rod"]["t"][0], final["rod"]["t"])
+dm = dmr.metrics()
 print(f"DMR        : bit flip at step 50 -> detected events="
-      f"{runner.ledger.totals['rod']['events']:.0f}, "
-      f"tie-break recoveries={len(runner.recoveries)}, "
+      f"{dm['fault_totals']['rod']['events']:.0f}, "
+      f"tie-break recoveries={len(dm['recoveries'])}, "
       f"final state repaired={bool(repaired)}")
 
-# TMR corrects in-graph (majority vote), no host round-trip:
-tmr = prog.with_policies({"rod": RedundancyPolicy(level=3)})
-tstates = tmr.init_states(jax.random.PRNGKey(0))
-tfinal, treports, _ = run_scan(tmr, tstates, 100, fault=fault)
-ok = jnp.allclose(tfinal["rod"]["t"][0], final["rod"]["t"])
+# TMR corrects in-graph (majority vote), no host round-trip — so it runs on
+# the fused lockstep back-end:
+tmr = miso.compile(prog, backend="lockstep",
+                   policies={"rod": miso.RedundancyPolicy(level=3)})
+tres = tmr.run(tmr.init(jax.random.PRNGKey(0)), 100, start_step=0,
+               faults=fault)
+ok = jnp.allclose(tres.states["rod"]["t"][0], final["rod"]["t"])
 print(f"TMR        : corrected in-graph={bool(ok)} "
-      f"(votes fixed {float(treports['rod']['events']):.0f} strike)")
+      f"(votes fixed {float(tres.reports['rod']['events']):.0f} strike)")
 print("\nThe same program scales to the 512-chip mesh unchanged — see "
-      "src/repro/launch/dryrun.py")
+      "src/repro/launch/dryrun.py; new back-ends register with "
+      "miso.register_backend without touching this file.")

@@ -4,8 +4,10 @@ Serving is a two-cell MISO program: a static ``weights`` cell (the paper's
 StaticImage pattern — empty transition) and a ``decoder`` cell whose state
 is (KV/SSM cache, last tokens, position) and whose transition greedy-decodes
 one token for the whole batch.  Prefill initializes the decoder state; the
-decode loop is a lock-step scan; selective replication (DMR on the decoder
-only) demonstrates the paper's per-cell redundancy knob at serve time.
+decode loop is the lockstep back-end of ``miso.compile`` (an in-graph scan;
+``Executor.stream`` yields per-token for interactive serving); selective
+replication (DMR on the decoder only) demonstrates the paper's per-cell
+redundancy knob at serve time.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
       PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b

@@ -1,8 +1,9 @@
 """End-to-end LM training through the MISO runtime (library API).
 
 The training loop *is* a MISO program — a ``data`` source cell feeding a
-``trainer`` cell whose transition is fwd + bwd + AdamW — executed by the
-HostRunner with asynchronous checkpointing of the immutable previous buffer
+``trainer`` cell whose transition is fwd + bwd + AdamW — compiled with
+``miso.compile(program, backend="host")`` so the §IV recovery protocol and
+asynchronous checkpointing of the immutable previous buffer run in the loop
 (double buffering makes the snapshot consistent by construction).
 
 Defaults are CPU-sized (a ~11M-param internlm2-family model, 120 steps,
@@ -22,9 +23,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api as miso
 from repro.checkpoint import ckpt
 from repro.configs import get_reduced
-from repro.core import HostRunner
 from repro.data.pipeline import DataConfig, bigram_optimal_xent
 from repro.models.lm_cells import TrainConfig, make_train_program
 from repro.optim.adamw import OptConfig
@@ -55,30 +56,28 @@ tcfg = TrainConfig(
 
 program = make_train_program(cfg, tcfg)
 program.validate()
+exe = miso.compile(
+    program, backend="host",
+    checkpoint_cb=ckpt.callback(args.ckpt_dir),
+    checkpoint_every=40,
+)
 print(f"family={cfg.name}  params={cfg.n_params()/1e6:.1f}M  "
       f"tokens/step={args.batch * args.seq}")
 floor = bigram_optimal_xent(tcfg.data)
 print(f"uniform floor {jnp.log(cfg.vocab_size):.3f} | "
       f"bigram entropy floor {floor:.3f} nats")
 
-states = program.init_states(jax.random.PRNGKey(0))
+states = exe.init(jax.random.PRNGKey(0))
 start = 0
 if ckpt.latest_step(args.ckpt_dir) is not None:
     states, start = ckpt.restore(args.ckpt_dir, states)
     print(f"resumed from checkpoint @ step {start} "
           "(fault-tolerant restart path)")
 
-runner = HostRunner(
-    program,
-    checkpoint_cb=lambda t, prev: ckpt.save(args.ckpt_dir, t, prev,
-                                            blocking=False),
-    checkpoint_every=40,
-)
-
 t0 = time.time()
 for step in range(start, args.steps, 20):
     n = min(20, args.steps - step)
-    states = runner.run(states, n, start_step=step)
+    states = exe.run(states, n, start_step=step).states
     m = jax.device_get(states["trainer"]["metrics"])
     tps = args.batch * args.seq * (step + n - start) / (time.time() - t0)
     print(f"step {step + n:4d}  loss {float(m['loss']):.4f}  "

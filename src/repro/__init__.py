@@ -1,0 +1,32 @@
+"""MISO reproduction — a JAX-native cell calculus with retargetable
+back-ends (paper §II–§IV).
+
+The package front door is ``repro.api`` (conventionally imported as
+``miso``); ``import repro as miso`` works too — the front-door names
+resolve lazily here, so importing ``repro`` itself never touches jax
+(drivers like launch/dryrun must set XLA_FLAGS before jax loads).
+"""
+import importlib
+import importlib.util
+
+
+def __getattr__(name):
+    if name.startswith("_"):
+        raise AttributeError(name)
+    # real submodules (repro.core, repro.launch, ...) resolve as modules
+    if importlib.util.find_spec(f"repro.{name}") is not None:
+        value = importlib.import_module(f"repro.{name}")
+    else:
+        api = importlib.import_module("repro.api")
+        try:
+            value = getattr(api, name)
+        except AttributeError:
+            raise AttributeError(
+                f"module 'repro' has no attribute {name!r}") from None
+    globals()[name] = value  # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    api = importlib.import_module("repro.api")
+    return sorted({"api", *api.__all__})

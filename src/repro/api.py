@@ -1,0 +1,110 @@
+"""MISO package front door: ``miso.compile()`` and the Executor protocol.
+
+    from repro import api as miso          # or: import repro as miso
+
+    prog = miso.MisoProgram()
+    prog.add(miso.CellType("rod", init, transition, instances=64))
+    prog.add(miso.CellType("probe", p_init, p_transition, reads=("rod",)))
+
+    exe = miso.compile(prog, backend="auto")
+    states = exe.init(jax.random.PRNGKey(0))
+    result = exe.run(states, 100)          # -> RunResult
+    print(result.states, exe.metrics())
+
+One compile call retargets the same program IR to every execution
+strategy — the paper's central claim (MISO §III–§IV) surfaced as API.
+
+The Executor protocol
+---------------------
+Every back-end returned by ``compile()`` implements:
+
+``init(key) -> states``
+    Initialize all cell states from a PRNG key.  Replicated cells get
+    their leading replica axis here; when ``compile(..., sharding=...)``
+    was given, leaves are placed under those shardings.
+
+``step(states, *, step_idx=None, fault=None) -> (states', reports)``
+    One transition of the whole program (``compare_every`` transitions on
+    the lockstep back-end).  ``step_idx`` defaults to an internal counter;
+    ``fault`` is an optional armed ``FaultSpec``.
+
+``run(states, n_steps, *, start_step=None, faults=None, collect=None)
+-> RunResult``
+    Execute n_steps transitions.  Returns ``RunResult(states, reports,
+    collected)``: the final state, per-cell redundancy reports summed over
+    the run, and (if ``collect`` was given) the per-step stack of
+    ``collect(states)``.
+
+``stream(states, n_steps=None, ...) -> generator of (states, reports)``
+    The serving loop: yields after every transition; ``n_steps=None``
+    streams until the caller breaks.
+
+``metrics() -> dict``
+    FaultLedger / compare statistics: ``fault_totals`` (per-cell event and
+    mismatch counters), ``flagged`` / ``suspects`` (permanent-fault
+    localization), ``recoveries`` (host tie-breaks), plus backend-specific
+    entries (the wavefront back-end reports ``units`` and ``max_lead``).
+
+Back-ends and the registry
+--------------------------
+``compile(program, backend=...)`` resolves the name in the back-end
+registry (``repro.core.executor.BACKENDS``):
+
+  * ``"lockstep"``  — fused jit step + in-graph ``lax.scan`` run; the
+    production schedule for training and decoding.  Honors
+    ``compare_every`` (replica-compare amortization) and ``donate``.
+  * ``"host"``      — per-step host loop with the paper's §IV recovery:
+    DMR tie-breaking, FaultLedger accounting, async checkpoint callbacks.
+    Options: ``ledger``, ``checkpoint_cb``, ``checkpoint_every``, ``jit``.
+  * ``"wavefront"`` — §III barrier-free schedule over the SCC condensation
+    of the read graph; units free-run up to ``window`` steps ahead.
+  * ``"auto"``      — wavefront when the dependency graph has more than one
+    independent unit, lockstep otherwise: the back-end observes the
+    parallel nature of the program.
+
+New back-ends register with ``@register_backend("name")`` on an
+``Executor`` subclass and become reachable from every existing call site
+without modification (e.g. a future Pallas-fused lock-step).
+
+The old entry points (``compile_step``/``run_scan``/``HostRunner``/
+``WavefrontRunner``) remain available for one release as deprecation
+shims in ``repro.core.schedule``.
+"""
+from repro.core.cell import (  # noqa: F401
+    CellType,
+    MisoSemanticsError,
+    NO_REDUNDANCY,
+    RedundancyPolicy,
+)
+from repro.core.executor import (  # noqa: F401
+    BACKENDS,
+    Executor,
+    RunResult,
+    available_backends,
+    compile,
+    register_backend,
+)
+from repro.core.fault import FaultSpec, random_fault_campaign  # noqa: F401
+from repro.core.graph import DependencyGraph  # noqa: F401
+from repro.core.ir import compile_source  # noqa: F401
+from repro.core.program import MisoProgram  # noqa: F401
+from repro.core.redundancy import FaultLedger  # noqa: F401
+
+__all__ = [
+    "BACKENDS",
+    "CellType",
+    "DependencyGraph",
+    "Executor",
+    "FaultLedger",
+    "FaultSpec",
+    "MisoProgram",
+    "MisoSemanticsError",
+    "NO_REDUNDANCY",
+    "RedundancyPolicy",
+    "RunResult",
+    "available_backends",
+    "compile",
+    "compile_source",
+    "random_fault_campaign",
+    "register_backend",
+]

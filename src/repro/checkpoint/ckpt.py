@@ -1,8 +1,11 @@
 """Sharded checkpointing keyed on the MISO double buffer.
 
 Because MISO transitions read the *previous* state and never mutate it, the
-previous buffer is a consistent snapshot for free: the HostRunner hands it to
-``save`` (optionally on a background thread) while the next step computes.
+previous buffer is a consistent snapshot for free: the host-backend
+executor (``miso.compile(prog, backend="host", checkpoint_cb=...,
+checkpoint_every=k)``) hands it to ``save`` — use ``callback(directory)``
+as the ``checkpoint_cb`` — optionally on a background thread while the
+next step computes.
 
 Format: one ``.npy`` per leaf + ``manifest.json`` with the tree structure,
 dtypes/shapes, step, config fingerprint and a CRC per leaf (restore verifies
@@ -24,6 +27,17 @@ import jax.numpy as jnp
 import numpy as np
 
 Pytree = Any
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """np.dtype from a manifest name, including ml_dtypes extension types
+    (np.dtype("bfloat16") raises — the name isn't registered with numpy)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 def _paths(tree: Pytree) -> list[str]:
@@ -81,6 +95,18 @@ def save(
     return t
 
 
+def callback(directory: str | pathlib.Path, *, blocking: bool = False):
+    """A ``(step, prev_states) -> None`` suitable as the ``checkpoint_cb``
+    option of ``miso.compile(..., backend="host")``.  Non-blocking by
+    default: the device->host snapshot happens in the loop, file IO on a
+    thread."""
+
+    def cb(step: int, prev_states: Pytree) -> None:
+        save(directory, step, prev_states, blocking=blocking)
+
+    return cb
+
+
 def latest_step(directory: str | pathlib.Path) -> Optional[int]:
     d = pathlib.Path(directory)
     if not d.exists():
@@ -118,6 +144,10 @@ def restore(
     for name, leaf, shd in zip(names, leaves_like, shard_leaves):
         arr = np.load(d / f"{name}.npy")
         meta = by_name[name]
+        if arr.dtype.kind == "V":
+            # np.save round-trips extension dtypes (bfloat16, fp8, ...) as
+            # raw void bytes; reinterpret via the manifest-recorded dtype
+            arr = arr.view(_np_dtype(meta["dtype"]))
         if verify:
             crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
             if crc != meta["crc32"]:

@@ -1,0 +1,46 @@
+"""Version compatibility shims for the jax API surface we use.
+
+The repo targets current jax but must degrade gracefully on older
+installs (CI runs whatever wheel the image bakes in):
+
+  * ``shard_map`` — ``jax.shard_map`` (jax >= 0.6) vs
+    ``jax.experimental.shard_map.shard_map`` (older).
+  * ``pallas_compiler_params`` — ``pltpu.CompilerParams`` was named
+    ``TPUCompilerParams`` before jax 0.7.
+"""
+from __future__ import annotations
+
+import jax
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              axis_names=None):
+    """``jax.shard_map`` with the new kwarg names, translated for old jax
+    (``check_vma`` -> ``check_rep``; ``axis_names`` -> the complement
+    ``auto`` set)."""
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """Build TPU pallas compiler params under either API name."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:  # pragma: no cover - older jax
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -21,7 +21,14 @@ from .redundancy import (  # noqa: F401
     majority_vote,
     replicate_state,
 )
-from .schedule import (  # noqa: F401
+from .executor import (  # noqa: F401
+    Executor,
+    RunResult,
+    available_backends,
+    compile,
+    register_backend,
+)
+from .schedule import (  # noqa: F401  (deprecated shims — see executor)
     HostRunner,
     WavefrontRunner,
     compile_step,

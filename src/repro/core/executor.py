@@ -1,0 +1,693 @@
+"""The unified executor layer: one ``compile()`` over every back-end.
+
+The paper's core claim is that one IR (cells = state + transition) can be
+retargeted — sequential, SIMD, MIMD, or replicated for dependability —
+*without changing the source program* (MISO §III–§IV).  This module makes
+that claim true at the API layer: every scheduler is a registered back-end
+behind a single front door,
+
+    exe = miso.compile(program, backend="lockstep" | "host" | "wavefront"
+                                        | "auto")
+    states = exe.init(jax.random.PRNGKey(0))
+    result = exe.run(states, n_steps)          # -> RunResult
+
+and all executors speak the same ``Executor`` protocol:
+
+    init(key)                    -> states        (replica axes included)
+    step(states, ...)            -> (states', reports)
+    run(states, n_steps, ...)    -> RunResult(states, reports, collected)
+    stream(states[, n_steps])    -> generator of (states', reports)
+    metrics()                    -> dict (FaultLedger / compare / backend
+                                    statistics)
+
+Back-ends (see the ``@register_backend`` registry; new back-ends — e.g. a
+Pallas-fused lock-step — plug in without touching any call site):
+
+  * ``lockstep``  — one fused, jit-able step computing every cell's
+    transition from the previous program state (double-buffered); ``run``
+    is an in-graph ``lax.scan``.  Independent cells have no data edges in
+    the emitted HLO, so XLA overlaps them (MIMD) and the mesh shards
+    instance axes (SIMD).  Production path for training and decoding.
+  * ``host``      — lock-step with the paper's §IV recovery protocol in the
+    loop: DMR mismatches trigger a third tie-breaking execution from the
+    immutable previous buffer; a FaultLedger accumulates per-cell counters
+    for permanent-fault localization; checkpoint callbacks snapshot the
+    previous buffer while the next step runs.
+  * ``wavefront`` — the §III "no global barrier" schedule: the SCC
+    condensation of the read graph gives units that advance independently,
+    each free-running up to a bounded buffer window ahead of its consumers.
+  * ``auto``      — resolves at compile time: wavefront when the dependency
+    graph has more than one independent unit (weakly-connected component of
+    the SCC condensation — cells with no direct or indirect dependency in
+    either direction), lock-step otherwise.  "The back-end observes the
+    parallel nature of the program" made automatic.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Iterator, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .cell import CellType
+from .fault import FaultSpec
+from .program import MisoProgram
+from .redundancy import (
+    FaultLedger,
+    make_tiebreak,
+    run_transition,
+)
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# lock-step step compilation (shared by the lockstep and host back-ends)
+# --------------------------------------------------------------------------
+def compile_step(program: MisoProgram, *, with_compare: bool = True):
+    """program -> step(states, step_idx, fault) -> (states', reports).
+
+    Reads always come from the *input* ``states`` (never from the dict being
+    built), which is exactly the paper's read-prev/write-next semantics.
+    ``with_compare=False`` statically elides replica comparison (used by the
+    compare-every-k path so skipped steps pay zero compare cost).
+    """
+    levels = program.levels()
+    names = list(program.cells)
+
+    def step(states: dict, step_idx: jax.Array, fault: Optional[FaultSpec]):
+        new_states = {}
+        reports = {}
+        for cid, name in enumerate(names):
+            cell = program.cells[name]
+            new, rep = run_transition(
+                cell, states, levels,
+                cell_id=cid, step=step_idx, fault=fault,
+                compare_now=with_compare,
+            )
+            new_states[name] = new
+            reports[name] = rep
+        return new_states, reports
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# fault-argument plumbing
+# --------------------------------------------------------------------------
+def _as_fault_list(faults) -> list[FaultSpec]:
+    if faults is None:
+        return []
+    if isinstance(faults, FaultSpec):
+        return [faults]
+    return list(faults)
+
+
+def _single_fault(faults) -> FaultSpec:
+    fs = _as_fault_list(faults)
+    if len(fs) > 1:
+        raise ValueError(
+            "this backend threads a single FaultSpec through the compiled "
+            f"step (step-gated in-graph); got {len(fs)}.  Use "
+            "backend='host' for multi-fault campaigns."
+        )
+    return fs[0] if fs else FaultSpec.none()
+
+
+def _fault_in_window(faults: list, t: int, stride: int):
+    """The armed fault whose step falls in [t, t + stride) — the in-graph
+    step gate fires it on the exact sub-step.  A step() call threads one
+    FaultSpec, so two strikes in the same window cannot both fire."""
+    hits = [f for f in faults if t <= int(f.step) < t + stride]
+    if len(hits) > 1:
+        raise ValueError(
+            f"{len(hits)} faults fall in the step window [{t}, {t + stride})"
+            " but one step() threads a single FaultSpec; split the campaign"
+            " across runs or steps")
+    return hits[0] if hits else None
+
+
+def _is_traced(tree) -> bool:
+    return any(isinstance(l, jax.core.Tracer) for l in jax.tree.leaves(tree))
+
+
+# --------------------------------------------------------------------------
+# result type + protocol base
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class RunResult:
+    """Uniform return of ``Executor.run`` across every back-end.
+
+    states    -- final program state (replica axes included).
+    reports   -- per-cell redundancy reports summed over the run.
+    collected -- per-step stack of ``collect(states)`` (None if no collect).
+    """
+
+    states: dict
+    reports: dict
+    collected: Any = None
+
+
+class Executor:
+    """Uniform execution protocol over a compiled MISO program.
+
+    Back-ends subclass this and register under a name; construct through
+    ``compile(program, backend=...)``, not directly.  The base class
+    provides the generic host-side ``run``/``stream`` loops on top of
+    ``step``; back-ends override what they can do better (the lockstep
+    back-end's ``run`` is one in-graph ``lax.scan``).
+    """
+
+    name: str = "base"
+
+    def __init__(
+        self,
+        program: MisoProgram,
+        *,
+        mesh=None,
+        sharding: Optional[Pytree] = None,
+        compare_every: Optional[int] = None,
+        donate: bool = True,
+    ):
+        self.program = program
+        self.mesh = mesh
+        self.sharding = sharding
+        self.compare_every = compare_every or 1
+        self.donate = donate
+        self.ledger = FaultLedger()
+        self.recoveries: list[tuple[int, str]] = []
+        self._t = 0  # next step index when start_step is not given
+
+    # -- state ----------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        """Initialize all cell states (replicated cells get their replica
+        axis); places leaves under ``sharding`` when one was given."""
+        states = self.program.init_states(key)
+        if self.sharding is not None:
+            states = jax.device_put(states, self.sharding)
+        self._t = 0
+        return states
+
+    # -- single transition ----------------------------------------------
+    @property
+    def step_stride(self) -> int:
+        """Transitions one ``step()`` call advances — ``compare_every`` on
+        the lockstep back-end (its compiled step fuses k sub-steps), 1
+        elsewhere."""
+        return self.compare_every
+
+    def step(
+        self,
+        states: dict,
+        *,
+        step_idx: Optional[int] = None,
+        fault: Optional[FaultSpec] = None,
+    ) -> tuple[dict, dict]:
+        raise NotImplementedError
+
+    # -- n-step execution ------------------------------------------------
+    def run(
+        self,
+        states: dict,
+        n_steps: int,
+        *,
+        start_step: Optional[int] = None,
+        faults=None,
+        collect: Optional[Callable[[dict], Pytree]] = None,
+    ) -> RunResult:
+        stride = self.step_stride
+        if n_steps % stride != 0:
+            raise ValueError("n_steps must be a multiple of compare_every")
+        start = self._t if start_step is None else int(start_step)
+        flist = _as_fault_list(faults)
+        totals = None
+        collected = [] if collect is not None else None
+        for t in range(start, start + n_steps, stride):
+            states, rep = self.step(
+                states, step_idx=t, fault=_fault_in_window(flist, t, stride))
+            totals = rep if totals is None else jax.tree.map(
+                lambda a, b: a + b, totals, rep)
+            if collect is not None:
+                collected.append(collect(states))
+        if collected:
+            collected = jax.tree.map(lambda *xs: jnp.stack(xs), *collected)
+        return RunResult(states=states,
+                         reports=totals if totals is not None else {},
+                         collected=collected)
+
+    # -- serving stream ---------------------------------------------------
+    def stream(
+        self,
+        states: dict,
+        n_steps: Optional[int] = None,
+        *,
+        start_step: Optional[int] = None,
+        faults=None,
+    ) -> Iterator[tuple[dict, dict]]:
+        """Generator of per-step ``(states, reports)`` — the serving loop.
+        Each tick advances ``step_stride`` transitions (1 unless the
+        lockstep back-end was compiled with ``compare_every``).
+        ``n_steps=None`` streams forever (caller breaks)."""
+        stride = self.step_stride
+        if n_steps is not None and n_steps % stride != 0:
+            raise ValueError("n_steps must be a multiple of compare_every")
+        start = self._t if start_step is None else int(start_step)
+        flist = _as_fault_list(faults)
+        t = start
+        while n_steps is None or t < start + n_steps:
+            states, rep = self.step(
+                states, step_idx=t, fault=_fault_in_window(flist, t, stride))
+            yield states, rep
+            t += stride
+
+    # -- statistics -------------------------------------------------------
+    def metrics(self) -> dict:
+        """FaultLedger / compare statistics accumulated so far."""
+        return {
+            "backend": self.name,
+            "steps": self._t,
+            "fault_totals": self.ledger.totals,
+            "flagged": sorted(self.ledger.flagged),
+            "suspects": self.ledger.permanent_fault_suspects(),
+            "recoveries": list(self.recoveries),
+        }
+
+    # -- shared internals -------------------------------------------------
+    def _ledger_update(self, step: int, reports: dict) -> None:
+        if _is_traced(reports):
+            return  # inside an outer trace: no host-side accounting
+        self.ledger.update(step, jax.tree.map(jax.device_get, reports))
+
+    def _mesh_ctx(self):
+        import contextlib
+
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+
+# --------------------------------------------------------------------------
+# back-end registry
+# --------------------------------------------------------------------------
+BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make an Executor subclass reachable through
+    ``compile(program, backend=name)``.  Future back-ends (a Pallas-fused
+    lock-step, a sharded spatial-DMR executor, ...) plug in here without
+    touching any call site."""
+
+    def deco(cls):
+        cls.name = name
+        BACKENDS[name] = cls
+        return cls
+
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(BACKENDS)
+
+
+# --------------------------------------------------------------------------
+# lock-step back-end
+# --------------------------------------------------------------------------
+@register_backend("lockstep")
+class LockstepExecutor(Executor):
+    """Fused single-dispatch schedule; ``run`` is one in-graph scan.
+
+    With ``compare_every=k`` the compiled step advances k transitions with
+    replica comparison only on the last one (statically elided on the
+    others), so ``step``/``run`` granularity is k transitions.
+    """
+
+    def __init__(self, program, **kw):
+        super().__init__(program, **kw)
+        k = self.compare_every
+        self._step_cmp = compile_step(program, with_compare=True)
+        self._step_plain = (compile_step(program, with_compare=False)
+                            if k > 1 else None)
+
+        def step_fn(states, step_idx, fault):
+            for j in range(k - 1):
+                states, _ = self._step_plain(states, step_idx + j, fault)
+            return self._step_cmp(states, step_idx + k - 1, fault)
+
+        #: raw (unjitted) fused step — (states, step_idx, fault) ->
+        #: (states', reports).  Exposed for lowering/cost analysis (the
+        #: dry-run driver) and for embedding in larger jit programs.
+        self.step_fn = step_fn
+        self._jit_step = jax.jit(step_fn)
+        self._run_cache: dict = {}
+
+    def step(self, states, *, step_idx=None, fault=None):
+        t = self._t if step_idx is None else int(step_idx)
+        fault = fault if fault is not None else FaultSpec.none()
+        with self._mesh_ctx():
+            states, reports = self._jit_step(states, jnp.int32(t), fault)
+        # the replica compare runs on the window's last sub-step — attribute
+        # events there, matching run()'s per-step ledger entries
+        self._ledger_update(t + self.compare_every - 1, reports)
+        self._t = t + self.compare_every
+        return states, reports
+
+    def run(self, states, n_steps, *, start_step=None, faults=None,
+            collect=None):
+        k = self.compare_every
+        if n_steps % k != 0:
+            raise ValueError("n_steps must be a multiple of compare_every")
+        start = self._t if start_step is None else int(start_step)
+        fault = _single_fault(faults)
+        iters = n_steps // k
+        # keyed on the collect callable's identity: pass a *stable* collect
+        # to reuse the compiled scan across calls (a fresh lambda per call
+        # re-traces).  Bounded so per-call lambdas can't grow it forever.
+        key = (n_steps, None if collect is None else id(collect))
+        fn = self._run_cache.get(key)
+        if fn is None:
+            while len(self._run_cache) >= 16:
+                self._run_cache.pop(next(iter(self._run_cache)))
+            def scan_run(states, start, fault):
+                idxs = start + jnp.arange(iters, dtype=jnp.int32) * k
+
+                def body(st, idx):
+                    st, rep = self.step_fn(st, idx, fault)
+                    out = (rep, collect(st) if collect is not None else None)
+                    return st, out
+
+                # per-compare-step reports come back stacked so the host can
+                # attribute events to their true step (the FaultLedger's
+                # windowed permanent-fault flagging needs per-step entries)
+                final, (stacked, collected) = jax.lax.scan(body, states, idxs)
+                summed = jax.tree.map(lambda x: jnp.sum(x, axis=0), stacked)
+                return final, summed, stacked, collected
+
+            fn = jax.jit(scan_run,
+                         donate_argnums=(0,) if self.donate else ())
+            self._run_cache[key] = fn
+        with self._mesh_ctx():
+            final, reports, stacked, collected = fn(
+                states, jnp.int32(start), fault)
+        if not _is_traced(stacked):
+            host = jax.tree.map(jax.device_get, stacked)
+            for i in range(iters):
+                self.ledger.update(
+                    start + i * k + k - 1,
+                    jax.tree.map(lambda x, i=i: x[i], host))
+            self._t = start + n_steps
+        return RunResult(states=final, reports=reports, collected=collected)
+
+
+# --------------------------------------------------------------------------
+# host back-end: §IV recovery protocol in the loop
+# --------------------------------------------------------------------------
+@register_backend("host")
+class HostExecutor(Executor):
+    """Lock-step with the paper's §IV recovery in the host loop.
+
+    Extra options: ``ledger`` (a FaultLedger), ``checkpoint_cb(step, prev)``
+    + ``checkpoint_every`` (snapshots of the immutable previous buffer),
+    ``jit`` (default True).  Accepts a *list* of FaultSpecs in ``run`` —
+    one armed strike per step.
+    """
+
+    def __init__(self, program, *, ledger: Optional[FaultLedger] = None,
+                 checkpoint_cb: Optional[Callable[[int, dict], None]] = None,
+                 checkpoint_every: int = 0, jit: bool = True, **kw):
+        super().__init__(program, **kw)
+        if self.compare_every != 1:
+            raise ValueError(
+                "backend='host' compares every step (the §IV protocol needs "
+                "per-step reports); use backend='lockstep' for "
+                "compare_every amortization")
+        if ledger is not None:
+            self.ledger = ledger
+        self.checkpoint_cb = checkpoint_cb
+        self.checkpoint_every = checkpoint_every
+        self._step = compile_step(program)
+        if jit:
+            self._step = jax.jit(self._step)
+        levels = program.levels()
+        self._tiebreakers = {
+            name: (jax.jit(make_tiebreak(cell, levels)) if jit
+                   else make_tiebreak(cell, levels))
+            for name, cell in program.cells.items()
+            if cell.redundancy.level == 2
+        }
+
+    def step(self, states, *, step_idx=None, fault=None):
+        t = self._t if step_idx is None else int(step_idx)
+        prev = states  # immutable previous buffer (double buffering)
+        if (self.checkpoint_every and t % self.checkpoint_every == 0
+                and self.checkpoint_cb is not None):
+            # snapshot of the consistent prev buffer; on real hardware this
+            # serializes concurrently with the next dispatch.
+            self.checkpoint_cb(t, prev)
+        fault = fault if fault is not None else FaultSpec.none()
+        with self._mesh_ctx():
+            states, reports = self._step(prev, jnp.int32(t), fault)
+        host_reports = jax.tree.map(jax.device_get, reports)
+        self.ledger.update(t, host_reports)
+        # paper §IV: DMR mismatch -> third equal transition decides
+        for name, rep in host_reports.items():
+            cell = self.program.cells[name]
+            if cell.redundancy.level == 2 and rep["events"] > 0:
+                states = dict(states)
+                states[name] = self._tiebreakers[name](prev, states[name])
+                self.recoveries.append((t, name))
+        self._t = t + 1
+        return states, host_reports
+
+
+# --------------------------------------------------------------------------
+# wavefront back-end (paper §III: no global barrier)
+# --------------------------------------------------------------------------
+@register_backend("wavefront")
+class WavefrontExecutor(Executor):
+    """Dependency-aware asynchronous execution.
+
+    Units = SCCs of the read graph.  Unit u may compute its step t+1 as soon
+    as every unit it reads has produced step t (it does NOT wait for the rest
+    of the program), bounded by ``window`` so producers never run more than
+    ``window`` steps ahead of their slowest consumer (bounded buffers).
+    Dispatches are independent jit calls, so JAX's async dispatch overlaps
+    them on real hardware.
+    """
+
+    def __init__(self, program, *, window: int = 4, jit: bool = True, **kw):
+        super().__init__(program, **kw)
+        if self.compare_every != 1:
+            raise ValueError("backend='wavefront' does not amortize "
+                             "compares; compare_every must be 1")
+        self.window = window
+        g = program.graph()
+        self.units, self._edges = g.condensation()
+        self._unit_of = {}
+        for i, comp in enumerate(self.units):
+            for n in comp:
+                self._unit_of[n] = i
+        self._levels = program.levels()
+        # external reads per unit
+        self._ext_reads: list[set[str]] = []
+        for comp in self.units:
+            ext = set()
+            for n in comp:
+                for r in program.cells[n].reads:
+                    if self._unit_of[r] != self._unit_of[n]:
+                        ext.add(r)
+            self._ext_reads.append(ext)
+        self._consumers: dict[int, set[int]] = {
+            i: set() for i in range(len(self.units))
+        }
+        for i, deps in self._edges.items():
+            for d in deps:
+                self._consumers[d].add(i)
+        self._unit_step = [self._make_unit_step(i, jit)
+                           for i in range(len(self.units))]
+        self.trace: list[tuple[int, int]] = []  # (unit, step) order
+
+    def _make_unit_step(self, ui: int, jit: bool):
+        comp = self.units[ui]
+        cells = [self.program.cells[n] for n in comp]
+        ids = {n: self.program.cell_id(n) for n in comp}
+
+        def ustep(own: dict, ext: dict, step_idx, fault):
+            env = {**own, **ext}
+            new, reports = {}, {}
+            for cell in cells:
+                new[cell.name], reports[cell.name] = run_transition(
+                    cell, env, self._levels,
+                    cell_id=ids[cell.name], step=step_idx, fault=fault,
+                )
+            return new, reports
+
+        return jax.jit(ustep) if jit else ustep
+
+    def step(self, states, *, step_idx=None, fault=None):
+        """One globally synchronized transition (all units advance once).
+        Read-prev semantics make unit order irrelevant within a step."""
+        t = self._t if step_idx is None else int(step_idx)
+        fault = fault if fault is not None else FaultSpec.none()
+        new, reports = {}, {}
+        for ui in range(len(self.units)):
+            own = {n: states[n] for n in self.units[ui]}
+            ext = {r: states[r] for r in self._ext_reads[ui]}
+            nstates, reps = self._unit_step[ui](own, ext, jnp.int32(t), fault)
+            new.update(nstates)
+            reports.update(reps)
+        self._ledger_update(t, reports)
+        self._t = t + 1
+        return new, reports
+
+    def run(self, states, n_steps, *, start_step=None, faults=None,
+            collect=None):
+        if collect is not None:
+            raise ValueError(
+                "backend='wavefront' advances units out of global step "
+                "order, so a per-step collect of the full program state "
+                "does not exist; use .stream() for per-step observation")
+        start = self._t if start_step is None else int(start_step)
+        fault = _single_fault(faults)
+        nU = len(self.units)
+        clock = [0] * nU
+        # history[name] = deque of (step, state) for produced states
+        hist: dict[str, collections.deque] = {
+            n: collections.deque([(0, states[n])], maxlen=self.window + 1)
+            for n in self.program.cells
+        }
+        self.trace.clear()
+        step_reports: dict[int, dict] = {}  # step -> per-cell reports
+
+        def ready(ui: int) -> bool:
+            t = clock[ui]
+            if t >= n_steps:
+                return False
+            for r in self._ext_reads[ui]:
+                if not any(s == t for s, _ in hist[r]):
+                    return False  # dependency hasn't produced step t yet
+            for k in self._consumers[ui]:
+                if t - clock[k] >= self.window:
+                    return False  # bounded buffer: don't outrun consumers
+            return True
+
+        progressed = True
+        while progressed:
+            progressed = False
+            for ui in range(nU):
+                while ready(ui):
+                    t = clock[ui]
+                    own = {
+                        n: next(st for s, st in hist[n] if s == t)
+                        for n in self.units[ui]
+                    }
+                    ext = {
+                        r: next(st for s, st in hist[r] if s == t)
+                        for r in self._ext_reads[ui]
+                    }
+                    new, reps = self._unit_step[ui](
+                        own, ext, jnp.int32(start + t), fault)
+                    for n, st in new.items():
+                        hist[n].append((t + 1, st))
+                    step_reports.setdefault(t, {}).update(reps)
+                    clock[ui] = t + 1
+                    self.trace.append((ui, t))
+                    progressed = True
+        if any(c != n_steps for c in clock):
+            raise RuntimeError(f"wavefront deadlock: clocks={clock}")
+        # single host sync at the end: attribute events to their true step
+        # so the ledger's windowed permanent-fault flagging works here too
+        totals = None
+        for t in sorted(step_reports):
+            self._ledger_update(start + t, step_reports[t])
+            totals = step_reports[t] if totals is None else jax.tree.map(
+                lambda a, b: a + b, totals, step_reports[t])
+        self._t = start + n_steps
+        final = {n: hist[n][-1][1] for n in self.program.cells}
+        return RunResult(states=final, reports=totals or {})
+
+    def max_lead(self) -> int:
+        """Largest step-gap between units observed during execution — >0
+        proves barrier-free overlap (paper §III)."""
+        lead, clocks = 0, [0] * len(self.units)
+        for ui, t in self.trace:
+            clocks[ui] = t + 1
+            lead = max(lead, max(clocks) - min(clocks))
+        return lead
+
+    def metrics(self) -> dict:
+        m = super().metrics()
+        m["units"] = len(self.units)
+        m["max_lead"] = self.max_lead()
+        m["window"] = self.window
+        return m
+
+
+# --------------------------------------------------------------------------
+# the front door
+# --------------------------------------------------------------------------
+def _auto_backend(program: MisoProgram) -> str:
+    """Wavefront when the SCC condensation of the read graph has >1
+    independent unit (weakly-connected component — no direct or indirect
+    dependency in either direction), lock-step otherwise."""
+    return ("wavefront"
+            if len(program.graph().independent_groups()) > 1 else "lockstep")
+
+
+def compile(
+    program: MisoProgram,
+    *,
+    backend: str = "lockstep",
+    mesh=None,
+    sharding: Optional[Pytree] = None,
+    policies: Optional[Mapping[str, Any]] = None,
+    compare_every: Optional[int] = None,
+    donate: bool = True,
+    **backend_opts,
+) -> Executor:
+    """Compile a MisoProgram into an Executor — the single front door.
+
+    backend       -- "lockstep" | "host" | "wavefront" | "auto" (or any
+                     name added through ``register_backend``).
+    mesh          -- optional jax Mesh; compilation/execution happen under
+                     this mesh context.
+    sharding      -- optional pytree of shardings applied to the states at
+                     ``init``.
+    policies      -- optional {cell_name: RedundancyPolicy}: selective
+                     replication (§IV) applied before compilation, so the
+                     *same* program runs under different dependability
+                     decisions.
+    compare_every -- compare replicas every k-th transition (lockstep-only
+                     beyond-paper amortization).
+    donate        -- donate the input state buffers of the in-graph run
+                     (double-buffer in place; lockstep back-end).
+    backend_opts  -- forwarded to the back-end (host: ledger,
+                     checkpoint_cb, checkpoint_every, jit; wavefront:
+                     window, jit).
+    """
+    if policies:
+        program = program.with_policies(policies)
+    auto = backend == "auto"
+    if auto:
+        backend = _auto_backend(program)
+        if compare_every and compare_every > 1:
+            # only the lockstep back-end amortizes compares; honor the
+            # option rather than letting the graph shape pick a back-end
+            # that would reject it
+            backend = "lockstep"
+    try:
+        cls = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {backend!r}; registered backends: "
+            f"{available_backends()}") from None
+    if auto and backend_opts:
+        # auto may resolve to any back-end, so hints for the others
+        # (e.g. window= when lockstep wins) are dropped, not fatal
+        import inspect
+
+        accepted = set(inspect.signature(cls.__init__).parameters)
+        backend_opts = {k: v for k, v in backend_opts.items()
+                        if k in accepted}
+    return cls(program, mesh=mesh, sharding=sharding,
+               compare_every=compare_every, donate=donate, **backend_opts)

@@ -30,11 +30,17 @@ Pytree = Any
 class MisoProgram:
     cells: dict[str, CellType] = dataclasses.field(default_factory=dict)
 
+    def __post_init__(self):
+        # name -> program-order id; kept in sync by add().  cell_id() is on
+        # the per-cell compile path, so it must not scan the cell list.
+        self._ids = {n: i for i, n in enumerate(self.cells)}
+
     # -- construction ------------------------------------------------------
     def add(self, cell: CellType) -> "MisoProgram":
         if cell.name in self.cells:
             raise ValueError(f"duplicate cell {cell.name!r}")
         self.cells[cell.name] = cell
+        self._ids[cell.name] = len(self._ids)
         return self
 
     def with_policies(
@@ -49,7 +55,11 @@ class MisoProgram:
 
     # -- queries -----------------------------------------------------------
     def cell_id(self, name: str) -> int:
-        return list(self.cells).index(name)
+        try:
+            return self._ids[name]
+        except KeyError:
+            raise ValueError(f"{name!r} is not a cell of this program") \
+                from None
 
     def levels(self) -> dict[str, int]:
         return {n: c.redundancy.level for n, c in self.cells.items()}

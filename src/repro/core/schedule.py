@@ -1,77 +1,47 @@
-"""Back-end schedulers for MISO programs (paper §III).
+"""DEPRECATED back-end entry points — use ``miso.compile()`` instead.
 
-Three executors over the same program IR:
+The three schedulers now live behind the unified executor API
+(``repro.api.compile`` / ``repro.core.executor``):
 
-  * ``compile_step`` / ``run_scan`` — the **lock-step** schedule: one fused,
-    jit-able function computing every cell's transition from the previous
-    program state (double-buffered).  Independent cells have no data edges in
-    the emitted HLO, so XLA's scheduler overlaps them (MIMD) and the mesh
-    shards instance axes (SIMD).  This is the production path for training.
+    old                                  new
+    -----------------------------------  -----------------------------------
+    compile_step(prog)                   miso.compile(prog).step_fn
+    run_scan(prog, st, n, ...)           miso.compile(prog).run(st, n, ...)
+    HostRunner(prog, ...).run(st, n)     miso.compile(prog, backend="host",
+                                             ...).run(st, n).states
+    WavefrontRunner(prog, window=w)      miso.compile(prog,
+                                             backend="wavefront", window=w)
 
-  * ``HostRunner`` — lock-step with the paper's §IV recovery protocol in the
-    loop: DMR mismatches trigger a third tie-breaking execution from the
-    immutable previous buffer; a FaultLedger accumulates per-cell counters
-    for permanent-fault localization; checkpoint callbacks snapshot the
-    previous buffer while the next step runs.
-
-  * ``WavefrontRunner`` — the §III "no global barrier" schedule: the SCC
-    condensation of the read graph gives units that may advance
-    independently; each unit free-runs up to a bounded buffer window ahead
-    of its consumers.  Dispatches are independent jit calls, so JAX's async
-    dispatch overlaps them on real hardware.
+This module keeps the old names working for one release as thin
+deprecation shims over the executor back-ends; it is the only module that
+may still be imported under the old names.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-from typing import Any, Callable, Mapping, Optional
+import warnings
+from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from .cell import CellType
 from .fault import FaultSpec
-from .graph import DependencyGraph
 from .program import MisoProgram
-from .redundancy import (
-    FaultLedger,
-    make_tiebreak,
-    run_transition,
-    zero_report,
-)
+from .redundancy import FaultLedger
+from . import executor as _ex
 
 Pytree = Any
 
 
-# --------------------------------------------------------------------------
-# lock-step compilation
-# --------------------------------------------------------------------------
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.schedule.{old} is deprecated; use {new} "
+        "(see repro.api)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def compile_step(program: MisoProgram, *, with_compare: bool = True):
-    """program -> step(states, step_idx, fault) -> (states', reports).
-
-    Reads always come from the *input* ``states`` (never from the dict being
-    built), which is exactly the paper's read-prev/write-next semantics.
-    ``with_compare=False`` statically elides replica comparison (used by the
-    compare-every-k runner so skipped steps pay zero compare cost).
-    """
-    levels = program.levels()
-    names = list(program.cells)
-
-    def step(states: dict, step_idx: jax.Array, fault: FaultSpec):
-        new_states = {}
-        reports = {}
-        for cid, name in enumerate(names):
-            cell = program.cells[name]
-            new, rep = run_transition(
-                cell, states, levels,
-                cell_id=cid, step=step_idx, fault=fault,
-                compare_now=with_compare,
-            )
-            new_states[name] = new
-            reports[name] = rep
-        return new_states, reports
-
-    return step
+    """Deprecated: use ``miso.compile(program, backend='lockstep').step_fn``."""
+    _warn("compile_step", "miso.compile(program).step_fn")
+    return _ex.compile_step(program, with_compare=with_compare)
 
 
 def run_scan(
@@ -84,208 +54,80 @@ def run_scan(
     compare_every: int = 1,
     start_step: int = 0,
 ):
-    """Pure in-graph execution of n_steps lock-step transitions.
+    """Deprecated: use ``miso.compile(program).run(states, n_steps, ...)``.
 
-    Returns (final_states, summed_reports, collected) where ``collected``
-    stacks ``collect(states)`` per step (None if collect is None).
-    compare_every=k builds a k-step body with comparison only on the last
-    sub-step, so skipped compares cost nothing (beyond-paper amortization).
+    Returns the old (final_states, summed_reports, collected) triple.
+    Note the old index quirk is preserved: with compare_every=k the first
+    transition index was ``start_step * k`` (the executor API takes a plain
+    transition index instead).
     """
-    fault = fault if fault is not None else FaultSpec.none()
-    step_cmp = compile_step(program, with_compare=True)
-    step_plain = compile_step(program, with_compare=False)
-
-    def body(carry, idx):
-        st = carry
-        if compare_every == 1:
-            st, rep = step_cmp(st, idx, fault)
-        else:
-            for j in range(compare_every - 1):
-                st, _ = step_plain(st, idx * compare_every + j, fault)
-            st, rep = step_cmp(st, idx * compare_every + compare_every - 1,
-                               fault)
-        out = (rep, collect(st) if collect is not None else None)
-        return st, out
-
-    if n_steps % compare_every != 0:
-        raise ValueError("n_steps must be a multiple of compare_every")
-    iters = n_steps // compare_every
-    idxs = jnp.arange(start_step, start_step + iters, dtype=jnp.int32)
-    final, (reports, collected) = jax.lax.scan(body, states, idxs)
-    summed = jax.tree.map(lambda x: jnp.sum(x, axis=0), reports)
-    return final, summed, collected
+    _warn("run_scan", "miso.compile(program).run(states, n_steps, ...)")
+    exe = _ex.LockstepExecutor(program, compare_every=compare_every,
+                               donate=False)
+    res = exe.run(states, n_steps, start_step=start_step * compare_every,
+                  faults=fault, collect=collect)
+    return res.states, res.reports, res.collected
 
 
-# --------------------------------------------------------------------------
-# host runner with §IV recovery in the loop
-# --------------------------------------------------------------------------
-@dataclasses.dataclass
 class HostRunner:
-    program: MisoProgram
-    ledger: FaultLedger = dataclasses.field(default_factory=FaultLedger)
-    checkpoint_cb: Optional[Callable[[int, dict], None]] = None
-    checkpoint_every: int = 0
-    jit: bool = True
+    """Deprecated: use ``miso.compile(program, backend='host', ...)``."""
 
-    def __post_init__(self):
-        self._step = compile_step(self.program)
-        if self.jit:
-            self._step = jax.jit(self._step)
-        self._levels = self.program.levels()
-        self._tiebreakers = {
-            name: (jax.jit(make_tiebreak(cell, self._levels))
-                   if self.jit else make_tiebreak(cell, self._levels))
-            for name, cell in self.program.cells.items()
-            if cell.redundancy.level == 2
-        }
-        self.recoveries: list[tuple[int, str]] = []
+    def __init__(self, program: MisoProgram,
+                 ledger: Optional[FaultLedger] = None,
+                 checkpoint_cb: Optional[Callable[[int, dict], None]] = None,
+                 checkpoint_every: int = 0,
+                 jit: bool = True):
+        _warn("HostRunner", "miso.compile(program, backend='host', ...)")
+        self._exe = _ex.HostExecutor(
+            program, ledger=ledger or FaultLedger(),
+            checkpoint_cb=checkpoint_cb, checkpoint_every=checkpoint_every,
+            jit=jit,
+        )
 
-    def run(
-        self,
-        states: dict,
-        n_steps: int,
-        *,
-        faults: Optional[list[FaultSpec]] = None,
-        start_step: int = 0,
-    ) -> dict:
-        fault_by_step: dict[int, FaultSpec] = {}
-        for f in faults or []:
-            fault_by_step[int(f.step)] = f
-        none = FaultSpec.none()
-        for t in range(start_step, start_step + n_steps):
-            prev = states  # immutable previous buffer (double buffering)
-            if self.checkpoint_every and t % self.checkpoint_every == 0:
-                if self.checkpoint_cb is not None:
-                    # snapshot of the consistent prev buffer; on real hardware
-                    # this serializes concurrently with the next dispatch.
-                    self.checkpoint_cb(t, prev)
-            states, reports = self._step(
-                prev, jnp.int32(t), fault_by_step.get(t, none)
-            )
-            host_reports = jax.tree.map(lambda x: jax.device_get(x), reports)
-            self.ledger.update(t, host_reports)
-            # paper §IV: DMR mismatch -> third equal transition decides
-            for name, rep in host_reports.items():
-                cell = self.program.cells[name]
-                if cell.redundancy.level == 2 and rep["events"] > 0:
-                    states[name] = self._tiebreakers[name](prev, states[name])
-                    self.recoveries.append((t, name))
-        return states
+    @property
+    def program(self) -> MisoProgram:
+        return self._exe.program
+
+    @property
+    def ledger(self) -> FaultLedger:
+        return self._exe.ledger
+
+    @property
+    def recoveries(self) -> list:
+        return self._exe.recoveries
+
+    def run(self, states: dict, n_steps: int, *,
+            faults: Optional[list] = None, start_step: int = 0) -> dict:
+        return self._exe.run(states, n_steps, faults=faults,
+                             start_step=start_step).states
 
 
-# --------------------------------------------------------------------------
-# wavefront runner (paper §III: no global barrier)
-# --------------------------------------------------------------------------
-@dataclasses.dataclass
 class WavefrontRunner:
-    """Dependency-aware asynchronous execution.
+    """Deprecated: use ``miso.compile(program, backend='wavefront', ...)``."""
 
-    Units = SCCs of the read graph.  Unit u may compute its step t+1 as soon
-    as every unit it reads has produced step t (it does NOT wait for the rest
-    of the program), bounded by ``window`` so producers never run more than
-    `window` steps ahead of their slowest consumer (bounded buffers).
-    """
+    def __init__(self, program: MisoProgram, window: int = 4,
+                 jit: bool = True):
+        _warn("WavefrontRunner",
+              "miso.compile(program, backend='wavefront', window=...)")
+        self._exe = _ex.WavefrontExecutor(program, window=window, jit=jit)
 
-    program: MisoProgram
-    window: int = 4
-    jit: bool = True
+    @property
+    def program(self) -> MisoProgram:
+        return self._exe.program
 
-    def __post_init__(self):
-        g = self.program.graph()
-        self.units, self._edges = g.condensation()
-        self._unit_of = {}
-        for i, comp in enumerate(self.units):
-            for n in comp:
-                self._unit_of[n] = i
-        self._levels = self.program.levels()
-        # external reads per unit
-        self._ext_reads: list[set[str]] = []
-        for comp in self.units:
-            ext = set()
-            for n in comp:
-                for r in self.program.cells[n].reads:
-                    if self._unit_of[r] != self._unit_of[n]:
-                        ext.add(r)
-            self._ext_reads.append(ext)
-        self._consumers: dict[int, set[int]] = {
-            i: set() for i in range(len(self.units))
-        }
-        for i, deps in self._edges.items():
-            for d in deps:
-                self._consumers[d].add(i)
-        self._unit_step = [self._make_unit_step(i) for i in range(len(self.units))]
-        self.trace: list[tuple[int, int]] = []  # (unit, step) execution order
+    @property
+    def units(self) -> list:
+        return self._exe.units
 
-    def _make_unit_step(self, ui: int):
-        comp = self.units[ui]
-        cells = [self.program.cells[n] for n in comp]
-        ids = {n: self.program.cell_id(n) for n in comp}
-
-        def ustep(own: dict, ext: dict, step_idx, fault):
-            env = {**own, **ext}
-            new, reports = {}, {}
-            for cell in cells:
-                new[cell.name], reports[cell.name] = run_transition(
-                    cell, env, self._levels,
-                    cell_id=ids[cell.name], step=step_idx, fault=fault,
-                )
-            return new, reports
-
-        return jax.jit(ustep) if self.jit else ustep
+    @property
+    def trace(self) -> list:
+        return self._exe.trace
 
     def run(self, states: dict, n_steps: int,
             fault: Optional[FaultSpec] = None) -> dict:
-        fault = fault if fault is not None else FaultSpec.none()
-        nU = len(self.units)
-        clock = [0] * nU
-        # history[name] = deque of (step, state) for produced states
-        hist: dict[str, collections.deque] = {
-            n: collections.deque([(0, states[n])], maxlen=self.window + 1)
-            for n in self.program.cells
-        }
-        self.trace.clear()
-
-        def ready(ui: int) -> bool:
-            t = clock[ui]
-            if t >= n_steps:
-                return False
-            for r in self._ext_reads[ui]:
-                if not any(s == t for s, _ in hist[r]):
-                    return False  # dependency hasn't produced step t yet
-            for k in self._consumers[ui]:
-                if t - clock[k] >= self.window:
-                    return False  # bounded buffer: don't outrun consumers
-            return True
-
-        progressed = True
-        while progressed:
-            progressed = False
-            for ui in range(nU):
-                while ready(ui):
-                    t = clock[ui]
-                    own = {
-                        n: next(st for s, st in hist[n] if s == t)
-                        for n in self.units[ui]
-                    }
-                    ext = {
-                        r: next(st for s, st in hist[r] if s == t)
-                        for r in self._ext_reads[ui]
-                    }
-                    new, _ = self._unit_step[ui](own, ext, jnp.int32(t), fault)
-                    for n, st in new.items():
-                        hist[n].append((t + 1, st))
-                    clock[ui] = t + 1
-                    self.trace.append((ui, t))
-                    progressed = True
-        if any(c != n_steps for c in clock):
-            raise RuntimeError(f"wavefront deadlock: clocks={clock}")
-        return {n: hist[n][-1][1] for n in self.program.cells}
+        # the old runner always started at transition 0 and was idempotent
+        return self._exe.run(states, n_steps, start_step=0,
+                             faults=fault).states
 
     def max_lead(self) -> int:
-        """Largest step-gap between units observed during execution — >0
-        proves barrier-free overlap (paper §III)."""
-        lead, clocks = 0, [0] * len(self.units)
-        for ui, t in self.trace:
-            clocks[ui] = t + 1
-            lead = max(lead, max(clocks) - min(clocks))
-        return lead
+        return self._exe.max_lead()

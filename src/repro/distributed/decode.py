@@ -29,6 +29,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 NEG_INF = -1e30
@@ -114,7 +116,7 @@ def gqa_decode(q, k_new, v_new, cache, pos, *, cfg, ctx):
         out_specs = (P(b_ax, None, None, None), specs["kc"], specs["vc"],
                      specs["sp"])
 
-    out, kc, vc, sp = jax.shard_map(
+    out, kc, vc, sp = shard_map(
         local, mesh=ctx.mesh,
         in_specs=(specs["q"], specs["k_new"], specs["v_new"], specs["kc"],
                   specs["vc"], specs["sp"], specs["pos"]),
@@ -244,7 +246,7 @@ def mla_decode(q_lat, q_rope, ckv_new, krope_new, cache, pos, *, cfg, ctx):
 
     cspec = dict(ckv=P(b_ax, ma, None), krope=P(b_ax, ma, None),
                  sp=P(b_ax, ma))
-    out, ckv, krope, sp = jax.shard_map(
+    out, ckv, krope, sp = shard_map(
         local, mesh=ctx.mesh,
         in_specs=(P(b_ax, None, None, None), P(b_ax, None, None, None),
                   P(b_ax, None), P(b_ax, None),

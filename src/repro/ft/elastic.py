@@ -4,9 +4,11 @@
 What the MISO machinery (core/redundancy.py) covers is *silent* corruption.
 This module covers the rest of the 1000-node story:
 
-  * fail-stop (a pod/host dies): the HostRunner checkpoints the immutable
-    previous buffer every k steps; ``elastic_restore`` re-places the state
-    under a *new* mesh (e.g. data axis 16 -> 12) and training resumes.  The
+  * fail-stop (a pod/host dies): the host-backend executor
+    (``miso.compile(prog, backend="host", checkpoint_cb=...)``) checkpoints
+    the immutable previous buffer every k steps; ``elastic_restore``
+    re-places the state under a *new* mesh (e.g. data axis 16 -> 12) and
+    ``elastic_resume`` hands it back to any Executor to continue.  The
     data cell's PRNG-keyed stream makes the replay deterministic.
   * stragglers: under spatial DMR the two pods compute identical
     transitions; ``StragglerPolicy("first_wins")`` lets the runtime adopt
@@ -50,6 +52,28 @@ def elastic_restore(
 
         shardings = named(new_ctx, pspec_fn(new_ctx, like))
     return ckpt.restore(directory, like, step=step, shardings=shardings)
+
+
+def elastic_resume(
+    directory: str,
+    exe,
+    new_ctx: ShardCtx,
+    *,
+    key: Optional[Any] = None,
+    pspec_fn: Optional[Callable[[ShardCtx, Pytree], Pytree]] = None,
+    step: Optional[int] = None,
+) -> tuple[Pytree, int]:
+    """Restore a checkpoint into an Executor's state structure, re-placed
+    under a new mesh, ready for ``exe.run(states, n, start_step=step)``.
+
+    ``exe`` is any Executor from ``miso.compile`` — the restore structure
+    comes from ``exe.init`` (so replica axes, optimizer slots, etc. match
+    whatever policies the executor was compiled with)."""
+    import jax
+
+    like = exe.init(key if key is not None else jax.random.PRNGKey(0))
+    return elastic_restore(directory, like, new_ctx,
+                           pspec_fn=pspec_fn, step=step)
 
 
 @dataclasses.dataclass

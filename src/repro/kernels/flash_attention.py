@@ -19,6 +19,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import pallas_tpu_compiler_params
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -139,7 +141,7 @@ def flash_attention(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

@@ -22,6 +22,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import pallas_tpu_compiler_params
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -65,7 +67,7 @@ def state_hash(
         in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((g, 4), jnp.uint32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import pallas_tpu_compiler_params
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -58,7 +60,7 @@ def tmr_vote(
             jax.ShapeDtypeStruct((g, block), jnp.uint32),
             jax.ShapeDtypeStruct((g, 4), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

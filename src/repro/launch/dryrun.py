@@ -28,8 +28,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import api as miso
 from repro.configs import ARCHS, CANONICAL, get_config
-from repro.core import FaultSpec, RedundancyPolicy, compile_step
+from repro.core import FaultSpec, RedundancyPolicy
 from repro.data.pipeline import DataConfig
 from repro.distributed import sharding as shd
 from repro.launch import analysis
@@ -200,19 +201,12 @@ def _compile_variant(cfg, shape_name, mesh, ctx, policy, opt,
                               policy=policy, opt=opt,
                               grad_compression=grad_compression)
     if prog is not None:
-        if compare_every > 1:
-            from repro.core.schedule import compile_step as _cs
-
-            base_cmp = _cs(prog, with_compare=True)
-            base_plain = _cs(prog, with_compare=False)
-
-            def step(states, idx, fault):
-                for j in range(compare_every - 1):
-                    states, _ = base_plain(states, idx + j, fault)
-                return base_cmp(states, idx + compare_every - 1, fault)
-        else:
-            step = compile_step(prog)
-        fn = jax.jit(step, donate_argnums=0)
+        # the lockstep back-end's fused step (compare_every sub-steps with
+        # comparison statically elided on all but the last) is exactly the
+        # artifact we lower and cost-analyze
+        exe = miso.compile(prog, backend="lockstep",
+                           compare_every=compare_every)
+        fn = jax.jit(exe.step_fn, donate_argnums=0)
         # the §IV fault-injection hook is a test facility; production steps
         # compile without it (fault=None statically elides inject()).
         args = (specs, jax.ShapeDtypeStruct((), jnp.int32),

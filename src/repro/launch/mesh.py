@@ -15,7 +15,11 @@ The ``pod`` axis has two personalities, selected by the run config:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 (explicit-sharding mode); older jax has no AxisType
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 from repro.distributed.sharding import ShardCtx
 
@@ -23,6 +27,8 @@ from repro.distributed.sharding import ShardCtx
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(
         shape, axes, axis_types=(AxisType.Auto,) * len(axes)
     )

@@ -12,8 +12,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api as miso
 from repro.configs import get_config, get_reduced
-from repro.core import RedundancyPolicy, run_scan
+from repro.core import RedundancyPolicy
 from repro.distributed.sharding import LOCAL
 from repro.models import transformer as T
 from repro.models.lm_cells import ServeConfig, make_serve_program
@@ -72,14 +73,16 @@ def main():
     t_prefill = time.time() - t0
 
     t1 = time.time()
-    final, reports, trace = run_scan(
-        prog, states, args.decode,
+    exe = miso.compile(prog, backend="lockstep", donate=False)
+    res = exe.run(
+        states, args.decode,
         collect=lambda st: (st["decoder"]["tokens"]
                             if policy.level == 1 else
                             jax.tree.map(lambda x: x[0],
                                          st["decoder"]["tokens"])),
     )
-    toks = jax.device_get(trace)
+    reports = res.reports
+    toks = jax.device_get(res.collected)
     t_decode = time.time() - t1
     print(f"prefill {args.prompt_len} tok x{args.batch}: {t_prefill:.2f}s | "
           f"decode {args.decode} steps: {t_decode:.2f}s "

@@ -1,10 +1,11 @@
 """End-to-end training driver.
 
-The training loop is a MISO program (data cell -> trainer cell) executed by
-the HostRunner: per-step DMR tie-breaks, fault-ledger accounting, and
-async checkpoints of the immutable previous buffer.  Fail-stop recovery is
-built in: rerunning with the same --ckpt-dir resumes from the latest intact
-checkpoint (use --simulate-failure N to watch a crash + restart).
+The training loop is a MISO program (data cell -> trainer cell) compiled
+through ``miso.compile(prog, backend="host")``: per-step DMR tie-breaks,
+fault-ledger accounting, and async checkpoints of the immutable previous
+buffer.  Fail-stop recovery is built in: rerunning with the same --ckpt-dir
+resumes from the latest intact checkpoint (use --simulate-failure N to
+watch a crash + restart).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
@@ -22,11 +23,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api as miso
 from repro.checkpoint import ckpt
 from repro.configs import get_config, get_reduced
-from repro.core import (
-    FaultLedger, FaultSpec, HostRunner, RedundancyPolicy,
-)
+from repro.core import FaultLedger, FaultSpec, RedundancyPolicy
 from repro.data.pipeline import DataConfig, bigram_optimal_xent
 from repro.distributed.sharding import LOCAL
 from repro.models.lm_cells import TrainConfig, make_train_program
@@ -106,13 +106,10 @@ def main():
 
     log_rows = []
 
-    def ckpt_cb(step, prev_states):
-        if args.ckpt_dir:
-            ckpt.save(args.ckpt_dir, step, prev_states, blocking=False)
-
-    runner = HostRunner(
-        prog, ledger=FaultLedger(),
-        checkpoint_cb=ckpt_cb if args.ckpt_dir else None,
+    exe = miso.compile(
+        prog, backend="host", ledger=FaultLedger(),
+        checkpoint_cb=(ckpt.callback(args.ckpt_dir) if args.ckpt_dir
+                       else None),
         checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
     )
     faults = []
@@ -130,7 +127,8 @@ def main():
             if args.simulate_failure >= 0 and \
                     step <= args.simulate_failure < step + n:
                 n = args.simulate_failure - step + 1
-            states = runner.run(states, n, faults=faults, start_step=step)
+            states = exe.run(states, n, faults=faults,
+                             start_step=step).states
             step += n
             m = jax.device_get(states["trainer"]["metrics"])
             loss = float(m["loss"].reshape(-1)[0])
@@ -140,7 +138,7 @@ def main():
             row = {"step": step, "loss": round(loss, 4),
                    "grad_norm": round(gn, 3),
                    "tokens_per_s": round(tps, 1),
-                   "recoveries": len(runner.recoveries)}
+                   "recoveries": len(exe.recoveries)}
             log_rows.append(row)
             print(json.dumps(row), flush=True)
             if args.simulate_failure >= 0 and step > args.simulate_failure:
@@ -154,15 +152,15 @@ def main():
                 args.simulate_failure = -1
     finally:
         if args.log_file:
+            m = exe.metrics()
             pathlib.Path(args.log_file).write_text(
                 json.dumps({
                     "config": vars(args), "rows": log_rows,
-                    "ledger": runner.ledger.totals,
-                    "recoveries": runner.recoveries,
+                    "ledger": m["fault_totals"],
+                    "recoveries": m["recoveries"],
                 }, indent=1))
-    if runner.ledger.flagged:
-        print("permanent-fault suspects:",
-              runner.ledger.permanent_fault_suspects())
+    if exe.ledger.flagged:
+        print("permanent-fault suspects:", exe.metrics()["suspects"])
     print(f"done: {step} steps in {time.time()-t0:.1f}s; "
           f"final loss {log_rows[-1]['loss'] if log_rows else float('nan')}")
 

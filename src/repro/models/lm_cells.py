@@ -24,6 +24,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 from repro.core import CellType, MisoProgram
 from repro.data.pipeline import DataConfig, data_cell, sample_batch
 from repro.distributed.collectives import compressed_psum_int8
@@ -201,7 +203,7 @@ def _compressed_grads(gfn, params, batch, ef, ctx: ShardCtx):
         )
         return mean, metrics, new_ef
 
-    mean, metrics, new_ef = jax.shard_map(
+    mean, metrics, new_ef = shard_map(
         local,
         mesh=ctx.mesh,
         in_specs=(P(), P(dp if len(dp) > 1 else dp[0]), P()),

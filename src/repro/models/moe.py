@@ -24,6 +24,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig, MoEConfig
@@ -295,7 +297,7 @@ def _moe_spmd(p: Params, x: jax.Array, cfg: ModelConfig, ctx):
     )
     out_specs = (P(dp, ma, None) if seq_shardable else P(dp, None, None),
                  P())
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(x, p["router"], p["w1"], p["w2"],

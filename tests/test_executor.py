@@ -1,0 +1,363 @@
+"""The unified ``miso.compile()`` executor API: parity across back-ends,
+auto back-end selection, the registry, and the deprecation shims."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as miso
+
+
+# ---------------------------------------------------------------------------
+# shared 3-cell fixture: a self-coupled cell, a reader, and an independent
+# cell (two weakly-connected components -> two wavefront units)
+# ---------------------------------------------------------------------------
+def three_cell_program():
+    p = miso.MisoProgram()
+    p.add(miso.CellType(
+        "a", lambda k: {"x": jnp.linspace(0.0, 1.0, 8, dtype=jnp.float32)},
+        lambda prev: {"x": prev["a"]["x"] * 1.25 + 0.125}))
+    p.add(miso.CellType(
+        "b", lambda k: {"x": jnp.ones((8,), jnp.float32)},
+        lambda prev: {"x": prev["b"]["x"] * 0.5 + prev["a"]["x"] * 2.0},
+        reads=("a",)))
+    p.add(miso.CellType(
+        "c", lambda k: {"x": jnp.float32(1.0)},
+        lambda prev: {"x": prev["c"]["x"] * 1.000001 + 0.5}))
+    return p
+
+
+def chain_program():
+    """One weakly-connected component (a -> b): auto must pick lockstep."""
+    p = miso.MisoProgram()
+    p.add(miso.CellType("a", lambda k: {"x": jnp.float32(1.0)},
+                        lambda prev: {"x": prev["a"]["x"] + 1.0}))
+    p.add(miso.CellType("b", lambda k: {"x": jnp.float32(0.0)},
+                        lambda prev: {"x": prev["b"]["x"] + prev["a"]["x"]},
+                        reads=("a",)))
+    return p
+
+
+def _leaves_equal(t1, t2) -> bool:
+    return all(np.array_equal(a, b)
+               for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)))
+
+
+# ---------------------------------------------------------------------------
+# parity: all three back-ends produce bitwise-identical trajectories
+# ---------------------------------------------------------------------------
+def test_backend_parity_bitwise():
+    prog = three_cell_program()
+    steps = 7
+    trajectories = {}
+    finals = {}
+    for backend in ("lockstep", "host", "wavefront"):
+        exe = miso.compile(prog, backend=backend)
+        states = exe.init(jax.random.PRNGKey(0))
+        trajectories[backend] = [s for s, _ in exe.stream(states, steps)]
+        exe2 = miso.compile(prog, backend=backend)
+        finals[backend] = exe2.run(
+            exe2.init(jax.random.PRNGKey(0)), steps).states
+    for backend in ("host", "wavefront"):
+        for t, (ref, got) in enumerate(zip(trajectories["lockstep"],
+                                           trajectories[backend])):
+            assert _leaves_equal(ref, got), \
+                f"{backend} diverged from lockstep at step {t}"
+        assert _leaves_equal(finals["lockstep"], finals[backend]), \
+            f"{backend} .run() final state differs from lockstep"
+    # stream and run agree with each other too
+    assert _leaves_equal(trajectories["lockstep"][-1], finals["lockstep"])
+
+
+def test_run_reports_and_metrics_uniform():
+    prog = three_cell_program()
+    for backend in ("lockstep", "host", "wavefront"):
+        exe = miso.compile(prog, backend=backend)
+        res = exe.run(exe.init(jax.random.PRNGKey(1)), 4)
+        assert isinstance(res, miso.RunResult)
+        assert set(res.reports) == {"a", "b", "c"}
+        m = exe.metrics()
+        assert m["backend"] == backend
+        assert m["steps"] == 4
+        assert m["recoveries"] == []
+
+
+# ---------------------------------------------------------------------------
+# auto back-end selection
+# ---------------------------------------------------------------------------
+def test_auto_picks_wavefront_on_independent_units():
+    exe = miso.compile(three_cell_program(), backend="auto")
+    assert exe.name == "wavefront"
+    # the SCC condensation has 2 independent units: {a, b} and {c}
+    assert len(exe.program.graph().independent_groups()) == 2
+
+
+def test_auto_picks_lockstep_on_single_component():
+    exe = miso.compile(chain_program(), backend="auto")
+    assert exe.name == "lockstep"
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        miso.compile(three_cell_program(), backend="quantum")
+
+
+# ---------------------------------------------------------------------------
+# registry: new back-ends plug in without touching call sites
+# ---------------------------------------------------------------------------
+def test_register_backend_roundtrip():
+    from repro.core.executor import BACKENDS
+
+    @miso.register_backend("_test_lockstep_twin")
+    class Twin(miso.BACKENDS["lockstep"]):
+        pass
+
+    try:
+        assert "_test_lockstep_twin" in miso.available_backends()
+        exe = miso.compile(three_cell_program(),
+                           backend="_test_lockstep_twin")
+        assert exe.name == "_test_lockstep_twin"
+        res = exe.run(exe.init(jax.random.PRNGKey(0)), 3)
+        assert set(res.states) == {"a", "b", "c"}
+    finally:
+        del BACKENDS["_test_lockstep_twin"]
+
+
+# ---------------------------------------------------------------------------
+# compile() options
+# ---------------------------------------------------------------------------
+def test_policies_option_applies_selective_replication():
+    exe = miso.compile(three_cell_program(), backend="host",
+                       policies={"a": miso.RedundancyPolicy(level=2)})
+    states = exe.init(jax.random.PRNGKey(0))
+    assert states["a"]["x"].shape == (2, 8)  # replica axis
+    fault = miso.FaultSpec.at(step=2, cell_id=exe.program.cell_id("a"),
+                              replica=0, index=3, bit=20)
+    exe.run(states, 5, faults=[fault])
+    m = exe.metrics()
+    assert m["fault_totals"]["a"]["events"] == 1.0
+    assert m["recoveries"] == [(2, "a")]
+
+
+def test_compare_every_matches_per_step_compare():
+    prog = three_cell_program()
+    e1 = miso.compile(prog, compare_every=1, donate=False)
+    e4 = miso.compile(prog, compare_every=4, donate=False)
+    s0 = e1.init(jax.random.PRNGKey(0))
+    r1 = e1.run(s0, 8, start_step=0)
+    r4 = e4.run(s0, 8, start_step=0)
+    assert _leaves_equal(r1.states, r4.states)
+    with pytest.raises(ValueError, match="multiple of compare_every"):
+        e4.run(s0, 6, start_step=0)
+
+
+def test_collect_stacks_per_step():
+    exe = miso.compile(three_cell_program(), donate=False)
+    s0 = exe.init(jax.random.PRNGKey(0))
+    res = exe.run(s0, 5, start_step=0, collect=lambda st: st["a"]["x"])
+    assert res.collected.shape == (5, 8)
+    # the last collected frame is the final state
+    assert np.array_equal(np.asarray(res.collected[-1]),
+                          np.asarray(res.states["a"]["x"]))
+
+
+def test_stream_respects_compare_every_stride():
+    """One stream tick advances compare_every transitions — the step index
+    window must not overlap between ticks (faults would re-inject)."""
+    prog = chain_program()
+    e4 = miso.compile(prog, compare_every=4, donate=False)
+    s0 = e4.init(jax.random.PRNGKey(0))
+    ticks = [s for s, _ in e4.stream(s0, 8, start_step=0)]
+    assert len(ticks) == 2  # 8 transitions / stride 4
+    assert e4.metrics()["steps"] == 8
+    e1 = miso.compile(prog, compare_every=1, donate=False)
+    ref = e1.run(e1.init(jax.random.PRNGKey(0)), 8, start_step=0).states
+    assert _leaves_equal(ticks[-1], ref)
+    with pytest.raises(ValueError, match="multiple of compare_every"):
+        next(e4.stream(s0, 6, start_step=0))
+    # a stream tick threads one FaultSpec: two strikes in one window is
+    # an error, not a silent drop
+    two = [miso.FaultSpec.at(step=1, cell_id=0, bit=20),
+           miso.FaultSpec.at(step=2, cell_id=0, bit=20)]
+    with pytest.raises(ValueError, match="faults fall in the step window"):
+        next(e4.stream(s0, 4, start_step=0, faults=two))
+    # ledger events from stream ticks land on the compare sub-step (t+k-1),
+    # matching run()'s attribution
+    ed = miso.compile(prog, compare_every=4, donate=False,
+                      policies={"a": miso.RedundancyPolicy(
+                          level=3, compare_every=4)})
+    sd = ed.init(jax.random.PRNGKey(0))
+    for _ in ed.stream(sd, 4, start_step=0,
+                       faults=miso.FaultSpec.at(step=3, cell_id=0,
+                                                replica=0, bit=20)):
+        pass
+    assert ed.ledger.recent.get("a") == [3]
+
+
+def test_auto_drops_foreign_backend_hints():
+    """auto may resolve to any back-end; hints for the others are dropped
+    (window= on a program that resolves to lockstep) and compare_every
+    forces the back-end that can honor it."""
+    exe = miso.compile(chain_program(), backend="auto", window=8)
+    assert exe.name == "lockstep"
+    exe2 = miso.compile(three_cell_program(), backend="auto",
+                        compare_every=4, window=8)
+    assert exe2.name == "lockstep"  # wavefront can't amortize compares
+    exe3 = miso.compile(three_cell_program(), backend="auto", window=8)
+    assert exe3.name == "wavefront" and exe3.window == 8
+
+
+def test_stream_is_resumable_midway():
+    exe = miso.compile(three_cell_program(), backend="host")
+    states = exe.init(jax.random.PRNGKey(0))
+    it = exe.stream(states)  # unbounded serving stream
+    states1, _ = next(it)
+    states2, _ = next(it)
+    ref = miso.compile(three_cell_program(), backend="host")
+    expect = ref.run(ref.init(jax.random.PRNGKey(0)), 2).states
+    assert _leaves_equal(states2, expect)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (one release of backwards compatibility)
+# ---------------------------------------------------------------------------
+def test_deprecated_names_warn_and_match_new_api():
+    from repro.core import (
+        HostRunner, WavefrontRunner, compile_step, run_scan,
+    )
+
+    prog = three_cell_program()
+    s0 = prog.init_states(jax.random.PRNGKey(0))
+    new = miso.compile(prog, donate=False).run(s0, 4, start_step=0)
+
+    with pytest.warns(DeprecationWarning):
+        old_final, old_reports, _ = run_scan(prog, s0, 4)
+    assert _leaves_equal(old_final, new.states)
+
+    with pytest.warns(DeprecationWarning):
+        runner = HostRunner(prog)
+    assert _leaves_equal(runner.run(s0, 4), new.states)
+    assert runner.ledger.totals  # ledger attribute still reachable
+
+    with pytest.warns(DeprecationWarning):
+        wf = WavefrontRunner(prog, window=3)
+    assert _leaves_equal(wf.run(s0, 4), new.states)
+    # the old runner was idempotent: a second run starts at transition 0
+    assert _leaves_equal(wf.run(s0, 4), new.states)
+    assert wf.max_lead() >= 0 and len(wf.units) == 3
+
+    with pytest.warns(DeprecationWarning):
+        step = compile_step(prog)
+    from repro.core import FaultSpec
+    st1, _ = step(s0, jnp.int32(0), FaultSpec.none())
+    assert set(st1) == {"a", "b", "c"}
+
+
+def test_ledger_flags_permanent_fault_on_lockstep():
+    """In-graph runs must attribute events to their true step so the
+    windowed permanent-fault flagging works off-host too.  TMR re-syncs
+    replicas in-graph, so each strike is exactly one ledger event."""
+    prog = miso.MisoProgram()
+    prog.add(miso.CellType(
+        "a", lambda k: {"x": jnp.ones((4,), jnp.float32)},
+        lambda prev: {"x": prev["a"]["x"] * 1.5},
+        redundancy=miso.RedundancyPolicy(level=3)))
+    exe = miso.compile(prog, donate=False)
+    states = exe.init(jax.random.PRNGKey(0))
+    # a flaky device: one strike per run, three runs in a 12-step window
+    for i in range(3):
+        states = exe.run(states, 4,
+                         faults=miso.FaultSpec.at(step=4 * i + 1, cell_id=0,
+                                                  replica=1, bit=20)).states
+    m = exe.metrics()
+    assert m["fault_totals"]["a"]["events"] == 3.0
+    assert m["flagged"] == ["a"]  # default threshold 3 within window 100
+    assert exe.ledger.recent["a"] == [1, 5, 9]  # true step attribution
+    assert m["suspects"]["a"]["replica"] == 1  # TMR localizes the slot
+
+
+def test_ledger_step_attribution_on_wavefront():
+    exe = miso.compile(three_cell_program(), backend="wavefront",
+                       policies={"a": miso.RedundancyPolicy(level=3)})
+    states = exe.init(jax.random.PRNGKey(0))
+    exe.run(states, 5,
+            faults=miso.FaultSpec.at(step=2, cell_id=0, replica=0, bit=20))
+    assert exe.metrics()["fault_totals"]["a"]["events"] == 1.0
+    assert exe.ledger.recent["a"] == [2]
+
+
+def test_submodule_access_through_lazy_package():
+    import importlib
+
+    import repro
+
+    assert repro.core.MisoProgram is miso.MisoProgram
+    ckpt = importlib.import_module("repro.checkpoint.ckpt")
+    assert hasattr(ckpt, "restore")
+    with pytest.raises(AttributeError):
+        repro.not_a_thing
+
+
+def test_run_scan_shim_preserves_legacy_start_step_indexing():
+    """Old run_scan started at transition start_step*compare_every; the
+    shim must replay the same index stream (step-keyed faults depend on
+    it)."""
+    from repro.core import run_scan
+
+    prog = miso.MisoProgram()
+    prog.add(miso.CellType(
+        "a", lambda k: {"x": jnp.ones((4,), jnp.float32)},
+        lambda prev: {"x": prev["a"]["x"] * 1.5},
+        redundancy=miso.RedundancyPolicy(level=2)))
+    s0 = prog.init_states(jax.random.PRNGKey(0))
+    fault = miso.FaultSpec.at(step=9, cell_id=0, replica=0, bit=20)
+    with pytest.warns(DeprecationWarning):
+        # start_step=2, k=4 -> transitions 8..11: the step-9 strike
+        # diverges the DMR replicas and the window-final compare sees it
+        _, hit, _ = run_scan(prog, s0, 4, fault=fault,
+                             compare_every=4, start_step=2)
+    with pytest.warns(DeprecationWarning):
+        # same call from transition 0 (transitions 0..3): never fires
+        _, miss, _ = run_scan(prog, s0, 4, fault=fault,
+                              compare_every=4, start_step=0)
+    assert float(hit["a"]["events"]) == 1.0
+    assert float(miss["a"]["events"]) == 0.0
+
+
+def test_host_checkpoint_callback_roundtrips_bf16(tmp_path):
+    """ckpt.callback plugs into the host back-end; restore reinterprets
+    extension dtypes (np.save round-trips bfloat16 as raw void bytes)."""
+    from repro.checkpoint import ckpt
+
+    p = miso.MisoProgram()
+    p.add(miso.CellType(
+        "a", lambda k: {"x": jnp.ones((4,), jnp.bfloat16),
+                        "y": jnp.float32(2.0)},
+        lambda prev: {"x": prev["a"]["x"] + jnp.bfloat16(1.0),
+                      "y": prev["a"]["y"] * 1.5}))
+    exe = miso.compile(p, backend="host",
+                       checkpoint_cb=ckpt.callback(tmp_path, blocking=True),
+                       checkpoint_every=2)
+    states = exe.init(jax.random.PRNGKey(0))
+    final = exe.run(states, 5).states
+    assert ckpt.latest_step(tmp_path) == 4
+    like = miso.compile(p, backend="host").init(jax.random.PRNGKey(0))
+    restored, step = ckpt.restore(tmp_path, like)
+    assert step == 4
+    assert restored["a"]["x"].dtype == jnp.bfloat16
+    # the snapshot is the *previous* buffer at step 4; replay to 5 matches
+    replay = miso.compile(p, backend="host").run(
+        restored, 1, start_step=step).states
+    assert _leaves_equal(replay, final)
+
+
+def test_cell_id_lookup():
+    prog = three_cell_program()
+    assert [prog.cell_id(n) for n in ("a", "b", "c")] == [0, 1, 2]
+    with pytest.raises(ValueError):
+        prog.cell_id("nope")
+    # with_policies rebuilds the program; ids must follow
+    prog2 = prog.with_policies({"b": miso.RedundancyPolicy(level=2)})
+    assert prog2.cell_id("b") == 1

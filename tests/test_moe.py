@@ -16,6 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (dev extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.config import MoEConfig

@@ -4,7 +4,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - property tests skip without the
+    # dev extra; the deterministic §IV tests below still run
+    class _NoStrategies:
+        def integers(self, *a, **k):
+            return None
+
+    st = _NoStrategies()
+
+    def settings(**_k):
+        return lambda f: f
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="needs hypothesis (dev extra)")(f)
 
 from repro.core import (
     CellType, FaultLedger, FaultSpec, HostRunner, MisoProgram,
