@@ -14,7 +14,6 @@ artifacts instead of timing).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import pathlib
 import time
@@ -24,6 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 
 ROWS: list[tuple] = []
+
+#: set by --smoke: tiny shapes/steps so the CI bench-smoke job finishes in
+#: minutes while still exercising every code path (and all parity asserts).
+SMOKE = False
+#: set by --json-out: directory that receives the BENCH_*.json artifacts.
+JSON_DIR = pathlib.Path(".")
 
 
 def row(name: str, metric: str, value, derived: str = "") -> None:
@@ -351,6 +356,95 @@ def bench_kernels() -> None:
 
 
 # ===========================================================================
+# lockstep vs lockstep_pallas: fused-kernel back-end perf + parity
+# ===========================================================================
+def bench_lockstep_pallas() -> None:
+    """Per-step wall time of the Pallas-fused lock-step back-end vs the XLA
+    ``lockstep`` at DMR and TMR across state sizes, with bitwise parity
+    asserted on every case (states AND fault reports, fault injected) — the
+    CI bench-smoke job fails on any divergence.  Emits BENCH_lockstep.json,
+    the perf-trajectory artifact the ROADMAP asks for.
+
+    On CPU the kernels run in interpret mode: the timing documents the
+    interpret-mode overhead (TPU timings come from running the same bench
+    on a TPU host, where the fused path is the fast one).
+    """
+    from repro import api as miso
+    from repro.core import CellType, FaultSpec, MisoProgram, RedundancyPolicy
+    from repro.kernels.ops import on_tpu
+
+    sizes = ((1 << 10, 1 << 12) if SMOKE
+             else (1 << 12, 1 << 14, 1 << 16))
+    steps = 4 if SMOKE else 16
+    reps = 2 if SMOKE else 5
+    cases = []
+    for n in sizes:
+        def init(key, n=n):
+            return {"x": jax.random.normal(key, (n,), jnp.float32)}
+
+        def transition(prev):
+            x = prev["c"]["x"]
+            return {"x": 0.5 * x + 0.25 * jnp.roll(x, 1)}
+
+        for level, mode in ((2, "dmr"), (3, "tmr")):
+            prog = MisoProgram().add(CellType(
+                "c", init, transition,
+                redundancy=RedundancyPolicy(level=level)))
+            fault = FaultSpec.at(step=1, cell_id=0, replica=level - 1,
+                                 index=n // 2, bit=20)
+            times, finals, reports = {}, {}, {}
+            for backend in ("lockstep", "lockstep_pallas"):
+                exe = miso.compile(prog, backend=backend, donate=False)
+                s0 = exe.init(jax.random.PRNGKey(0))
+                t = timeit(
+                    lambda exe=exe, s0=s0:
+                        exe.run(s0, steps, start_step=0).states,
+                    n=reps, warmup=1) / steps
+                times[backend] = t
+                res = exe.run(s0, steps, start_step=0, faults=fault)
+                finals[backend] = res.states
+                reports[backend] = res.reports
+            # parity gate: bitwise-identical states and fault reports
+            for la, lb in zip(jax.tree.leaves(finals["lockstep"]),
+                              jax.tree.leaves(finals["lockstep_pallas"])):
+                assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+                    f"state parity broke at {mode} n={n}"
+            for la, lb in zip(jax.tree.leaves(reports["lockstep"]),
+                              jax.tree.leaves(reports["lockstep_pallas"])):
+                assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+                    f"report parity broke at {mode} n={n}"
+            assert float(reports["lockstep_pallas"]["c"]["events"]) >= 1.0, \
+                f"injected fault went undetected at {mode} n={n}"
+            t_ls = times["lockstep"] * 1e3
+            t_lp = times["lockstep_pallas"] * 1e3
+            row("lockstep_pallas", f"{mode}_n{n}_lockstep_step_ms",
+                round(t_ls, 3))
+            row("lockstep_pallas", f"{mode}_n{n}_pallas_step_ms",
+                round(t_lp, 3),
+                f"x{t_ls / t_lp:.2f} vs lockstep; parity ok")
+            cases.append({
+                "mode": mode, "state_words": n, "steps": steps,
+                "lockstep_step_ms": round(t_ls, 4),
+                "lockstep_pallas_step_ms": round(t_lp, 4),
+                "speedup_x": round(t_ls / t_lp, 3),
+                "parity": True,
+            })
+    payload = {
+        "bench": "lockstep_pallas",
+        "jax": jax.__version__,
+        "device": jax.default_backend(),
+        "interpret": not on_tpu(),
+        "smoke": SMOKE,
+        "cases": cases,
+    }
+    JSON_DIR.mkdir(parents=True, exist_ok=True)
+    out = JSON_DIR / "BENCH_lockstep.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    row("lockstep_pallas", "json_artifact", str(out),
+        f"{len(cases)} cases, all parity-gated")
+
+
+# ===========================================================================
 # roofline table (from dry-run artifacts — the 512-chip numbers)
 # ===========================================================================
 def bench_roofline(dryrun_dir: str = "results/dryrun") -> None:
@@ -386,16 +480,24 @@ BENCHES = {
     "fault_coverage": bench_fault_coverage,
     "selective": bench_selective,
     "kernels": bench_kernels,
+    "lockstep_pallas": bench_lockstep_pallas,
     "roofline": bench_roofline,
 }
 
 
 def main() -> None:
+    global SMOKE, JSON_DIR
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench names (default: all)")
     ap.add_argument("--csv", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes/steps (CI bench-smoke job)")
+    ap.add_argument("--json-out", default=".",
+                    help="directory for BENCH_*.json artifacts")
     args = ap.parse_args()
+    SMOKE = args.smoke
+    JSON_DIR = pathlib.Path(args.json_out)
     names = [n for n in args.only.split(",") if n] or list(BENCHES)
     print("name,metric,value,derived")
     t0 = time.time()

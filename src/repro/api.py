@@ -53,18 +53,31 @@ registry (``repro.core.executor.BACKENDS``):
   * ``"lockstep"``  — fused jit step + in-graph ``lax.scan`` run; the
     production schedule for training and decoding.  Honors
     ``compare_every`` (replica-compare amortization) and ``donate``.
+  * ``"lockstep_pallas"`` — the same schedule with each replicated cell's
+    dependability epilogue fused into ONE Pallas kernel per step: DMR =
+    word compare + both replica fingerprints in a single pass, TMR =
+    majority vote + per-replica mismatch counts + voted fingerprint in a
+    single pass (``core/backend_pallas.py``).  Bitwise-identical states
+    and fault reports to ``lockstep`` (one caveat: mismatch counters are
+    u32-word-granular, equal to element counts for 32-bit dtypes but
+    coarser for packed sub-word dtypes — detection/``events`` semantics
+    are identical; see ``core/backend_pallas.py``).  Options: ``interpret``
+    (default
+    auto: real kernels on TPU, interpret mode elsewhere — so CPU CI
+    exercises the path), ``block``.
   * ``"host"``      — per-step host loop with the paper's §IV recovery:
     DMR tie-breaking, FaultLedger accounting, async checkpoint callbacks.
     Options: ``ledger``, ``checkpoint_cb``, ``checkpoint_every``, ``jit``.
   * ``"wavefront"`` — §III barrier-free schedule over the SCC condensation
     of the read graph; units free-run up to ``window`` steps ahead.
   * ``"auto"``      — wavefront when the dependency graph has more than one
-    independent unit, lockstep otherwise: the back-end observes the
-    parallel nature of the program.
+    independent unit, otherwise the lock-step flavor for the accelerator:
+    ``lockstep_pallas`` on TPU, ``lockstep`` elsewhere.  The back-end
+    observes both the parallel nature of the program and the hardware.
 
 New back-ends register with ``@register_backend("name")`` on an
 ``Executor`` subclass and become reachable from every existing call site
-without modification (e.g. a future Pallas-fused lock-step).
+without modification (exactly how ``lockstep_pallas`` plugs in).
 
 The old entry points (``compile_step``/``run_scan``/``HostRunner``/
 ``WavefrontRunner``) remain available for one release as deprecation

@@ -34,4 +34,5 @@ from .schedule import (  # noqa: F401  (deprecated shims — see executor)
     compile_step,
     run_scan,
 )
+from . import backend_pallas  # noqa: F401  (registers "lockstep_pallas")
 from . import ir  # noqa: F401

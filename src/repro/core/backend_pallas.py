@@ -1,0 +1,181 @@
+"""Pallas-fused lock-step back-end: ``compile(prog, backend="lockstep_pallas")``.
+
+MISO's core claim is that exposing cells (state + transition) to the
+back-end compiler lets it emit executables that are efficient *and*
+dependable — the redundant compare/vote is part of the program, not a
+wrapper around it (MISO §IV).  The XLA ``lockstep`` back-end realizes the
+semantics but lowers a replicated cell's dependability epilogue to a chain
+of separate elementwise/reduce ops; the generic ``ops.py`` wrappers would
+even dispatch ``tmr_vote`` and ``state_hash`` as *separate* kernels.  This
+back-end fuses the whole epilogue into ONE ``pallas_call`` per replicated
+cell per step (``kernels/fused_step.py``):
+
+  DMR — word compare + both replica fingerprints in one HBM pass;
+  TMR — majority vote + per-replica mismatch counts + the voted state's
+        fingerprint in one pass (3 reads + 1 write per word).
+
+The transition itself, fault injection, and the read-prev/write-next
+semantics are byte-for-byte the lockstep path
+(``redundancy.replicated_transition`` is shared), so trajectories and
+fault reports are bitwise-identical to ``lockstep`` — the parity suite in
+``tests/test_executor.py`` holds all four back-ends to that.  One
+deliberate exception: mismatch counters are u32-word-granular (the kernels
+vote/compare the packed word stream), which coincides with element counts
+for 32-bit dtypes and is coarser for packed sub-word dtypes; detection
+(``events``) semantics are identical.
+
+On TPU this is the fast path and ``backend="auto"`` prefers it; on the CPU
+containers used for CI the kernels run with ``interpret=True`` (the
+default off-TPU), keeping the whole path exercised on every PR.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.fused_step import dmr_compare, pick_block, tmr_step
+
+from .executor import LockstepExecutor, register_backend
+from .program import MisoProgram
+from .redundancy import (
+    replicate_state,
+    replicated_transition,
+    run_transition,
+    zero_report,
+)
+
+
+def fused_transition(
+    cell, prevs, levels, *, cell_id, step, fault,
+    compare_now: bool = True, interpret: bool = False,
+    block: Optional[int] = None,
+):
+    """One replicated cell transition with the Pallas-fused epilogue.
+
+    Mirrors ``redundancy.run_transition`` for R > 1 cells: same replicated
+    transition + injection (shared code), then one fused kernel invocation
+    instead of the jnp compare/vote.  ``compare_now`` is static: elided
+    compare steps skip the DMR kernel entirely and zero the TMR counters
+    (the vote still runs and re-synchronizes replicas every step, exactly
+    like the lockstep path).
+    """
+    policy = cell.redundancy
+    R = policy.level
+    new = replicated_transition(cell, prevs, levels, cell_id=cell_id,
+                                step=step, fault=fault)
+    reps = [jax.tree.map(lambda x, i=i: x[i], new) for i in range(R)]
+    layout = ops.word_layout(reps[0])
+    blk = pick_block(layout.total) if block is None else block
+    report = zero_report()
+
+    if R == 2:
+        if not compare_now:
+            return new, report
+        flats = [ops.flatten_to_u32(r, multiple=blk, layout=layout)
+                 for r in reps]
+        diff_words, fps = dmr_compare(flats[0], flats[1], block=blk,
+                                      interpret=interpret)
+        if policy.compare == "hash":
+            # what a spatial deployment ships cross-pod: 2 x 16 bytes
+            diff = jnp.sum((fps[0] != fps[1]).astype(jnp.float32))
+        else:
+            diff = diff_words.astype(jnp.float32)
+        report["mismatch_elems"] = diff
+        report["events"] = (diff > 0).astype(jnp.float32)
+        return new, report
+
+    # R == 3: in-graph correction
+    flats = [ops.flatten_to_u32(r, multiple=blk, layout=layout)
+             for r in reps]
+    voted_flat, counts, _fp = tmr_step(*flats, block=blk,
+                                       interpret=interpret)
+    voted = ops.unflatten_from_u32(voted_flat, reps[0], layout=layout)
+    per = counts.astype(jnp.float32)
+    if policy.compare == "hash":
+        per = (per > 0).astype(jnp.float32)  # indicator, like lockstep-hash
+    if not compare_now:
+        per = jnp.zeros_like(per)
+    report["per_replica"] = ((per > 0).astype(jnp.float32)
+                             * jnp.maximum(per, 1.0))
+    report["mismatch_elems"] = jnp.sum(per)
+    report["events"] = (jnp.sum(per) > 0).astype(jnp.float32)
+    # re-synchronize replicas to the voted value (prevents divergence)
+    return replicate_state(voted, R), report
+
+
+def compile_step_pallas(
+    program: MisoProgram, *, with_compare: bool = True,
+    interpret: bool = False, block: Optional[int] = None,
+):
+    """program -> step(states, step_idx, fault) with the fused epilogue.
+
+    Unreplicated cells have no redundancy work and take the plain
+    ``run_transition`` path; each replicated cell gets one fused kernel.
+    """
+    levels = program.levels()
+    names = list(program.cells)
+
+    def step(states: dict, step_idx, fault):
+        new_states = {}
+        reports = {}
+        for cid, name in enumerate(names):
+            cell = program.cells[name]
+            if (cell.redundancy.level == 1
+                    or ops.word_layout(states[name]).total == 0):
+                new, rep = run_transition(
+                    cell, states, levels,
+                    cell_id=cid, step=step_idx, fault=fault,
+                    compare_now=with_compare,
+                )
+            else:
+                new, rep = fused_transition(
+                    cell, states, levels,
+                    cell_id=cid, step=step_idx, fault=fault,
+                    compare_now=with_compare, interpret=interpret,
+                    block=block,
+                )
+            new_states[name] = new
+            reports[name] = rep
+        return new_states, reports
+
+    return step
+
+
+@register_backend("lockstep_pallas")
+class LockstepPallasExecutor(LockstepExecutor):
+    """Lock-step schedule with the fused Pallas redundancy epilogue.
+
+    Drops in behind the ``Executor`` protocol with zero call-site changes:
+    the scan ``run``/``stream``, ``compare_every`` amortization, fault
+    threading, and ledger attribution are all inherited from the lockstep
+    back-end — only the per-cell step compiler differs.
+
+    Extra options:
+      interpret -- run the kernels in Pallas interpret mode.  Default:
+                   ``None`` = auto (False on TPU, True elsewhere — CPU CI
+                   exercises the kernel path on every PR).
+      block     -- words per kernel grid step (default: auto per state
+                   size, capped at 64Ki words = 256 KiB per replica).
+    """
+
+    def __init__(self, program, *, interpret: Optional[bool] = None,
+                 block: Optional[int] = None, **kw):
+        # resolved before super().__init__ triggers _compile_step
+        self.interpret = (not ops.on_tpu()) if interpret is None \
+            else bool(interpret)
+        self.block = block
+        super().__init__(program, **kw)
+
+    def _compile_step(self, *, with_compare: bool):
+        return compile_step_pallas(
+            self.program, with_compare=with_compare,
+            interpret=self.interpret, block=self.block,
+        )
+
+    def metrics(self) -> dict:
+        m = super().metrics()
+        m["interpret"] = self.interpret
+        return m

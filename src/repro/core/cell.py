@@ -18,7 +18,7 @@ with ``jax.eval_shape``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping, Sequence
+from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp

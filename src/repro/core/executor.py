@@ -6,8 +6,8 @@ retargeted — sequential, SIMD, MIMD, or replicated for dependability —
 that claim true at the API layer: every scheduler is a registered back-end
 behind a single front door,
 
-    exe = miso.compile(program, backend="lockstep" | "host" | "wavefront"
-                                        | "auto")
+    exe = miso.compile(program, backend="lockstep" | "lockstep_pallas"
+                                        | "host" | "wavefront" | "auto")
     states = exe.init(jax.random.PRNGKey(0))
     result = exe.run(states, n_steps)          # -> RunResult
 
@@ -20,14 +20,18 @@ and all executors speak the same ``Executor`` protocol:
     metrics()                    -> dict (FaultLedger / compare / backend
                                     statistics)
 
-Back-ends (see the ``@register_backend`` registry; new back-ends — e.g. a
-Pallas-fused lock-step — plug in without touching any call site):
+Back-ends (see the ``@register_backend`` registry; new back-ends plug in
+without touching any call site):
 
   * ``lockstep``  — one fused, jit-able step computing every cell's
     transition from the previous program state (double-buffered); ``run``
     is an in-graph ``lax.scan``.  Independent cells have no data edges in
     the emitted HLO, so XLA overlaps them (MIMD) and the mesh shards
     instance axes (SIMD).  Production path for training and decoding.
+  * ``lockstep_pallas`` — the same schedule with the per-cell redundancy
+    epilogue (DMR compare / TMR vote + counts + fingerprint) fused into
+    one Pallas kernel per replicated cell per step (see
+    ``core/backend_pallas.py``); TPU fast path, ``interpret=True`` off-TPU.
   * ``host``      — lock-step with the paper's §IV recovery protocol in the
     loop: DMR mismatches trigger a third tie-breaking execution from the
     immutable previous buffer; a FaultLedger accumulates per-cell counters
@@ -39,19 +43,19 @@ Pallas-fused lock-step — plug in without touching any call site):
   * ``auto``      — resolves at compile time: wavefront when the dependency
     graph has more than one independent unit (weakly-connected component of
     the SCC condensation — cells with no direct or indirect dependency in
-    either direction), lock-step otherwise.  "The back-end observes the
-    parallel nature of the program" made automatic.
+    either direction), lock-step otherwise (``lockstep_pallas`` on TPU,
+    ``lockstep`` elsewhere).  "The back-end observes the parallel nature of
+    the program" made automatic.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Callable, Iterator, Mapping, Optional, Sequence
+from typing import Any, Callable, Iterator, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .cell import CellType
 from .fault import FaultSpec
 from .program import MisoProgram
 from .redundancy import (
@@ -322,11 +326,18 @@ class LockstepExecutor(Executor):
     others), so ``step``/``run`` granularity is k transitions.
     """
 
+    def _compile_step(self, *, with_compare: bool):
+        """Step-function factory hook.  Subclasses (the Pallas-fused
+        ``lockstep_pallas`` back-end) swap the per-cell transition/compare
+        implementation here; the scan ``run``, ``stream``, fault-window
+        plumbing, and per-step ledger attribution above are shared."""
+        return compile_step(self.program, with_compare=with_compare)
+
     def __init__(self, program, **kw):
         super().__init__(program, **kw)
         k = self.compare_every
-        self._step_cmp = compile_step(program, with_compare=True)
-        self._step_plain = (compile_step(program, with_compare=False)
+        self._step_cmp = self._compile_step(with_compare=True)
+        self._step_plain = (self._compile_step(with_compare=False)
                             if k > 1 else None)
 
         def step_fn(states, step_idx, fault):
@@ -626,12 +637,25 @@ class WavefrontExecutor(Executor):
 # --------------------------------------------------------------------------
 # the front door
 # --------------------------------------------------------------------------
+def _lockstep_flavor() -> str:
+    """The lock-step back-end ``auto`` resolves to: on TPU the Pallas-fused
+    ``lockstep_pallas`` (one fused kernel per replicated cell per step) is
+    the fast path; elsewhere the XLA-fused ``lockstep``.  (Named explicitly,
+    ``lockstep_pallas`` still runs off-TPU via ``interpret=True``.)"""
+    from repro.kernels import ops
+
+    if ops.on_tpu() and "lockstep_pallas" in BACKENDS:
+        return "lockstep_pallas"
+    return "lockstep"
+
+
 def _auto_backend(program: MisoProgram) -> str:
     """Wavefront when the SCC condensation of the read graph has >1
     independent unit (weakly-connected component — no direct or indirect
     dependency in either direction), lock-step otherwise."""
     return ("wavefront"
-            if len(program.graph().independent_groups()) > 1 else "lockstep")
+            if len(program.graph().independent_groups()) > 1
+            else _lockstep_flavor())
 
 
 def compile(
@@ -647,8 +671,9 @@ def compile(
 ) -> Executor:
     """Compile a MisoProgram into an Executor — the single front door.
 
-    backend       -- "lockstep" | "host" | "wavefront" | "auto" (or any
-                     name added through ``register_backend``).
+    backend       -- "lockstep" | "lockstep_pallas" | "host" | "wavefront"
+                     | "auto" (or any name added through
+                     ``register_backend``).
     mesh          -- optional jax Mesh; compilation/execution happen under
                      this mesh context.
     sharding      -- optional pytree of shardings applied to the states at
@@ -663,18 +688,18 @@ def compile(
                      (double-buffer in place; lockstep back-end).
     backend_opts  -- forwarded to the back-end (host: ledger,
                      checkpoint_cb, checkpoint_every, jit; wavefront:
-                     window, jit).
+                     window, jit; lockstep_pallas: interpret, block).
     """
     if policies:
         program = program.with_policies(policies)
     auto = backend == "auto"
     if auto:
         backend = _auto_backend(program)
-        if compare_every and compare_every > 1:
-            # only the lockstep back-end amortizes compares; honor the
+        if compare_every and compare_every > 1 and backend == "wavefront":
+            # only the lock-step back-ends amortize compares; honor the
             # option rather than letting the graph shape pick a back-end
             # that would reject it
-            backend = "lockstep"
+            backend = _lockstep_flavor()
     try:
         cls = BACKENDS[backend]
     except KeyError:

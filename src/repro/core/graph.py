@@ -15,7 +15,7 @@ the read graph we derive:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Mapping, Sequence
+from typing import Mapping
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,7 +35,6 @@ import dataclasses
 import re
 from typing import Any, Optional
 
-import jax
 import jax.numpy as jnp
 
 from .cell import CellType, MisoSemanticsError

@@ -8,10 +8,9 @@ launcher) compile it for a device mesh.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping, Optional, Sequence
+from typing import Any, Mapping, Optional
 
 import jax
-import jax.numpy as jnp
 
 from .cell import (
     CellType,

@@ -25,12 +25,12 @@ placement) and "hash" (beyond-paper 128-bit fingerprints, O(1) traffic).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping, Optional
+from typing import Any, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .cell import CellType, RedundancyPolicy, restrict_reads
+from .cell import CellType, restrict_reads
 from .fault import FaultSpec, bitcast_back, bitcast_uint, inject
 
 Pytree = Any
@@ -150,6 +150,43 @@ def _replica_in_axes(cell: CellType, levels: Mapping[str, int]) -> dict:
 # --------------------------------------------------------------------------
 # the executor
 # --------------------------------------------------------------------------
+def _canonical_reads(
+    cell: CellType, prevs: Mapping[str, Pytree], levels: Mapping[str, int]
+) -> dict:
+    """Reads with cells replicated at a *different* level canonicalized."""
+    R = cell.redundancy.level
+    reads = restrict_reads(cell, prevs)
+    canon = {}
+    for name, val in reads.items():
+        lr = levels.get(name, 1)
+        if lr != 1 and lr != R:
+            canon[name] = canonical_state(val, lr)
+        else:
+            canon[name] = val
+    return canon
+
+
+def replicated_transition(
+    cell: CellType,
+    prevs: Mapping[str, Pytree],
+    levels: Mapping[str, int],
+    *,
+    cell_id: int,
+    step: jax.Array,
+    fault: Optional[FaultSpec] = None,
+) -> Pytree:
+    """The replicated front half of ``run_transition`` (R > 1): canonicalize
+    reads, vmap the transition over the replica axis, inject the armed
+    fault.  Shared with the Pallas-fused back-end, which swaps only the
+    compare/vote epilogue — so both paths are bitwise-identical up to it."""
+    canon = _canonical_reads(cell, prevs, levels)
+    axes = _replica_in_axes(cell, {k: levels.get(k, 1) for k in canon})
+    new = jax.vmap(cell.transition, in_axes=(axes,))(canon)
+    if fault is not None:
+        new = inject(fault, cell_id=cell_id, step=step, replicated_state=new)
+    return new
+
+
 def run_transition(
     cell: CellType,
     prevs: Mapping[str, Pytree],
@@ -167,19 +204,9 @@ def run_transition(
     """
     policy = cell.redundancy
     R = policy.level
-    reads = restrict_reads(cell, prevs)
-
-    # canonicalize reads from cells replicated at a *different* level
-    canon = {}
-    for name, val in reads.items():
-        lr = levels.get(name, 1)
-        if lr != 1 and lr != R:
-            canon[name] = canonical_state(val, lr)
-        else:
-            canon[name] = val
 
     if R == 1:
-        new = cell.transition(canon)
+        new = cell.transition(_canonical_reads(cell, prevs, levels))
         if fault is not None:
             # unprotected cells are still physically strikeable — the flip
             # simply goes undetected (the paper's motivating failure mode)
@@ -189,11 +216,8 @@ def run_transition(
             new = jax.tree.map(lambda x: x[0], exp)
         return new, zero_report()
 
-    axes = _replica_in_axes(cell, {k: levels.get(k, 1) for k in canon})
-    new = jax.vmap(cell.transition, in_axes=(axes,))(canon)
-
-    if fault is not None:
-        new = inject(fault, cell_id=cell_id, step=step, replicated_state=new)
+    new = replicated_transition(cell, prevs, levels, cell_id=cell_id,
+                                step=step, fault=fault)
 
     report = zero_report()
     reps = [jax.tree.map(lambda x, i=i: x[i], new) for i in range(R)]

@@ -296,10 +296,6 @@ def zero_pspecs(ctx: ShardCtx, param_specs: Pytree, opt_state: Pytree,
     shape so the same spec applies; scale drops the last dim."""
     mesh = ctx.mesh
     dp = ctx.data_axes
-    dp_size = 1
-    for a in dp:
-        dp_size *= mesh.shape[a]
-    dp_axes = dp if len(dp) > 1 else dp[0]
 
     pleaves, ptree = jax.tree.flatten(params)
     sleaves = ptree.flatten_up_to(param_specs)
@@ -336,9 +332,6 @@ def zero_pspecs(ctx: ShardCtx, param_specs: Pytree, opt_state: Pytree,
             shape, base = spec_by_id[i]
             if isinstance(leaf, dict) and "q" in leaf:
                 qspec = zspec(shape, base)
-                sspec = P(*tuple(qspec)[:-1], *(
-                    () if len(tuple(qspec)) < len(shape) else (None,)
-                ))
                 # scale has shape param.shape[:-1] + (nblocks,)
                 sspec = P(*(tuple(qspec)[:-1] + (None,)))
                 out.append({"q": qspec, "scale": sspec})

@@ -24,7 +24,6 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.distributed.sharding import ShardCtx

@@ -1,0 +1,154 @@
+"""Fused per-step redundancy kernels for the ``lockstep_pallas`` back-end.
+
+The XLA lockstep back-end lowers a replicated cell's compare/vote to a
+chain of separate elementwise + reduce ops (and the generic ``ops.py``
+wrappers dispatch ``tmr_vote`` and ``state_hash`` as *separate* kernels, so
+the replica states cross HBM twice).  These kernels collapse the whole
+per-step dependability epilogue into ONE ``pallas_call`` per cell:
+
+  * ``dmr_compare`` — word-level bitwise compare of the two replica
+    streams AND both replicas' 4 x uint32 fingerprints, in a single pass
+    (2 reads per word, no extra hash dispatches).  The fingerprint is what
+    a spatial-DMR deployment ships cross-pod (16 bytes instead of the
+    state), and it is bit-identical to ``state_hash`` over the same
+    padded stream.
+  * ``tmr_step``    — bitwise 2-of-3 majority vote, per-replica mismatch
+    word counts (the permanent-fault localization signal), and the voted
+    stream's fingerprint, in a single pass (3 reads + 1 write per word).
+
+Both kernels emit per-grid-block partials that the wrappers combine
+exactly (wraparound uint32 sums / xors and integer sums), so results are
+independent of the block size and bit-identical to the separate
+``tmr_vote``/``state_hash`` kernels they fuse.  On CPU CI they run with
+``interpret=True``; on TPU they are the fast path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+
+from repro.compat import pallas_tpu_compiler_params
+
+# the fingerprint accumulator math lives in ONE place (state_hash.py) so
+# the bit-for-bit equality the parity gates rely on cannot drift
+from .state_hash import block_fingerprint, combine_partials, global_indices
+
+#: VMEM-friendly default: 64Ki words = 256 KiB per replica stream.
+DEFAULT_BLOCK = 64 * 1024
+
+
+def pick_block(total_words: int, cap: int = DEFAULT_BLOCK) -> int:
+    """Words per grid step for a state of ``total_words`` u32 words: one
+    lane-aligned block for small states, the VMEM cap for large ones (the
+    flat stream is zero-padded to a multiple of the block)."""
+    if total_words >= cap:
+        return cap
+    return max(128, -(-total_words // 128) * 128)
+
+
+# --------------------------------------------------------------------------
+# DMR: compare + both fingerprints, one pass
+# --------------------------------------------------------------------------
+def _dmr_kernel(a_ref, b_ref, diff_ref, hash_ref, *, block: int):
+    a = a_ref[...].reshape(1, block)
+    b = b_ref[...].reshape(1, block)
+    diff_ref[0, 0] = jnp.sum((a != b).astype(jnp.int32))
+    i = global_indices(block)
+    for r, v in enumerate((a, b)):
+        h1, h2, h3, h4 = block_fingerprint(v, i)
+        hash_ref[0, r, 0] = h1
+        hash_ref[0, r, 1] = h2
+        hash_ref[0, r, 2] = h3
+        hash_ref[0, r, 3] = h4
+
+
+def dmr_compare(
+    a: jax.Array, b: jax.Array,
+    *, block: int = DEFAULT_BLOCK, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(mismatching word count: int32, fingerprints: (2, 4) uint32) over two
+    flat uint32 replica streams of equal length, in one fused pass."""
+    assert a.ndim == 1 and a.shape == b.shape
+    assert a.dtype == jnp.uint32 and b.dtype == jnp.uint32
+    n = a.shape[0]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    g = n // block
+    diff, hashes = pl.pallas_call(
+        functools.partial(_dmr_kernel, block=block),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))] * 2,
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2, 4), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, 1), jnp.int32),
+            jax.ShapeDtypeStruct((g, 2, 4), jnp.uint32),
+        ],
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(a.reshape(g, block), b.reshape(g, block))
+    return jnp.sum(diff, axis=(0, 1)), combine_partials(hashes)
+
+
+# --------------------------------------------------------------------------
+# TMR: vote + counts + voted fingerprint, one pass
+# --------------------------------------------------------------------------
+def _tmr_kernel(a_ref, b_ref, c_ref, voted_ref, counts_ref, hash_ref,
+                *, block: int):
+    a = a_ref[...].reshape(1, block)
+    b = b_ref[...].reshape(1, block)
+    c = c_ref[...].reshape(1, block)
+    v = (a & b) | (a & c) | (b & c)
+    voted_ref[...] = v.reshape(voted_ref.shape)
+    counts_ref[0, 0] = jnp.sum((a != v).astype(jnp.int32))
+    counts_ref[0, 1] = jnp.sum((b != v).astype(jnp.int32))
+    counts_ref[0, 2] = jnp.sum((c != v).astype(jnp.int32))
+    counts_ref[0, 3] = jnp.int32(0)
+    h1, h2, h3, h4 = block_fingerprint(v, global_indices(block))
+    hash_ref[0, 0] = h1
+    hash_ref[0, 1] = h2
+    hash_ref[0, 2] = h3
+    hash_ref[0, 3] = h4
+
+
+def tmr_step(
+    a: jax.Array, b: jax.Array, c: jax.Array,
+    *, block: int = DEFAULT_BLOCK, interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(voted stream, per-replica mismatch word counts[3], voted
+    fingerprint[4]) over three flat uint32 replica streams, one pass."""
+    assert a.ndim == 1 and a.shape == b.shape == c.shape
+    assert a.dtype == jnp.uint32
+    n = a.shape[0]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    g = n // block
+    voted, counts, hashes = pl.pallas_call(
+        functools.partial(_tmr_kernel, block=block),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))] * 3,
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, block), jnp.uint32),
+            jax.ShapeDtypeStruct((g, 4), jnp.int32),
+            jax.ShapeDtypeStruct((g, 4), jnp.uint32),
+        ],
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(a.reshape(g, block), b.reshape(g, block), c.reshape(g, block))
+    return (voted.reshape(n), jnp.sum(counts, axis=0)[:3],
+            combine_partials(hashes))

@@ -8,8 +8,9 @@ automatically; every wrapper takes an explicit override.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,9 +67,61 @@ def ssd(
 # --------------------------------------------------------------------------
 # pytree <-> uint32 word stream (for vote/hash over arbitrary states)
 # --------------------------------------------------------------------------
-def flatten_to_u32(tree: Pytree, *, multiple: int = 1) -> jax.Array:
+@dataclasses.dataclass(frozen=True)
+class WordLayout:
+    """Static uint32-word layout of a flattened state pytree.
+
+    Shared by ``flatten_to_u32``/``unflatten_from_u32``, the fused vote/hash
+    wrappers below, and the ``lockstep_pallas`` fused-step glue (which needs
+    the word count *before* tracing to pick its grid/block, and the per-leaf
+    offsets for unflattening the voted stream).  Computed once per
+    (shapes, dtypes) signature and cached — the layout only depends on leaf
+    specs, never on values.
+    """
+
+    n_words: tuple[int, ...]   # u32 words per leaf (after sub-word packing)
+    offsets: tuple[int, ...]   # word offset of each leaf in the flat stream
+    total: int                 # unpadded total words
+
+    def padded(self, multiple: int) -> int:
+        if multiple <= 1:
+            return self.total
+        return self.total + (-self.total) % multiple
+
+
+def _leaf_bits(dtype) -> int:
+    dt = jnp.dtype(dtype)
+    return 8 if dt == jnp.bool_ else dt.itemsize * 8
+
+
+@functools.lru_cache(maxsize=512)
+def _word_layout(specs: tuple) -> WordLayout:
+    n_words, offsets, off = [], [], 0
+    for shape, dtype in specs:
+        size = 1
+        for d in shape:
+            size *= d
+        w = -(-size * _leaf_bits(dtype) // 32)
+        offsets.append(off)
+        n_words.append(w)
+        off += w
+    return WordLayout(tuple(n_words), tuple(offsets), off)
+
+
+def word_layout(tree: Pytree) -> WordLayout:
+    """Cached u32-word layout of a pytree (arrays or ShapeDtypeStructs)."""
+    return _word_layout(tuple(
+        (tuple(jnp.shape(leaf)), jnp.dtype(leaf.dtype).name)
+        for leaf in jax.tree.leaves(tree)
+    ))
+
+
+def flatten_to_u32(
+    tree: Pytree, *, multiple: int = 1, layout: Optional[WordLayout] = None,
+) -> jax.Array:
     """Concatenate a pytree into one uint32 word vector (zero-padded to a
     multiple).  Sub-32-bit dtypes are packed pairwise/quadwise."""
+    layout = word_layout(tree) if layout is None else layout
     words = []
     for leaf in jax.tree.leaves(tree):
         x = leaf
@@ -93,7 +146,7 @@ def flatten_to_u32(tree: Pytree, *, multiple: int = 1) -> jax.Array:
         words.append(u)
     flat = (jnp.concatenate(words) if words
             else jnp.zeros((0,), jnp.uint32))
-    pad = (-flat.shape[0]) % multiple
+    pad = layout.padded(multiple) - flat.shape[0]
     if pad:
         flat = jnp.pad(flat, (0, pad))
     return flat
@@ -107,10 +160,12 @@ def tmr_vote_pytree(
     reps = [jax.tree.map(lambda x, i=i: x[i], replicated) for i in range(3)]
     if use_pallas(pallas):
         block = 64 * 1024
-        flats = [flatten_to_u32(r, multiple=block) for r in reps]
+        layout = word_layout(reps[0])
+        flats = [flatten_to_u32(r, multiple=block, layout=layout)
+                 for r in reps]
         voted_flat, counts = tmr_vote(*flats, block=block,
                                       interpret=interpret)
-        voted = _unflatten_like(voted_flat, reps[0])
+        voted = unflatten_from_u32(voted_flat, reps[0], layout=layout)
         return voted, counts
     from repro.core.redundancy import bit_mismatch_elems, majority_vote
 
@@ -121,17 +176,19 @@ def tmr_vote_pytree(
     return voted, counts
 
 
-def _unflatten_like(flat_u32: jax.Array, like: Pytree) -> Pytree:
+def unflatten_from_u32(
+    flat_u32: jax.Array, like: Pytree, *, layout: Optional[WordLayout] = None,
+) -> Pytree:
+    """Inverse of ``flatten_to_u32`` (trailing padding words are ignored)."""
+    layout = word_layout(like) if layout is None else layout
     leaves, treedef = jax.tree.flatten(like)
-    out, off = [], 0
-    for leaf in leaves:
+    out = []
+    for i, leaf in enumerate(leaves):
         nbits = (8 if leaf.dtype == jnp.bool_ else leaf.dtype.itemsize * 8)
         n_elems = leaf.size
-        n_words = -(-n_elems * nbits // 32)
+        off, n_words = layout.offsets[i], layout.n_words[i]
         w = flat_u32[off:off + n_words]
-        off += n_words
         if nbits < 32:
-            per = 32 // nbits
             u = jax.lax.bitcast_convert_type(
                 w, jnp.dtype(f"uint{nbits}")
             ).reshape(-1)[:n_elems]
@@ -152,12 +209,16 @@ def _unflatten_like(flat_u32: jax.Array, like: Pytree) -> Pytree:
     return jax.tree.unflatten(treedef, out)
 
 
+#: Backwards-compatible private alias (pre-layout name).
+_unflatten_like = unflatten_from_u32
+
+
 def fingerprint_fused(
     state: Pytree, *, pallas: bool | None = None, interpret: bool = False
 ) -> jax.Array:
     """4 x uint32 fingerprint of a whole state pytree in one fused pass."""
     block = 128 * 1024
-    flat = flatten_to_u32(state, multiple=block)
+    flat = flatten_to_u32(state, multiple=block, layout=word_layout(state))
     if use_pallas(pallas):
         return state_hash(flat, block=block, interpret=interpret)
     return ref.state_hash_ref(flat)

@@ -25,27 +25,48 @@ import jax.numpy as jnp
 
 from repro.compat import pallas_tpu_compiler_params
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 _PHI = 0x9E3779B9
 _MIX = 2654435761
 
 
-def _hash_kernel(v_ref, out_ref, *, block: int):
+def global_indices(block: int) -> jax.Array:
+    """(1, block) global word indices for the current grid step."""
+    return (jax.lax.broadcasted_iota(jnp.uint32, (1, block), 1)
+            + jnp.uint32(pl.program_id(0)) * jnp.uint32(block))
+
+
+def block_fingerprint(v: jax.Array, i: jax.Array):
+    """Partial (h1, h2, h3, h4) accumulators over one (1, block) tile.
+
+    Single source of truth for the fingerprint math — shared by this
+    kernel and the fused DMR/TMR kernels in ``fused_step.py``, whose
+    cross-backend parity depends on the accumulators staying bit-for-bit
+    identical.  Position weights use the *global* word index, so partials
+    combine exactly for any block split (see ``combine_partials``)."""
     phi = jnp.uint32(_PHI)
     mix = jnp.uint32(_MIX)
-    gi = pl.program_id(0)
-    v = v_ref[...].reshape(1, block)
-    i = (
-        jax.lax.broadcasted_iota(jnp.uint32, (1, block), 1)
-        + jnp.uint32(gi) * jnp.uint32(block)
-    )
     w = i * mix + phi
     h1 = jnp.sum(v * w, dtype=jnp.uint32)
     h2 = jnp.sum((v ^ w) * mix, dtype=jnp.uint32)
     h3 = jax.lax.reduce(v ^ (w * phi), jnp.uint32(0),
                         jax.lax.bitwise_xor, (0, 1))
     h4 = jnp.sum((v + w) ^ (v >> 7), dtype=jnp.uint32)
+    return h1, h2, h3, h4
+
+
+def combine_partials(partial: jax.Array) -> jax.Array:
+    """(g, ..., 4) per-block partials -> (..., 4) totals: h1/h2/h4 are
+    wraparound sums, h3 is an xor fold."""
+    s = jnp.sum(partial, axis=0, dtype=jnp.uint32)
+    x = jax.lax.reduce(partial[..., 2], jnp.uint32(0),
+                       jax.lax.bitwise_xor, (0,))
+    return jnp.stack([s[..., 0], s[..., 1], x, s[..., 3]], axis=-1)
+
+
+def _hash_kernel(v_ref, out_ref, *, block: int):
+    v = v_ref[...].reshape(1, block)
+    h1, h2, h3, h4 = block_fingerprint(v, global_indices(block))
     out_ref[0, 0] = h1
     out_ref[0, 1] = h2
     out_ref[0, 2] = h3
@@ -72,7 +93,4 @@ def state_hash(
         ),
         interpret=interpret,
     )(v.reshape(g, block))
-    h_sum = jnp.sum(partial, axis=0, dtype=jnp.uint32)          # h1, h2, h4
-    h_xor = jax.lax.reduce(partial[:, 2], jnp.uint32(0),
-                           jax.lax.bitwise_xor, (0,))           # h3
-    return jnp.stack([h_sum[0], h_sum[1], h_xor, h_sum[3]])
+    return combine_partials(partial)

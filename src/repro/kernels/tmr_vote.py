@@ -18,7 +18,6 @@ import jax.numpy as jnp
 
 from repro.compat import pallas_tpu_compiler_params
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _vote_kernel(a_ref, b_ref, c_ref, voted_ref, counts_ref):

@@ -18,7 +18,6 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out results/dryrun
 """
 import argparse
-import dataclasses
 import json
 import pathlib
 import time
@@ -29,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import api as miso
-from repro.configs import ARCHS, CANONICAL, get_config
+from repro.configs import CANONICAL, get_config
 from repro.core import FaultSpec, RedundancyPolicy
 from repro.data.pipeline import DataConfig
 from repro.distributed import sharding as shd

@@ -11,13 +11,11 @@ execution paths:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops as kops
 from .config import MLAConfig, ModelConfig
 
 Params = dict

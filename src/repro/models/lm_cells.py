@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ import jax.numpy as jnp
 from repro.compat import shard_map
 
 from repro.core import CellType, MisoProgram
-from repro.data.pipeline import DataConfig, data_cell, sample_batch
+from repro.data.pipeline import DataConfig, data_cell
 from repro.distributed.collectives import compressed_psum_int8
 from repro.distributed.sharding import LOCAL, ShardCtx
 from repro.optim.adamw import OptConfig, apply_updates, init_opt_state

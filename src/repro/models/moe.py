@@ -18,10 +18,6 @@ Routing: softmax top-k (granite) or sigmoid with normalized top-k gates
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -101,7 +101,6 @@ def mamba_block(
     (cache given) or prefilling (fill_cache=True)."""
     s, d_inner, H = _dims(cfg)
     B, S, d = x.shape
-    gn2 = 2 * s.ngroups * s.state
     z = x @ p["w_z"]
     xc = x @ p["w_x"]
     bcc = x @ p["w_bc"]

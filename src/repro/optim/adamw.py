@@ -10,7 +10,7 @@ launcher via ``repro.distributed.sharding``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -131,7 +131,6 @@ def apply_updates(
     c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
 
     masters = state.get("master", params)
-    is_q = lambda x: isinstance(x, dict) and "q" in x
 
     def upd(p, master, g, m, v):
         gf = g.astype(jnp.float32) * scale

@@ -1,7 +1,5 @@
 """The unified ``miso.compile()`` executor API: parity across back-ends,
 auto back-end selection, the registry, and the deprecation shims."""
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -45,22 +43,25 @@ def _leaves_equal(t1, t2) -> bool:
                for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)))
 
 
+ALL_BACKENDS = ("lockstep", "lockstep_pallas", "host", "wavefront")
+
+
 # ---------------------------------------------------------------------------
-# parity: all three back-ends produce bitwise-identical trajectories
+# parity: all four back-ends produce bitwise-identical trajectories
 # ---------------------------------------------------------------------------
 def test_backend_parity_bitwise():
     prog = three_cell_program()
     steps = 7
     trajectories = {}
     finals = {}
-    for backend in ("lockstep", "host", "wavefront"):
+    for backend in ALL_BACKENDS:
         exe = miso.compile(prog, backend=backend)
         states = exe.init(jax.random.PRNGKey(0))
         trajectories[backend] = [s for s, _ in exe.stream(states, steps)]
         exe2 = miso.compile(prog, backend=backend)
         finals[backend] = exe2.run(
             exe2.init(jax.random.PRNGKey(0)), steps).states
-    for backend in ("host", "wavefront"):
+    for backend in ALL_BACKENDS[1:]:
         for t, (ref, got) in enumerate(zip(trajectories["lockstep"],
                                            trajectories[backend])):
             assert _leaves_equal(ref, got), \
@@ -73,7 +74,7 @@ def test_backend_parity_bitwise():
 
 def test_run_reports_and_metrics_uniform():
     prog = three_cell_program()
-    for backend in ("lockstep", "host", "wavefront"):
+    for backend in ALL_BACKENDS:
         exe = miso.compile(prog, backend=backend)
         res = exe.run(exe.init(jax.random.PRNGKey(1)), 4)
         assert isinstance(res, miso.RunResult)
@@ -82,6 +83,118 @@ def test_run_reports_and_metrics_uniform():
         assert m["backend"] == backend
         assert m["steps"] == 4
         assert m["recoveries"] == []
+
+
+# ---------------------------------------------------------------------------
+# lockstep_pallas: bitwise parity of the fused kernel path (interpret mode
+# on CPU) under no-fault, DMR-detect, and TMR-vote runs
+# ---------------------------------------------------------------------------
+def replicated_program(level: int, compare: str = "bitwise"):
+    """A replicated cell + an unreplicated reader.  Transition constants
+    are powers of two so float math is exact (bitwise parity must not
+    depend on how XLA fuses multiply-adds across program shapes)."""
+    p = miso.MisoProgram()
+    p.add(miso.CellType(
+        "a", lambda k: {"x": jnp.linspace(0.0, 1.0, 8, dtype=jnp.float32)},
+        lambda prev: {"x": prev["a"]["x"] * 0.5
+                      + jnp.roll(prev["a"]["x"], 1) * 0.25},
+        redundancy=miso.RedundancyPolicy(level=level, compare=compare)))
+    p.add(miso.CellType(
+        "b", lambda k: {"x": jnp.ones((8,), jnp.float32)},
+        lambda prev: {"x": prev["b"]["x"] * 0.5 + prev["a"]["x"] * 2.0},
+        reads=("a",)))
+    return p
+
+
+def _run_pair(prog, steps, faults=None):
+    """(lockstep result, pallas result, lockstep exe, pallas exe)."""
+    out = []
+    for backend in ("lockstep", "lockstep_pallas"):
+        exe = miso.compile(prog, backend=backend, donate=False)
+        res = exe.run(exe.init(jax.random.PRNGKey(0)), steps, start_step=0,
+                      faults=faults)
+        out.extend([res, exe])
+    return out[0], out[2], out[1], out[3]
+
+
+@pytest.mark.parametrize("compare", ["bitwise", "hash"])
+def test_lockstep_pallas_parity_dmr_detect(compare):
+    """DMR: the strike diverges the replicas; states (diverged pair
+    included) and fault reports must be bitwise-identical to lockstep."""
+    prog = replicated_program(2, compare)
+    fault = miso.FaultSpec.at(step=2, cell_id=0, replica=1, index=3, bit=21)
+    ref, got, eref, egot = _run_pair(prog, 6, faults=fault)
+    assert _leaves_equal(ref.states, got.states)
+    assert _leaves_equal(ref.reports, got.reports)
+    # detection + step attribution parity (divergence persists from step 2)
+    assert eref.ledger.recent["a"] == egot.ledger.recent["a"]
+    assert egot.ledger.recent["a"][0] == 2
+    assert eref.metrics()["fault_totals"] == egot.metrics()["fault_totals"]
+
+
+@pytest.mark.parametrize("compare", ["bitwise", "hash"])
+def test_lockstep_pallas_parity_tmr_vote(compare):
+    """TMR: the fused vote corrects in-graph; states, reports, ledger
+    attribution, and replica localization all match lockstep bitwise."""
+    prog = replicated_program(3, compare)
+    fault = miso.FaultSpec.at(step=2, cell_id=0, replica=1, index=3, bit=21)
+    ref, got, eref, egot = _run_pair(prog, 6, faults=fault)
+    assert _leaves_equal(ref.states, got.states)
+    assert _leaves_equal(ref.reports, got.reports)
+    assert float(got.reports["a"]["events"]) == 1.0  # exactly one strike
+    assert eref.ledger.recent["a"] == egot.ledger.recent["a"] == [2]
+    # both paths localize the struck replica slot
+    for exe in (eref, egot):
+        exe.ledger.flagged.add("a")  # force suspects for slot check
+        assert exe.metrics()["suspects"]["a"]["replica"] == 1
+
+
+def test_lockstep_pallas_no_fault_reports_zero():
+    prog = replicated_program(3)
+    ref, got, _, egot = _run_pair(prog, 5)
+    assert _leaves_equal(ref.states, got.states)
+    assert _leaves_equal(ref.reports, got.reports)
+    assert float(got.reports["a"]["events"]) == 0.0
+    assert egot.metrics()["interpret"] is True  # CPU CI runs interpret mode
+
+
+@pytest.mark.parametrize("level", [2, 3])
+def test_lockstep_pallas_compare_every_matches_lockstep(level):
+    """The inherited compare_every amortization: at matched k the fused
+    path is bitwise-identical, and mid-window TMR strikes are silently
+    corrected (vote runs every sub-step, counters only on the last)."""
+    prog = replicated_program(level)
+    for k in (1, 4):
+        outs = {}
+        for backend in ("lockstep", "lockstep_pallas"):
+            exe = miso.compile(prog, backend=backend, compare_every=k,
+                               donate=False)
+            outs[backend] = exe.run(exe.init(jax.random.PRNGKey(0)), 8,
+                                    start_step=0).states
+        assert _leaves_equal(outs["lockstep"], outs["lockstep_pallas"]), k
+    if level == 3:
+        exe = miso.compile(prog, backend="lockstep_pallas", compare_every=4,
+                           donate=False)
+        res = exe.run(exe.init(jax.random.PRNGKey(0)), 8, start_step=0,
+                      faults=miso.FaultSpec.at(step=1, cell_id=0, replica=0,
+                                               index=3, bit=21))
+        assert float(res.reports["a"]["events"]) == 0.0  # corrected, unseen
+
+
+def test_lockstep_pallas_block_option_is_bitwise_stable():
+    """Per-block partial combination is exact: any grid split produces the
+    same states and reports."""
+    prog = replicated_program(3)
+    fault = miso.FaultSpec.at(step=1, cell_id=0, replica=2, index=5, bit=11)
+    outs = []
+    for block in (None, 128, 256):
+        exe = miso.compile(prog, backend="lockstep_pallas", block=block,
+                           donate=False)
+        outs.append(exe.run(exe.init(jax.random.PRNGKey(0)), 4,
+                            start_step=0, faults=fault))
+    for other in outs[1:]:
+        assert _leaves_equal(outs[0].states, other.states)
+        assert _leaves_equal(outs[0].reports, other.reports)
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +209,27 @@ def test_auto_picks_wavefront_on_independent_units():
 
 def test_auto_picks_lockstep_on_single_component():
     exe = miso.compile(chain_program(), backend="auto")
-    assert exe.name == "lockstep"
+    assert exe.name == "lockstep"  # CPU: the XLA lockstep flavor
+
+
+def test_auto_prefers_pallas_fused_lockstep_on_tpu(monkeypatch):
+    """auto resolves the lock-step flavor by accelerator: the Pallas-fused
+    back-end on TPU (compiled kernels), XLA lockstep elsewhere."""
+    from repro.kernels import ops
+
+    monkeypatch.setattr(ops, "on_tpu", lambda: True)
+    exe = miso.compile(chain_program(), backend="auto")
+    assert exe.name == "lockstep_pallas"
+    assert exe.interpret is False  # real kernels on the TPU path
+    # compare_every forces a lock-step flavor too, never wavefront
+    exe2 = miso.compile(three_cell_program(), backend="auto",
+                        compare_every=4)
+    assert exe2.name == "lockstep_pallas"
+    monkeypatch.setattr(ops, "on_tpu", lambda: False)
+    assert miso.compile(chain_program(), backend="auto").name == "lockstep"
+    # named explicitly off-TPU, the kernels run in interpret mode
+    exe3 = miso.compile(chain_program(), backend="lockstep_pallas")
+    assert exe3.interpret is True
 
 
 def test_unknown_backend_raises():

@@ -1,6 +1,5 @@
 """The MISO textual front-end: parsing, dependency extraction, semantics."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -152,13 +152,84 @@ def test_tmr_vote_pytree_roundtrip():
     voted, counts = ops.tmr_vote_pytree(rep, pallas=True, interpret=True)
     assert float(voted["w"][0, 0]) == 0.0
     assert int(counts[1]) >= 1 and int(counts[0]) == 0 and int(counts[2]) == 0
-    chex_equal = jax.tree.map(
-        lambda a, b: np.testing.assert_array_equal(np.asarray(a, np.float32),
-                                                   np.asarray(b, np.float32)),
-        {k: v for k, v in voted.items() if k != "w"},
-        {k: v for k, v in state.items() if k != "w"},
-    )
-    del chex_equal
+    for k in ("b", "n"):
+        np.testing.assert_array_equal(np.asarray(voted[k], np.float32),
+                                      np.asarray(state[k], np.float32))
+
+
+# --------------------------------------------------------------------------
+# fused per-step redundancy kernels (lockstep_pallas epilogue)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,block", [(256, 128), (1024, 256), (4096, 4096)])
+def test_dmr_compare_fused_matches_parts(n, block):
+    """One fused pass == word compare + two state_hash dispatches."""
+    from repro.kernels.fused_step import dmr_compare
+    from repro.kernels.state_hash import state_hash
+
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    idx = np.unique(rng.integers(0, n, 7))
+    b = a.at[idx].set(a[idx] ^ jnp.uint32(1 << 13))
+    diff, hashes = dmr_compare(a, b, block=block, interpret=True)
+    assert int(diff) == len(idx)
+    np.testing.assert_array_equal(
+        np.asarray(hashes[0]),
+        np.asarray(state_hash(a, block=block, interpret=True)))
+    np.testing.assert_array_equal(
+        np.asarray(hashes[1]),
+        np.asarray(state_hash(b, block=block, interpret=True)))
+    # fingerprints are block-size independent (exact partial combination)
+    _, h1 = dmr_compare(a, b, block=n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(hashes), np.asarray(h1))
+
+
+@pytest.mark.parametrize("n,block", [(256, 128), (2048, 512)])
+def test_tmr_step_fused_matches_parts(n, block):
+    """One fused pass == tmr_vote + a state_hash of the voted stream."""
+    from repro.kernels.fused_step import tmr_step
+    from repro.kernels.state_hash import state_hash
+
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    b = jnp.array(a)
+    idx = np.unique(rng.integers(0, n, 5))
+    c = a.at[idx].set(a[idx] ^ jnp.uint32(1 << 7))
+    voted, counts, fp = tmr_step(a, b, c, block=block, interpret=True)
+    voted_ref, counts_ref = ref.tmr_vote_ref(a, b, c)
+    np.testing.assert_array_equal(np.asarray(voted), np.asarray(voted_ref))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts_ref))
+    np.testing.assert_array_equal(
+        np.asarray(fp),
+        np.asarray(state_hash(voted_ref, block=block, interpret=True)))
+
+
+def test_pick_block_divides_padded_stream():
+    from repro.kernels.fused_step import pick_block
+
+    for total in (1, 8, 127, 128, 129, 65535, 65536, 1 << 20, (1 << 20) + 5):
+        blk = pick_block(total)
+        padded = total + (-total) % blk
+        assert blk >= 128 and padded % blk == 0
+        assert blk <= 64 * 1024
+
+
+# --------------------------------------------------------------------------
+# u32 word layout (shared by the wrappers and the fused-step glue)
+# --------------------------------------------------------------------------
+def test_word_layout_cached_and_consistent():
+    state = {
+        "w": jnp.zeros((3, 5), jnp.float32),      # 15 words
+        "b": jnp.zeros((7,), jnp.bfloat16),       # 7*16 bits -> 4 words
+        "flag": jnp.zeros((9,), jnp.bool_),       # 9*8 bits  -> 3 words
+    }
+    lay = ops.word_layout(state)
+    assert lay.total == sum(lay.n_words)
+    assert lay.offsets == (0, lay.n_words[0], lay.n_words[0] + lay.n_words[1])
+    # cache hit: same specs -> identical object
+    assert ops.word_layout(jax.tree.map(jnp.zeros_like, state)) is lay
+    # the layout is what flatten actually produces
+    assert ops.flatten_to_u32(state).shape == (lay.total,)
+    assert lay.padded(256) == 256
 
 
 # --------------------------------------------------------------------------
