@@ -445,6 +445,120 @@ def bench_lockstep_pallas() -> None:
 
 
 # ===========================================================================
+# serving: continuous batcher under Poisson arrivals (tokens/s + TTFT SLO)
+# ===========================================================================
+def bench_serving() -> None:
+    """Steady-state tokens/s and TTFT p50/p99 of the continuous-batching
+    engine (miso.serve) under Poisson request arrivals at 2-3 load
+    levels (offered load as a fraction of measured saturated capacity).
+    Emits BENCH_serving.json; the CI bench-smoke job runs the smoke
+    variant so the serving path is timed on every PR.
+
+    CPU-host numbers document the trajectory, not TPU throughput; the
+    interesting curves are the *ratios* (TTFT inflation as offered load
+    approaches capacity)."""
+    import dataclasses as dc
+
+    from repro import api as miso
+    from repro.configs import get_reduced
+    from repro.models.lm_cells import ServeConfig
+    from repro.serving import Request
+    from repro.serving.lm import lm_engine_parts
+
+    cfg = get_reduced("internlm2-1.8b")
+    cfg = dc.replace(cfg, d_model=32 if SMOKE else 64, n_layers=2,
+                     d_ff=64 if SMOKE else 128, n_heads=2, n_kv_heads=1,
+                     vocab_size=128)
+    slots = 4 if SMOKE else 8
+    decode = 4 if SMOKE else 8
+    n_req = 6 if SMOKE else 24
+    plen = 4
+    loads = (0.5, 1.5) if SMOKE else (0.5, 1.0, 1.5)
+    scfg = ServeConfig(batch=slots, max_len=32)
+    rng = np.random.default_rng(0)
+
+    def new_engine():
+        prog, adapter = lm_engine_parts(cfg, scfg)
+        eng = miso.serve(prog, adapter)
+        eng.start(jax.random.PRNGKey(0))
+        return eng
+
+    def mk_request():
+        return Request(
+            prompt=rng.integers(0, cfg.vocab_size, size=plen)
+            .astype(np.int32),
+            max_new_tokens=decode)
+
+    # -- saturated capacity: keep every slot busy, measure tokens/s --------
+    eng = new_engine()
+    for _ in range(slots):
+        eng.submit(mk_request())
+    eng.pump()                          # warmup: compile prefill + step
+    t0 = time.perf_counter()
+    for _ in range(slots * 2):
+        eng.submit(mk_request())
+    eng.pump()
+    cap_tps = (slots * 2 * decode) / (time.perf_counter() - t0)
+    row("serving", "slots", slots)
+    row("serving", "saturated_tokens_per_s", round(cap_tps, 1),
+        "all slots busy, steady state")
+
+    cases = []
+    for load in loads:
+        lam = load * cap_tps / decode   # requests/s offered
+        arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n_req))
+        eng = new_engine()
+        eng.submit(mk_request())
+        eng.pump()                      # warm: compile prefill + step
+        t0 = time.perf_counter()
+        i = 0
+        reqs = []
+        while i < n_req or eng.has_work():
+            now = time.perf_counter() - t0
+            while i < n_req and arrivals[i] <= now:
+                r = mk_request()
+                reqs.append(r)
+                eng.submit(r)
+                i += 1
+            if eng.has_work():
+                eng.pump(max_ticks=1)
+            elif i < n_req:
+                time.sleep(min(arrivals[i] - now, 0.01))
+        wall = time.perf_counter() - t0
+        ttfts = sorted(eng.requests[r.id].ttft for r in reqs)
+        done = sum(1 for r in reqs
+                   if eng.result(r.id)["status"] == "done")
+        case = {
+            "offered_load_x": load,
+            "requests": n_req,
+            "done": done,
+            "tokens_per_s": round(n_req * decode / wall, 2),
+            "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
+            "ttft_p99_s": round(float(np.percentile(ttfts, 99)), 4),
+        }
+        cases.append(case)
+        row("serving", f"load{load}_tokens_per_s", case["tokens_per_s"])
+        row("serving", f"load{load}_ttft_p50_s", case["ttft_p50_s"],
+            f"p99={case['ttft_p99_s']}s, {done}/{n_req} done")
+        assert done == n_req, f"requests lost at load {load}"
+    payload = {
+        "bench": "serving",
+        "jax": jax.__version__,
+        "device": jax.default_backend(),
+        "smoke": SMOKE,
+        "slots": slots,
+        "decode_tokens": decode,
+        "saturated_tokens_per_s": round(cap_tps, 2),
+        "cases": cases,
+    }
+    JSON_DIR.mkdir(parents=True, exist_ok=True)
+    out = JSON_DIR / "BENCH_serving.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    row("serving", "json_artifact", str(out),
+        f"{len(cases)} load levels, poisson arrivals")
+
+
+# ===========================================================================
 # roofline table (from dry-run artifacts — the 512-chip numbers)
 # ===========================================================================
 def bench_roofline(dryrun_dir: str = "results/dryrun") -> None:
@@ -481,6 +595,7 @@ BENCHES = {
     "selective": bench_selective,
     "kernels": bench_kernels,
     "lockstep_pallas": bench_lockstep_pallas,
+    "serving": bench_serving,
     "roofline": bench_roofline,
 }
 

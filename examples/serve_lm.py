@@ -1,36 +1,82 @@
-"""Batched LM serving through the MISO runtime.
+"""LM serving through the MISO continuous batcher (``miso.serve``).
 
-Serving is a two-cell MISO program: a static ``weights`` cell (the paper's
-StaticImage pattern — empty transition) and a ``decoder`` cell whose state
-is (KV/SSM cache, last tokens, position) and whose transition greedy-decodes
-one token for the whole batch.  Prefill initializes the decoder state; the
-decode loop is the lockstep back-end of ``miso.compile`` (an in-graph scan;
-``Executor.stream`` yields per-token for interactive serving); selective
-replication (DMR on the decoder only) demonstrates the paper's per-cell
-redundancy knob at serve time.
+One resident slot-masked decoder program (weights cell + decoder cell) is
+compiled once and driven through ``Executor.stream``; independent requests
+with *per-request* dependability policies join and leave its batch
+between stream ticks:
+
+  * request A asks for nothing (1 slot),
+  * request B asks for DMR (2 replica slots: detection + §IV third-
+    execution repair, charged to B alone),
+  * request C asks for TMR (3 replica slots: majority repair),
+
+and none of them can perturb the others' tokens — the isolation
+invariant tested in tests/test_serving.py.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
       PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
-      PYTHONPATH=src python examples/serve_lm.py --redundancy dmr
+      PYTHONPATH=src python examples/serve_lm.py --strike   # flip a bit
 """
 import argparse
-import sys
 
-from repro.launch import serve
+import jax
+import numpy as np
+
+from repro import api as miso
+from repro.configs import get_reduced
+from repro.models.lm_cells import ServeConfig
+from repro.serving import Request
+from repro.serving.lm import lm_engine_parts
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="internlm2-1.8b")
-ap.add_argument("--batch", type=int, default=4)
-ap.add_argument("--decode", type=int, default=32)
-ap.add_argument("--redundancy", default="none",
-                choices=["none", "dmr", "tmr"])
+ap.add_argument("--decode", type=int, default=8)
+ap.add_argument("--slots", type=int, default=6)
+ap.add_argument("--strike", action="store_true",
+                help="inject a bit flip into the DMR request's replica")
 args = ap.parse_args()
 
-# drive the production serving entry point with a CPU-sized reduced config
-sys.argv = [
-    "serve", "--arch", args.arch, "--reduced",
-    "--batch", str(args.batch), "--prompt-len", "12",
-    "--decode", str(args.decode), "--max-len", "128",
-    "--redundancy", args.redundancy,
-]
-serve.main()
+cfg = get_reduced(args.arch)   # CPU-sized reduced config
+prog, adapter = lm_engine_parts(cfg, ServeConfig(batch=args.slots,
+                                                 max_len=64))
+engine = miso.serve(prog, adapter)
+engine.start(jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+mk = lambda n: rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+a = Request(prompt=mk(5), max_new_tokens=args.decode)
+b = Request(prompt=mk(3), max_new_tokens=args.decode,
+            policy=miso.RedundancyPolicy(level=2))
+c = Request(prompt=mk(4), max_new_tokens=args.decode,
+            policy=miso.RedundancyPolicy(level=3))
+
+engine.submit(a)
+engine.pump(max_ticks=2)        # a is mid-decode...
+engine.submit(b)                # ...when b and c join its batch
+engine.submit(c)
+
+fault = None
+if args.strike:
+    engine.pump(max_ticks=1)    # b resident -> aim at its replica slot 1
+    import jax.tree_util as jtu
+
+    from repro.models.lm_cells import slot_decoder_init
+    flat, _ = jtu.tree_flatten_with_path(slot_decoder_init(cfg, 2, 64))
+    leaf = next(i for i, (p, _) in enumerate(flat)
+                if any(getattr(q, "key", None) == "tokens" for q in p))
+    fault = miso.FaultSpec.at(step=engine.exe.metrics()["steps"] + 1,
+                              cell_id=prog.cell_id("decoder"), leaf=leaf,
+                              index=engine.requests[b.id].slots[1], bit=5)
+engine.pump(faults=fault)       # drain
+
+m = engine.metrics()
+print(f"{m['done']}/{m['submitted']} done | {m['tokens_out']} tokens | "
+      f"{m['tokens_per_s']:.1f} tok/s | "
+      f"ttft p50={m.get('ttft_p50_s', 0):.3f}s")
+for name, r in (("A none", a), ("B dmr ", b), ("C tmr ", c)):
+    res = engine.result(r.id)
+    print(f"  {name}: {res['status']:8s} slots={res['slots']} "
+          f"faults={res['faults']} tokens={res['tokens']}")
+if args.strike:
+    print("strike:", "attributed to B + repaired"
+          if engine.result(b.id)["faults"] else "MISSED (unexpected)")

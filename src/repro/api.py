@@ -82,6 +82,46 @@ without modification (exactly how ``lockstep_pallas`` plugs in).
 The old entry points (``compile_step``/``run_scan``/``HostRunner``/
 ``WavefrontRunner``) remain available for one release as deprecation
 shims in ``repro.core.schedule``.
+
+Serving: ``miso.serve()`` and the continuous batcher
+----------------------------------------------------
+``serve(program, adapter, ...)`` wraps a compiled executor in a
+``ServingEngine`` (``repro.serving``): one *resident* slot-masked decoder
+program is driven through ``Executor.stream``, and many independent
+requests are multiplexed onto its fixed batch dimension.
+
+Engine lifecycle::
+
+    from repro.serving import Request
+    from repro.serving.lm import lm_engine_parts
+
+    prog, adapter = lm_engine_parts(cfg, ServeConfig(batch=8, max_len=128))
+    engine = miso.serve(prog, adapter)
+    engine.start(jax.random.PRNGKey(0))       # weights + empty slots
+    engine.submit(Request(prompt, max_new_tokens=32))
+    engine.submit(Request(p2, policy=miso.RedundancyPolicy(level=2)))
+    engine.pump()                             # tick until drained
+    engine.result("r0")                       # tokens, status, TTFT, faults
+    engine.metrics()                          # tokens/s, TTFT p50/p99, ledger
+
+Between stream ticks the engine's swap hook (``stream(..., swap=...)``)
+scatters freshly prefilled prompt caches into free slots and scrubs
+finished ones; the resident states never leave the device.  The isolation
+invariant making this sound: an active slot's trajectory is
+bitwise-identical no matter which other slots are occupied (slot-masked
+transition + row-independent batch math) — tested in
+tests/test_serving.py.
+
+Per-request policy semantics: a request's ``RedundancyPolicy`` maps onto
+*replica slots* of the same resident batch (replication is mechanically
+identical to data parallelism — core/redundancy.py — here applied at
+request granularity).  level=2 (DMR) occupies 2 slots: a fingerprint
+mismatch between them is detected, attributed to the owning request in
+the engine's FaultLedger, and repaired by the paper's §IV third execution
+(``Executor.pure_step`` replays the tick from the immutable pre-tick
+buffer).  level=3 (TMR) occupies 3: the minority slot is localized and
+re-synchronized from a majority slot.  level=1 pays nothing — and a
+strike on it goes undetected, the paper's motivating failure mode.
 """
 from repro.core.cell import (  # noqa: F401
     CellType,
@@ -103,6 +143,29 @@ from repro.core.ir import compile_source  # noqa: F401
 from repro.core.program import MisoProgram  # noqa: F401
 from repro.core.redundancy import FaultLedger  # noqa: F401
 
+
+def serve(program, adapter, **engine_opts):
+    """Compile ``program`` into a continuous-batching ``ServingEngine``.
+
+    program     -- a MisoProgram with a slot-masked decoder cell (the LM
+                   stack: ``models.lm_cells.make_slot_serve_program``; or
+                   any program whose decoder state is per-slot).
+    adapter     -- a ``repro.serving.SlotAdapter`` describing the slotted
+                   cell (LM: ``repro.serving.lm.lm_engine_parts`` returns
+                   program and adapter together).
+    engine_opts -- ``backend`` (default "lockstep"; needs ``pure_step``),
+                   ``max_queue``, ``time_fn``, plus any ``compile()``
+                   option (``compare_every``, ``checkpoint_cb``/
+                   ``checkpoint_every`` to snapshot resident state, ...).
+
+    Returns the engine (call ``.start(key)`` before submitting).  See the
+    module docstring's serving section for lifecycle and per-request
+    policy semantics."""
+    from repro.serving.engine import ServingEngine
+
+    return ServingEngine(program, adapter, **engine_opts)
+
+
 __all__ = [
     "BACKENDS",
     "CellType",
@@ -120,4 +183,5 @@ __all__ = [
     "compile_source",
     "random_fault_campaign",
     "register_backend",
+    "serve",
 ]

@@ -174,12 +174,26 @@ class Executor:
         sharding: Optional[Pytree] = None,
         compare_every: Optional[int] = None,
         donate: bool = True,
+        checkpoint_cb: Optional[Callable[[int, dict], None]] = None,
+        checkpoint_every: int = 0,
     ):
         self.program = program
         self.mesh = mesh
         self.sharding = sharding
         self.compare_every = compare_every or 1
         self.donate = donate
+        #: checkpointing is part of the base protocol: ``run``/``stream``
+        #: hand the cb the consistent pre-step buffer every
+        #: ``checkpoint_every`` steps (MISO's double buffering makes the
+        #: previous state a snapshot for free).  The lockstep back-end
+        #: splits its in-graph scan into segments at the same boundaries;
+        #: the serving engine uses this to snapshot resident decoder state.
+        self.checkpoint_cb = checkpoint_cb
+        self.checkpoint_every = checkpoint_every
+        if checkpoint_every and checkpoint_every % self.compare_every != 0:
+            raise ValueError(
+                "checkpoint_every must be a multiple of compare_every "
+                f"(got {checkpoint_every} vs {self.compare_every})")
         self.ledger = FaultLedger()
         self.recoveries: list[tuple[int, str]] = []
         self._t = 0  # next step index when start_step is not given
@@ -211,6 +225,21 @@ class Executor:
     ) -> tuple[dict, dict]:
         raise NotImplementedError
 
+    def pure_step(
+        self,
+        states: dict,
+        step_idx: int,
+        fault: Optional[FaultSpec] = None,
+    ) -> tuple[dict, dict]:
+        """Side-effect-free re-execution of one step window: no ledger
+        update, no counter advance, no recovery protocol.  This is the
+        paper's §IV "third equal transition" surfaced on the executor —
+        the serving engine replays a tick from the immutable previous
+        buffer to tie-break a DMR mismatch.  Back-ends with a compiled
+        step implement it; schedules without one (wavefront) raise."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no side-effect-free replay")
+
     # -- n-step execution ------------------------------------------------
     def run(
         self,
@@ -229,6 +258,7 @@ class Executor:
         totals = None
         collected = [] if collect is not None else None
         for t in range(start, start + n_steps, stride):
+            self._maybe_checkpoint(t, states)
             states, rep = self.step(
                 states, step_idx=t, fault=_fault_in_window(flist, t, stride))
             totals = rep if totals is None else jax.tree.map(
@@ -249,11 +279,19 @@ class Executor:
         *,
         start_step: Optional[int] = None,
         faults=None,
+        swap: Optional[Callable[[int, dict], Optional[dict]]] = None,
     ) -> Iterator[tuple[dict, dict]]:
         """Generator of per-step ``(states, reports)`` — the serving loop.
         Each tick advances ``step_stride`` transitions (1 unless the
         lockstep back-end was compiled with ``compare_every``).
-        ``n_steps=None`` streams forever (caller breaks)."""
+        ``n_steps=None`` streams forever (caller breaks).
+
+        ``swap`` is the state swap-in/swap-out hook: called *before* every
+        tick with ``(step_idx, states)``; a non-None return value replaces
+        the resident states for that tick and onward.  This is how the
+        continuous batcher joins/leaves requests in the decoder cell's
+        batch between ticks without tearing the stream down.  Checkpoints
+        (``checkpoint_cb``) snapshot the post-swap pre-step buffer."""
         stride = self.step_stride
         if n_steps is not None and n_steps % stride != 0:
             raise ValueError("n_steps must be a multiple of compare_every")
@@ -261,6 +299,11 @@ class Executor:
         flist = _as_fault_list(faults)
         t = start
         while n_steps is None or t < start + n_steps:
+            if swap is not None:
+                swapped = swap(t, states)
+                if swapped is not None:
+                    states = swapped
+            self._maybe_checkpoint(t, states)
             states, rep = self.step(
                 states, step_idx=t, fault=_fault_in_window(flist, t, stride))
             yield states, rep
@@ -279,6 +322,13 @@ class Executor:
         }
 
     # -- shared internals -------------------------------------------------
+    def _maybe_checkpoint(self, t: int, states: dict) -> None:
+        if (self.checkpoint_cb is not None and self.checkpoint_every
+                and t % self.checkpoint_every == 0):
+            # the pre-step buffer is immutable for the duration of the next
+            # dispatch (double buffering) — a consistent snapshot for free
+            self.checkpoint_cb(t, states)
+
     def _ledger_update(self, step: int, reports: dict) -> None:
         if _is_traced(reports):
             return  # inside an outer trace: no host-side accounting
@@ -363,18 +413,22 @@ class LockstepExecutor(Executor):
         self._t = t + self.compare_every
         return states, reports
 
-    def run(self, states, n_steps, *, start_step=None, faults=None,
-            collect=None):
+    def pure_step(self, states, step_idx, fault=None):
+        """The §IV third execution: replay one compiled step window with no
+        ledger/counter side effects (see ``Executor.pure_step``)."""
+        fault = fault if fault is not None else FaultSpec.none()
+        with self._mesh_ctx():
+            return self._jit_step(states, jnp.int32(int(step_idx)), fault)
+
+    def _scan_segment(self, states, n_steps, start, fault, collect, donate):
+        """One in-graph scan of ``n_steps`` transitions.  Returns
+        ``(final, summed_reports, stacked_reports, collected)``."""
         k = self.compare_every
-        if n_steps % k != 0:
-            raise ValueError("n_steps must be a multiple of compare_every")
-        start = self._t if start_step is None else int(start_step)
-        fault = _single_fault(faults)
         iters = n_steps // k
         # keyed on the collect callable's identity: pass a *stable* collect
         # to reuse the compiled scan across calls (a fresh lambda per call
         # re-traces).  Bounded so per-call lambdas can't grow it forever.
-        key = (n_steps, None if collect is None else id(collect))
+        key = (n_steps, None if collect is None else id(collect), donate)
         fn = self._run_cache.get(key)
         if fn is None:
             while len(self._run_cache) >= 16:
@@ -395,19 +449,65 @@ class LockstepExecutor(Executor):
                 return final, summed, stacked, collected
 
             fn = jax.jit(scan_run,
-                         donate_argnums=(0,) if self.donate else ())
+                         donate_argnums=(0,) if donate else ())
             self._run_cache[key] = fn
         with self._mesh_ctx():
-            final, reports, stacked, collected = fn(
-                states, jnp.int32(start), fault)
-        if not _is_traced(stacked):
-            host = jax.tree.map(jax.device_get, stacked)
-            for i in range(iters):
-                self.ledger.update(
-                    start + i * k + k - 1,
-                    jax.tree.map(lambda x, i=i: x[i], host))
+            return fn(states, jnp.int32(start), fault)
+
+    def run(self, states, n_steps, *, start_step=None, faults=None,
+            collect=None):
+        k = self.compare_every
+        if n_steps % k != 0:
+            raise ValueError("n_steps must be a multiple of compare_every")
+        start = self._t if start_step is None else int(start_step)
+        fault = _single_fault(faults)
+        every = self.checkpoint_every
+        # with checkpointing enabled the scan splits into segments whose
+        # boundaries land exactly on the checkpoint grid (t % every == 0,
+        # reachable from `start` in strides of k — same steps the per-step
+        # back-ends fire on), snapshotting between segments.  The cb keeps
+        # a live reference to the pre-segment buffer, so checkpointed
+        # segments must NOT donate it.  Without checkpointing the whole
+        # run is a single donating scan (unchanged).
+        cp = (self.checkpoint_cb is not None and every
+              and start % k == 0)
+        totals = None
+        collected_segs = []
+        traced = False
+        t = start
+        while t < start + n_steps:
+            if cp:
+                n = min((t // every + 1) * every, start + n_steps) - t
+            else:
+                n = start + n_steps - t
+            self._maybe_checkpoint(t, states)
+            states, summed, stacked, collected = self._scan_segment(
+                states, n, t, fault, collect,
+                self.donate and not cp)
+            totals = summed if totals is None else jax.tree.map(
+                lambda a, b: a + b, totals, summed)
+            if collect is not None:
+                collected_segs.append(collected)
+            if _is_traced(stacked):
+                traced = True
+            else:
+                host = jax.tree.map(jax.device_get, stacked)
+                for i in range(n // k):
+                    self.ledger.update(
+                        t + i * k + k - 1,
+                        jax.tree.map(lambda x, i=i: x[i], host))
+            t += n
+        if not traced:
             self._t = start + n_steps
-        return RunResult(states=final, reports=reports, collected=collected)
+        collected = None
+        if collect is not None:
+            collected = (collected_segs[0] if len(collected_segs) == 1
+                         else jax.tree.map(
+                             lambda *xs: jnp.concatenate(xs, axis=0),
+                             *collected_segs))
+        return RunResult(states=states,
+                         reports=totals if totals is not None else {},
+                         collected=collected)
 
 
 # --------------------------------------------------------------------------
@@ -417,15 +517,15 @@ class LockstepExecutor(Executor):
 class HostExecutor(Executor):
     """Lock-step with the paper's §IV recovery in the host loop.
 
-    Extra options: ``ledger`` (a FaultLedger), ``checkpoint_cb(step, prev)``
-    + ``checkpoint_every`` (snapshots of the immutable previous buffer),
-    ``jit`` (default True).  Accepts a *list* of FaultSpecs in ``run`` —
-    one armed strike per step.
+    Extra options: ``ledger`` (a FaultLedger), ``jit`` (default True).
+    Checkpointing (``checkpoint_cb``/``checkpoint_every``) is part of the
+    base protocol now — the run/stream loops snapshot the immutable
+    previous buffer.  Accepts a *list* of FaultSpecs in ``run`` — one
+    armed strike per step.
     """
 
     def __init__(self, program, *, ledger: Optional[FaultLedger] = None,
-                 checkpoint_cb: Optional[Callable[[int, dict], None]] = None,
-                 checkpoint_every: int = 0, jit: bool = True, **kw):
+                 jit: bool = True, **kw):
         super().__init__(program, **kw)
         if self.compare_every != 1:
             raise ValueError(
@@ -434,8 +534,6 @@ class HostExecutor(Executor):
                 "compare_every amortization")
         if ledger is not None:
             self.ledger = ledger
-        self.checkpoint_cb = checkpoint_cb
-        self.checkpoint_every = checkpoint_every
         self._step = compile_step(program)
         if jit:
             self._step = jax.jit(self._step)
@@ -447,14 +545,16 @@ class HostExecutor(Executor):
             if cell.redundancy.level == 2
         }
 
+    def pure_step(self, states, step_idx, fault=None):
+        """Replay one transition with no ledger/recovery side effects (the
+        §IV third execution; see ``Executor.pure_step``)."""
+        fault = fault if fault is not None else FaultSpec.none()
+        with self._mesh_ctx():
+            return self._step(states, jnp.int32(int(step_idx)), fault)
+
     def step(self, states, *, step_idx=None, fault=None):
         t = self._t if step_idx is None else int(step_idx)
         prev = states  # immutable previous buffer (double buffering)
-        if (self.checkpoint_every and t % self.checkpoint_every == 0
-                and self.checkpoint_cb is not None):
-            # snapshot of the consistent prev buffer; on real hardware this
-            # serializes concurrently with the next dispatch.
-            self.checkpoint_cb(t, prev)
         fault = fault if fault is not None else FaultSpec.none()
         with self._mesh_ctx():
             states, reports = self._step(prev, jnp.int32(t), fault)
@@ -558,6 +658,11 @@ class WavefrontExecutor(Executor):
                 "backend='wavefront' advances units out of global step "
                 "order, so a per-step collect of the full program state "
                 "does not exist; use .stream() for per-step observation")
+        if self.checkpoint_cb is not None and self.checkpoint_every:
+            raise ValueError(
+                "backend='wavefront' has no globally consistent cut "
+                "mid-run (units free-run); use .stream(), whose ticks are "
+                "globally synchronized, for checkpointing")
         start = self._t if start_step is None else int(start_step)
         fault = _single_fault(faults)
         nU = len(self.units)
@@ -667,6 +772,8 @@ def compile(
     policies: Optional[Mapping[str, Any]] = None,
     compare_every: Optional[int] = None,
     donate: bool = True,
+    checkpoint_cb: Optional[Callable[[int, dict], None]] = None,
+    checkpoint_every: int = 0,
     **backend_opts,
 ) -> Executor:
     """Compile a MisoProgram into an Executor — the single front door.
@@ -686,9 +793,16 @@ def compile(
                      beyond-paper amortization).
     donate        -- donate the input state buffers of the in-graph run
                      (double-buffer in place; lockstep back-end).
-    backend_opts  -- forwarded to the back-end (host: ledger,
-                     checkpoint_cb, checkpoint_every, jit; wavefront:
-                     window, jit; lockstep_pallas: interpret, block).
+    checkpoint_cb -- ``(step, states) -> None``, part of the base Executor
+                     protocol: run/stream snapshot the consistent pre-step
+                     buffer every ``checkpoint_every`` steps.  The lockstep
+                     back-end splits its in-graph scan into segments at the
+                     checkpoint boundaries; the wavefront back-end supports
+                     it on ``stream`` only (its ``run`` has no globally
+                     consistent mid-run cut).
+    backend_opts  -- forwarded to the back-end (host: ledger, jit;
+                     wavefront: window, jit; lockstep_pallas: interpret,
+                     block).
     """
     if policies:
         program = program.with_policies(policies)
@@ -715,4 +829,6 @@ def compile(
         backend_opts = {k: v for k, v in backend_opts.items()
                         if k in accepted}
     return cls(program, mesh=mesh, sharding=sharding,
-               compare_every=compare_every, donate=donate, **backend_opts)
+               compare_every=compare_every, donate=donate,
+               checkpoint_cb=checkpoint_cb, checkpoint_every=checkpoint_every,
+               **backend_opts)

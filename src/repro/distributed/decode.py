@@ -59,9 +59,13 @@ def _tp(ctx) -> tuple[Optional[str], int]:
 # ===========================================================================
 # GQA / MQA / MHA / SWA
 # ===========================================================================
-def gqa_decode(q, k_new, v_new, cache, pos, *, cfg, ctx):
+def gqa_decode(q, k_new, v_new, cache, pos, *, cfg, ctx, active=None):
     """q (B,Hq,1,D); k_new/v_new (B,Hkv,D); cache {"k","v","slot_pos"}.
-    Returns (out (B,Hq,1,D), new_cache) with the cache still sharded."""
+    ``active`` is the serving batcher's per-slot mask (B, bool): inactive
+    batch slots keep their cache bytes untouched (their request left, or
+    the slot is waiting for a join), so a partially-full resident batch
+    stays bitwise-correct.  Returns (out (B,Hq,1,D), new_cache) with the
+    cache still sharded."""
     B, Hq, _, Dk = q.shape
     Hkv = k_new.shape[1]
     S = cache["k"].shape[2]
@@ -74,11 +78,14 @@ def gqa_decode(q, k_new, v_new, cache, pos, *, cfg, ctx):
 
     window = cfg.window
     scale = Dk ** -0.5
+    if active is None:
+        active = jnp.ones((B,), bool)
 
     if head_ok:
         # fully local: each shard owns Hq/tp query heads + their kv heads
-        def local(q, k_new, v_new, kc, vc, sp, pos):
-            kc, vc, sp = _update_local_slot(kc, vc, sp, k_new, v_new, pos)
+        def local(q, k_new, v_new, kc, vc, sp, pos, act):
+            kc, vc, sp = _update_local_slot(kc, vc, sp, k_new, v_new, pos,
+                                            active=act)
             out = _softmax_attend(q, kc, vc, sp, pos, window, scale)
             return out, kc, vc, sp
 
@@ -86,17 +93,17 @@ def gqa_decode(q, k_new, v_new, cache, pos, *, cfg, ctx):
             q=P(b_ax, ma, None, None),
             k_new=P(b_ax, ma, None), v_new=P(b_ax, ma, None),
             kc=P(b_ax, ma, None, None), vc=P(b_ax, ma, None, None),
-            sp=P(b_ax, None), pos=P(b_ax),
+            sp=P(b_ax, None), pos=P(b_ax), act=P(b_ax),
         )
         out_specs = (P(b_ax, ma, None, None), specs["kc"], specs["vc"],
                      specs["sp"])
     else:
         # seq-sharded cache: local slice update + flash-decoding combine
-        def local(q, k_new, v_new, kc, vc, sp, pos):
+        def local(q, k_new, v_new, kc, vc, sp, pos, act):
             S_l = kc.shape[2]
             lo = jax.lax.axis_index(ma) * S_l
             kc, vc, sp = _update_local_slot(
-                kc, vc, sp, k_new, v_new, pos, lo=lo, tp=tp)
+                kc, vc, sp, k_new, v_new, pos, lo=lo, tp=tp, active=act)
             ctx_l, m, l = _partial_attend(q, kc, vc, sp, pos, window, scale)
             m_g = jax.lax.pmax(m, ma)
             alpha = jnp.exp(m - m_g)
@@ -111,7 +118,7 @@ def gqa_decode(q, k_new, v_new, cache, pos, *, cfg, ctx):
             q=P(b_ax, None, None, None),
             k_new=P(b_ax, None, None), v_new=P(b_ax, None, None),
             kc=P(b_ax, None, ma, None), vc=P(b_ax, None, ma, None),
-            sp=P(b_ax, ma), pos=P(b_ax),
+            sp=P(b_ax, ma), pos=P(b_ax), act=P(b_ax),
         )
         out_specs = (P(b_ax, None, None, None), specs["kc"], specs["vc"],
                      specs["sp"])
@@ -119,18 +126,22 @@ def gqa_decode(q, k_new, v_new, cache, pos, *, cfg, ctx):
     out, kc, vc, sp = shard_map(
         local, mesh=ctx.mesh,
         in_specs=(specs["q"], specs["k_new"], specs["v_new"], specs["kc"],
-                  specs["vc"], specs["sp"], specs["pos"]),
+                  specs["vc"], specs["sp"], specs["pos"], specs["act"]),
         out_specs=out_specs, check_vma=False,
-    )(q, k_new, v_new, cache["k"], cache["v"], cache["slot_pos"], pos)
+    )(q, k_new, v_new, cache["k"], cache["v"], cache["slot_pos"], pos,
+      active)
     return out, {"k": kc, "v": vc, "slot_pos": sp}
 
 
-def _update_local_slot(kc, vc, sp, k_new, v_new, pos, lo=None, tp=1):
+def _update_local_slot(kc, vc, sp, k_new, v_new, pos, lo=None, tp=1,
+                       active=None):
     """Write the new token into ring slot pos%S on the owning shard only.
     kc/vc (B,H,S_l,D); sp (B,S_l); k_new/v_new (B,H,D); pos (B,).
     head-sharded (lo=None): the local seq axis is the full ring.
     seq-sharded: the global ring has length S_l*tp; only the shard whose
-    range [lo, lo+S_l) contains the slot actually writes."""
+    range [lo, lo+S_l) contains the slot actually writes.
+    ``active`` (B, bool) additionally masks the write per batch slot —
+    an inactive serving slot's ring is never touched."""
     B = kc.shape[0]
     S_l = kc.shape[2]
     if lo is None:
@@ -141,6 +152,8 @@ def _update_local_slot(kc, vc, sp, k_new, v_new, pos, lo=None, tp=1):
         slot = pos % (S_l * tp)
         hit = (slot >= lo) & (slot < lo + S_l)
         local_slot = jnp.clip(slot - lo, 0, S_l - 1)
+    if active is not None:
+        hit = hit & active
     bidx = jnp.arange(B)
     kw = jnp.where(hit[:, None, None], k_new.astype(kc.dtype),
                    kc[bidx, :, local_slot])
@@ -192,11 +205,14 @@ def _partial_attend(q, kc, vc, sp, pos, window, scale):
 # ===========================================================================
 # MLA (latent cache)
 # ===========================================================================
-def mla_decode(q_lat, q_rope, ckv_new, krope_new, cache, pos, *, cfg, ctx):
+def mla_decode(q_lat, q_rope, ckv_new, krope_new, cache, pos, *, cfg, ctx,
+               active=None):
     """Absorbed MLA decode over a sequence-sharded latent cache.
 
     q_lat (B,1,h,lora), q_rope (B,1,h,r); ckv_new (B,lora), krope_new (B,r);
     cache {"ckv" (B,S,lora), "krope" (B,S,r), "slot_pos" (B,S)}.
+    ``active`` (B, bool): serving slot mask — inactive slots' cache is
+    never written (see ``gqa_decode``).
     Returns (ctx_lat (B,1,h,lora) f32, new_cache) or None (fallback)."""
     B = q_lat.shape[0]
     S = cache["ckv"].shape[1]
@@ -206,12 +222,14 @@ def mla_decode(q_lat, q_rope, ckv_new, krope_new, cache, pos, *, cfg, ctx):
         return None
     m_cfg = cfg.mla
     scale = (m_cfg.qk_nope_dim + m_cfg.qk_rope_dim) ** -0.5
+    if active is None:
+        active = jnp.ones((B,), bool)
 
-    def local(q_lat, q_rope, ckv_new, krope_new, ckv, krope, sp, pos):
+    def local(q_lat, q_rope, ckv_new, krope_new, ckv, krope, sp, pos, act):
         B_l, S_l = sp.shape
         lo = jax.lax.axis_index(ma) * S_l
         slot = pos % (S_l * tp)
-        hit = (slot >= lo) & (slot < lo + S_l)
+        hit = (slot >= lo) & (slot < lo + S_l) & act
         local_slot = jnp.clip(slot - lo, 0, S_l - 1)
         bidx = jnp.arange(B_l)
         ckv = ckv.at[bidx, local_slot].set(
@@ -250,10 +268,11 @@ def mla_decode(q_lat, q_rope, ckv_new, krope_new, cache, pos, *, cfg, ctx):
         local, mesh=ctx.mesh,
         in_specs=(P(b_ax, None, None, None), P(b_ax, None, None, None),
                   P(b_ax, None), P(b_ax, None),
-                  cspec["ckv"], cspec["krope"], cspec["sp"], P(b_ax)),
+                  cspec["ckv"], cspec["krope"], cspec["sp"], P(b_ax),
+                  P(b_ax)),
         out_specs=(P(b_ax, None, None, None), cspec["ckv"], cspec["krope"],
                    cspec["sp"]),
         check_vma=False,
     )(q_lat, q_rope, ckv_new, krope_new,
-      cache["ckv"], cache["krope"], cache["slot_pos"], pos)
+      cache["ckv"], cache["krope"], cache["slot_pos"], pos, active)
     return out, {"ckv": ckv, "krope": krope, "slot_pos": sp}

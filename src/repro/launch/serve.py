@@ -1,8 +1,23 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode
-through the MISO serve program (weights cell + decoder cell).
+"""Serving driver.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --reduced \
-      --batch 4 --prompt-len 12 --decode 24
+Default path — the continuous-batching engine (``miso.serve``): one
+resident slot-masked decoder; requests with mixed per-request
+dependability policies join and leave the batch mid-stream; prints the
+SLO surface (tokens/s, TTFT p50/p99, per-request faults).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+      --reduced --slots 4 --requests 6 --mix none,dmr --decode 12
+
+``--strike`` arms one bit-flip against the first DMR request's replica
+slot mid-decode and verifies it is detected, attributed to that request,
+and repaired (the CI serving smoke runs this).
+
+``--static`` keeps the fixed-batch reference path: prefill a batch of
+identical-length prompts, decode in one in-graph scan (optionally with
+cell-level DMR/TMR on the whole decoder).
+
+  PYTHONPATH=src python -m repro.launch.serve --static --arch mamba2-2.7b \
+      --reduced --batch 4 --prompt-len 12 --decode 24
 """
 from __future__ import annotations
 
@@ -11,33 +26,148 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import api as miso
 from repro.configs import get_config, get_reduced
 from repro.core import RedundancyPolicy
 from repro.distributed.sharding import LOCAL
 from repro.models import transformer as T
-from repro.models.lm_cells import ServeConfig, make_serve_program
+from repro.models.lm_cells import (
+    ServeConfig,
+    install_prefill,
+    make_serve_program,
+)
+
+POLICIES = {"none": RedundancyPolicy(),
+            "dmr": RedundancyPolicy(level=2),
+            "tmr": RedundancyPolicy(level=3)}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=12)
-    ap.add_argument("--decode", type=int, default=24)
+    ap.add_argument("--decode", type=int, default=24,
+                    help="tokens per request (engine) / steps (static)")
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--redundancy", default="none", choices=["none", "dmr",
-                                                             "tmr"])
+    ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    # engine path
+    ap.add_argument("--slots", type=int, default=4,
+                    help="resident batch width of the engine")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--mix", default="none,dmr",
+                    help="comma list of per-request policies to cycle "
+                         "(none|dmr|tmr)")
+    ap.add_argument("--strike", action="store_true",
+                    help="inject one bit flip into the first DMR "
+                         "request's replica slot and verify attribution")
+    # static path
+    ap.add_argument("--static", action="store_true",
+                    help="fixed-batch reference path (no engine)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--redundancy", default="none",
+                    choices=["none", "dmr", "tmr"],
+                    help="static path: cell-level policy on the decoder")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.static:
+        static_main(cfg, args)
+    else:
+        engine_main(cfg, args)
+
+
+# ===========================================================================
+# continuous-batching engine path
+# ===========================================================================
+def engine_main(cfg, args):
+    from repro.serving import DONE, RUNNING, Request
+    from repro.serving.lm import lm_engine_parts
+
+    scfg = ServeConfig(batch=args.slots, max_len=args.max_len)
+    prog, adapter = lm_engine_parts(cfg, scfg, LOCAL)
+    engine = miso.serve(prog, adapter)
+    engine.start(jax.random.PRNGKey(args.seed))
+
+    rng = np.random.default_rng(args.seed + 1)
+    mix = [m.strip() for m in args.mix.split(",") if m.strip()]
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(2, max(3, args.prompt_len + 1)))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        reqs.append(Request(prompt=prompt, max_new_tokens=args.decode,
+                            policy=POLICIES[mix[i % len(mix)]]))
+
+    # staggered submission: half now, half after a few ticks, so requests
+    # genuinely join/leave the resident batch mid-stream
+    t0 = time.time()
+    for r in reqs[: max(1, len(reqs) // 2)]:
+        engine.submit(r)
+    engine.pump(max_ticks=3)
+    for r in reqs[max(1, len(reqs) // 2):]:
+        engine.submit(r)
+
+    fault = None
+    victim = next((r for r in reversed(reqs) if r.policy.level == 2), None)
+    if args.strike:
+        if victim is None:
+            raise SystemExit("--strike needs a dmr request in --mix")
+        # tick until the victim is resident with decode budget left, then
+        # arm a flip against its SECOND replica slot on the next tick
+        rec = engine.requests[victim.id]
+        for _ in range(10 * args.decode):
+            if rec.status == RUNNING \
+                    and len(rec.tokens) + 2 <= victim.max_new_tokens:
+                break
+            engine.pump(max_ticks=1)
+        if rec.status != RUNNING:
+            raise SystemExit("strike victim never became resident")
+        from repro.models.lm_cells import slot_decoder_init
+
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            slot_decoder_init(cfg, 2, args.max_len))
+        leaf_i = next(i for i, (p, _) in enumerate(flat)
+                      if any(getattr(q, "key", None) == "tokens" for q in p))
+        fault = miso.FaultSpec.at(
+            step=engine.exe.metrics()["steps"] + 1,
+            cell_id=prog.cell_id("decoder"), leaf=leaf_i,
+            index=rec.slots[1], bit=4)
+    engine.pump(faults=fault)
+    wall = time.time() - t0
+
+    m = engine.metrics()
+    print(f"engine: {m['done']}/{m['submitted']} requests done | "
+          f"{m['tokens_out']} tokens in {wall:.2f}s "
+          f"({m['tokens_out'] / max(wall, 1e-9):.1f} tok/s) | "
+          f"ttft p50={m.get('ttft_p50_s', 0):.3f}s "
+          f"p99={m.get('ttft_p99_s', 0):.3f}s")
+    for r in reqs:
+        res = engine.result(r.id)
+        mark = f" policy={r.policy.level}" if r.policy.level > 1 else ""
+        print(f"  {r.id}: {res['status']} {res['n_tokens']} tok "
+              f"faults={res['faults']}{mark} -> {res['tokens'][:8]}")
+    bad = [r.id for r in reqs
+           if engine.result(r.id)["status"] != DONE]
+    if bad:
+        raise SystemExit(f"requests did not complete: {bad}")
+    if args.strike:
+        res = engine.result(victim.id)
+        if res["faults"] < 1 or victim.id not in m["fault_totals"]:
+            raise SystemExit("strike was not attributed to its request")
+        print(f"strike: detected, attributed to {victim.id}, repaired "
+              f"(events={m['fault_totals'][victim.id]['events']:.0f})")
+
+
+# ===========================================================================
+# static fixed-batch reference path
+# ===========================================================================
+def static_main(cfg, args):
+    from repro.core.redundancy import canonical_state, replicate_state
+
     scfg = ServeConfig(batch=args.batch, max_len=args.max_len)
-    policy = {"none": RedundancyPolicy(),
-              "dmr": RedundancyPolicy(level=2),
-              "tmr": RedundancyPolicy(level=3)}[args.redundancy]
+    policy = POLICIES[args.redundancy]
     prog = make_serve_program(cfg, scfg, LOCAL).with_policies(
         {"decoder": policy})
     states = prog.init_states(jax.random.PRNGKey(args.seed))
@@ -49,8 +179,10 @@ def main():
     if cfg.n_codebooks > 1:
         shape = shape + (cfg.n_codebooks,)
     prompts = jax.random.randint(key, shape, 0, cfg.vocab_size, jnp.int32)
-    params = (states["weights"]["params"] if policy.level == 1 or True
-              else states["weights"]["params"])
+    # prefill always reads the canonical (replica-0) view of the weights —
+    # works whether or not a policy replicated the weights cell
+    params = canonical_state(
+        states["weights"], prog.cells["weights"].redundancy.level)["params"]
     t0 = time.time()
     vision = None
     if cfg.n_vision_tokens:
@@ -61,15 +193,17 @@ def main():
         lambda p, t: T.forward(cfg, p, t, ctx=LOCAL, fill_cache=True,
                                vision_embeds=vision)
     )(params, prompts)
-    # pad the filled cache up to max_len capacity
-    full = T.init_cache(cfg, args.batch, args.max_len)
-    filled = _install(cfg, full, cache, args.prompt_len)
-    dec = dict(states["decoder"]) if policy.level == 1 else None
-    if policy.level == 1:
-        dec["cache"] = filled
-        dec["tokens"] = _first_token(cfg, logits)
-        states = dict(states)
-        states["decoder"] = dec
+    # pad the filled cache up to max_len capacity and install it into
+    # EVERY decoder replica (under DMR/TMR the decoder state carries a
+    # leading replica axis; replicas must start from the same prefill)
+    filled = install_prefill(
+        cfg, T.init_cache(cfg, args.batch, args.max_len), cache,
+        args.prompt_len)
+    dec = dict(canonical_state(states["decoder"], policy.level))
+    dec["cache"] = filled
+    dec["tokens"] = _first_token(cfg, logits)
+    states = dict(states)
+    states["decoder"] = replicate_state(dec, policy.level)
     t_prefill = time.time() - t0
 
     t1 = time.time()
@@ -99,31 +233,6 @@ def _first_token(cfg, logits):
     if cfg.n_codebooks > 1:
         return nxt.reshape(nxt.shape[0], 1, cfg.n_codebooks)
     return nxt
-
-
-def _install(cfg, full, filled, plen):
-    """Copy a prefill cache (length plen) into a max_len-capacity cache."""
-    def seg(dst, src):
-        def leaf(d, s):
-            if d.shape == s.shape:
-                return s.astype(d.dtype)
-            # (..., plen, ...) -> slot into (..., max_len, ...) at axis where
-            # shapes differ
-            for ax in range(d.ndim):
-                if d.shape[ax] != s.shape[ax]:
-                    pad = [(0, d.shape[i] - s.shape[i]) if i == ax else (0, 0)
-                           for i in range(d.ndim)]
-                    fill = -1 if jnp.issubdtype(s.dtype, jnp.integer) else 0
-                    return jnp.pad(s, pad,
-                                   constant_values=fill).astype(d.dtype)
-            return s.astype(d.dtype)
-
-        return jax.tree.map(leaf, dst, src)
-
-    out = {"segments": [seg(d, s) for d, s in zip(full["segments"],
-                                                  filled["segments"])],
-           "pos": jnp.full_like(full["pos"], plen)}
-    return out
 
 
 if __name__ == "__main__":

@@ -218,6 +218,7 @@ def gqa_attention(
     cache: Optional[dict] = None,         # decode when present
     block_k: int = 1024,
     ctx=None,                             # ShardCtx for decode_shardmap
+    active: Optional[jax.Array] = None,   # (B,) serving slot mask (decode)
 ) -> tuple[jax.Array, Optional[dict]]:
     B, S, d = x.shape
     dh = cfg.head_dim
@@ -251,7 +252,7 @@ def gqa_attention(
             from repro.distributed import decode as DD
 
             res = DD.gqa_decode(q, k[:, :, 0], v[:, :, 0], cache, pos,
-                                cfg=cfg, ctx=ctx)
+                                cfg=cfg, ctx=ctx, active=active)
             if res is not None:
                 out, new_cache = res
                 out = out.transpose(0, 2, 1, 3).reshape(
@@ -260,11 +261,22 @@ def gqa_attention(
         Sc = cache["k"].shape[2]
         slot = (pos % Sc)                                        # (B,)
         bidx = jnp.arange(B)
+        # serving slot mask: an inactive slot's ring buffer keeps its old
+        # bytes (the write re-writes the current slot value)
+        def gate(new, old, ax):
+            if active is None:
+                return new
+            a = active.reshape((B,) + (1,) * ax)
+            return jnp.where(a, new, old)
+
         k_cache = cache["k"].at[bidx, :, slot].set(
-            k[:, :, 0].astype(cache["k"].dtype))
+            gate(k[:, :, 0].astype(cache["k"].dtype),
+                 cache["k"][bidx, :, slot], 2))
         v_cache = cache["v"].at[bidx, :, slot].set(
-            v[:, :, 0].astype(cache["v"].dtype))
-        slot_pos = cache["slot_pos"].at[bidx, slot].set(pos)
+            gate(v[:, :, 0].astype(cache["v"].dtype),
+                 cache["v"][bidx, :, slot], 2))
+        slot_pos = cache["slot_pos"].at[bidx, slot].set(
+            gate(pos, cache["slot_pos"][bidx, slot], 0))
         out = decode_attention(
             q, k_cache, v_cache, slot_pos, pos, window=cfg.window
         )
@@ -310,6 +322,7 @@ def mla_attention(
     cache: Optional[dict] = None,
     block_k: int = 1024,
     ctx=None,                             # ShardCtx for decode_shardmap
+    active: Optional[jax.Array] = None,   # (B,) serving slot mask (decode)
 ) -> tuple[jax.Array, Optional[dict]]:
     m = cfg.mla or MLAConfig()
     B, S, d = x.shape
@@ -357,7 +370,7 @@ def mla_attention(
 
         q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)
         res = DD.mla_decode(q_lat, q_rope, ckv[:, 0], k_rope[:, 0],
-                            cache, pos, cfg=cfg, ctx=ctx)
+                            cache, pos, cfg=cfg, ctx=ctx, active=active)
         if res is not None:
             ctx_lat, new_cache = res
             out = jnp.einsum("bshl,lhv->bshv", ctx_lat.astype(x.dtype),
@@ -367,11 +380,21 @@ def mla_attention(
     Sc = cache["ckv"].shape[1]
     slot = pos % Sc
     bidx = jnp.arange(B)
-    ckv_c = cache["ckv"].at[bidx, slot].set(ckv[:, 0].astype(
-        cache["ckv"].dtype))
-    krope_c = cache["krope"].at[bidx, slot].set(k_rope[:, 0].astype(
-        cache["krope"].dtype))
-    slot_pos = cache["slot_pos"].at[bidx, slot].set(pos)
+
+    def gate(new, old, ax):
+        # serving slot mask: inactive slots keep their old cache bytes
+        if active is None:
+            return new
+        return jnp.where(active.reshape((B,) + (1,) * ax), new, old)
+
+    ckv_c = cache["ckv"].at[bidx, slot].set(
+        gate(ckv[:, 0].astype(cache["ckv"].dtype),
+             cache["ckv"][bidx, slot], 1))
+    krope_c = cache["krope"].at[bidx, slot].set(
+        gate(k_rope[:, 0].astype(cache["krope"].dtype),
+             cache["krope"][bidx, slot], 1))
+    slot_pos = cache["slot_pos"].at[bidx, slot].set(
+        gate(pos, cache["slot_pos"][bidx, slot], 0))
 
     q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)      # (B,1,h,lora)
     s_lat = jnp.einsum("bshl,btl->bhst", q_lat.astype(jnp.float32),

@@ -285,3 +285,146 @@ def make_serve_program(
     prog.add(weights)
     prog.add(decoder)
     return prog
+
+
+# --------------------------------------------------------------------------
+# continuous-batching serving (repro/serving): slot-masked decoder
+# --------------------------------------------------------------------------
+def slot_decoder_init(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decoder-cell state for the continuous batcher: every leaf is
+    per-slot (leading or embedded batch axis), so requests can join/leave
+    individual slots between stream ticks.  ``active`` is the slot mask;
+    free slots hold zeros and are never written by the transition."""
+    shape = (batch, 1)
+    if cfg.n_codebooks > 1:
+        shape = shape + (cfg.n_codebooks,)
+    return {
+        "cache": T.init_cache(cfg, batch, max_len),
+        "tokens": jnp.zeros(shape, jnp.int32),
+        "active": jnp.zeros((batch,), jnp.bool_),
+        "n_decoded": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def make_slot_serve_program(
+    cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL,
+) -> MisoProgram:
+    """The serving engine's resident program: a static ``weights`` cell
+    plus a *slot-masked* ``decoder`` cell.
+
+    Unlike ``make_serve_program`` (fixed batch, every row decodes), the
+    decoder here carries a per-slot ``active`` mask and gates every state
+    write on it: an inactive slot's cache bytes, position, and last token
+    are bit-for-bit frozen across the transition.  Because each batch
+    row's computation is row-independent (matmul rows, per-row softmax,
+    per-row argmax), an active slot's trajectory is bitwise-identical no
+    matter which — or how many — other slots are occupied.  That is the
+    isolation invariant the continuous batcher is built on, and it is
+    what lets ``repro.serving`` scatter new prompt caches into free slots
+    and evict finished ones mid-stream without perturbing anyone else.
+    """
+    from repro.serving.slots import infer_slot_axes, mask_slots
+
+    def w_init(key):
+        return {"params": T.init_params(
+            cfg, jax.random.fold_in(key, scfg.param_seed))}
+
+    weights = CellType(
+        name="weights", init=w_init, transition=lambda prev: prev["weights"],
+    )
+
+    axes = infer_slot_axes(
+        lambda b: slot_decoder_init(cfg, b, scfg.max_len))
+
+    def d_init(key):
+        return slot_decoder_init(cfg, scfg.batch, scfg.max_len)
+
+    def d_transition(prev):
+        st = prev["decoder"]
+        act = st["active"]
+        logits, cache = T.decode_step(
+            cfg, prev["weights"]["params"], st["cache"], st["tokens"],
+            ctx=ctx, active=act,
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
+        if cfg.n_codebooks == 1:
+            nxt = nxt.reshape(st["tokens"].shape)
+        new = {
+            "cache": cache,
+            "tokens": nxt,
+            "active": act,
+            "n_decoded": st["n_decoded"] + act.astype(jnp.int32),
+        }
+        # gate the whole writeback on the slot mask: the attention paths
+        # already mask their cache scatters, this covers every remaining
+        # leaf (mamba states, positions, tokens) in one structural select
+        return mask_slots(act, new, st, axes)
+
+    decoder = CellType(
+        name="decoder", init=d_init, transition=d_transition,
+        reads=("weights",), instances=scfg.batch,
+    )
+    prog = MisoProgram()
+    prog.add(weights)
+    prog.add(decoder)
+    return prog
+
+
+def install_prefill(cfg: ModelConfig, full: dict, filled: dict,
+                    plen: int) -> dict:
+    """Copy a prefill cache (length ``plen``) into a max_len-capacity
+    cache: pads every length-mismatched axis (slot_pos pads with -1 so
+    padded slots read as empty) and sets pos = plen."""
+    def seg(dst, src):
+        def leaf(d, s):
+            if d.shape == s.shape:
+                return s.astype(d.dtype)
+            # (..., plen, ...) -> slot into (..., max_len, ...) at axis
+            # where shapes differ
+            for ax in range(d.ndim):
+                if d.shape[ax] != s.shape[ax]:
+                    pad = [(0, d.shape[i] - s.shape[i]) if i == ax else (0, 0)
+                           for i in range(d.ndim)]
+                    fill = -1 if jnp.issubdtype(s.dtype, jnp.integer) else 0
+                    return jnp.pad(s, pad,
+                                   constant_values=fill).astype(d.dtype)
+            return s.astype(d.dtype)
+
+        return jax.tree.map(leaf, dst, src)
+
+    return {"segments": [seg(d, s) for d, s in zip(full["segments"],
+                                                   filled["segments"])],
+            "pos": jnp.full_like(full["pos"], plen)}
+
+
+def prefill_slot_state(
+    cfg: ModelConfig, scfg: ServeConfig, params, prompt: jax.Array,
+    *, ctx: ShardCtx = LOCAL,
+) -> tuple[dict, jax.Array]:
+    """Run the real prefill for ONE prompt and package it as a width-1
+    decoder slot state, ready to scatter into a free slot of the resident
+    batch (``serving.slots.join_slot``).
+
+    prompt: (P,) int32 (or (P, K) for multi-codebook archs).
+    Returns ``(slot_state, first_token)`` — first_token is the greedy
+    continuation of the prompt (the request's first emitted token) and is
+    also installed as the slot's ``tokens`` so the next decode tick
+    consumes it."""
+    tokens = prompt[None]                        # (1, P[, K])
+    plen = tokens.shape[1]
+    vision = None
+    if cfg.n_vision_tokens:
+        vision = jnp.zeros((1, min(cfg.n_vision_tokens, plen), cfg.d_model),
+                           cfg.compute_dtype)
+    logits, cache, _ = T.forward(cfg, params, tokens, ctx=ctx,
+                                 fill_cache=True, vision_embeds=vision)
+    full = T.init_cache(cfg, 1, scfg.max_len)
+    first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    if cfg.n_codebooks > 1:
+        first = first.reshape(1, 1, cfg.n_codebooks)
+    return {
+        "cache": install_prefill(cfg, full, cache, plen),
+        "tokens": first,
+        "active": jnp.ones((1,), jnp.bool_),
+        "n_decoded": jnp.zeros((1,), jnp.int32),
+    }, first

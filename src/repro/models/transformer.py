@@ -172,12 +172,13 @@ def unembed(params: Params, h: jax.Array, cfg: ModelConfig,
 # layer bodies
 # --------------------------------------------------------------------------
 def _shared_attn_apply(shared: Params, xin: jax.Array, cfg: ModelConfig,
-                       ctx: ShardCtx, positions, cache, fill_cache):
+                       ctx: ShardCtx, positions, cache, fill_cache,
+                       active=None):
     """The Zamba2 weight-shared transformer block (attention + MLP)."""
     h = xin
     a, kv = _attention(shared["attn"], L.rmsnorm(h, shared["ln1"],
                                                  cfg.rms_eps),
-                       cfg, ctx, positions, cache, fill_cache)
+                       cfg, ctx, positions, cache, fill_cache, active)
     h = h + a
     h = h + L.mlp(shared["mlp"], L.rmsnorm(h, shared["ln2"], cfg.rms_eps),
                   cfg.mlp_act)
@@ -185,12 +186,14 @@ def _shared_attn_apply(shared: Params, xin: jax.Array, cfg: ModelConfig,
 
 
 def _attention(p, x, cfg: ModelConfig, ctx: ShardCtx, positions, cache,
-               fill_cache):
+               fill_cache, active=None):
     """Returns (out, cache_out).  cache_out is the updated cache (decode),
-    the filled cache (fill_cache), or None."""
+    the filled cache (fill_cache), or None.  ``active`` is the serving
+    batcher's per-slot mask, threaded into the decode cache update."""
     fn = L.mla_attention if cfg.attn_type == "mla" else L.gqa_attention
     if cache is not None:
-        return fn(p, x, cfg, positions=positions, cache=cache, ctx=ctx)
+        return fn(p, x, cfg, positions=positions, cache=cache, ctx=ctx,
+                  active=active)
     out, _ = fn(p, x, cfg, positions=positions, cache=None,
                 block_k=ctx.block_k)
     if not fill_cache:
@@ -240,7 +243,8 @@ def _attention(p, x, cfg: ModelConfig, ctx: ShardCtx, positions, cache,
 
 def _layer_apply(p: Params, h: jax.Array, cfg: ModelConfig, kind: str,
                  ctx: ShardCtx, positions, cache, fill_cache,
-                 shared: Optional[Params], e0: Optional[jax.Array]):
+                 shared: Optional[Params], e0: Optional[jax.Array],
+                 active=None):
     """One scan step.  Returns (h, cache_out, aux)."""
     aux = jnp.float32(0)
     if kind == "mamba":
@@ -266,7 +270,7 @@ def _layer_apply(p: Params, h: jax.Array, cfg: ModelConfig, kind: str,
         xin = L.rmsnorm(xin, p["attn_norm"], cfg.rms_eps)
         acache = cache["attn"] if cache is not None else None
         u, kv = _shared_attn_apply(shared, xin, cfg, ctx, positions,
-                                   acache, fill_cache)
+                                   acache, fill_cache, active)
         h = h + u
         cout = None
         if mcaches[0] is not None or kv is not None:
@@ -277,7 +281,7 @@ def _layer_apply(p: Params, h: jax.Array, cfg: ModelConfig, kind: str,
         return h, cout, aux
     # attn_mlp / attn_moe
     a, cout = _attention(p["attn"], L.rmsnorm(h, p["ln1"], cfg.rms_eps),
-                         cfg, ctx, positions, cache, fill_cache)
+                         cfg, ctx, positions, cache, fill_cache, active)
     # pin the TP boundary on the bf16 block output: without the constraint
     # the partitioner is free to place the model-axis all-reduce after the
     # f32 upcast of the next rmsnorm, doubling its wire bytes (§Perf)
@@ -464,9 +468,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 def decode_step(
     cfg: ModelConfig, params: Params, cache: dict, tokens: jax.Array,
-    *, ctx: ShardCtx = LOCAL,
+    *, ctx: ShardCtx = LOCAL, active: Optional[jax.Array] = None,
 ):
-    """One serve step: tokens (B,1[,K]) -> (logits (B,1[,K],V), new cache)."""
+    """One serve step: tokens (B,1[,K]) -> (logits (B,1[,K],V), new cache).
+
+    ``active`` (B, bool) is the continuous batcher's slot mask: inactive
+    batch slots (free, or a request that just left) keep their cache bytes
+    and position untouched, so a partially-full resident batch decodes
+    bitwise-identically to a full one.  The mask is threaded through the
+    attention cache-update paths (local scatter and the shard_map decode
+    of ``distributed/decode.py``); callers that hold whole-state slots
+    (the serving decoder cell) additionally gate their state writeback.
+    """
     B = tokens.shape[0]
     pos = cache["pos"]                       # (B,)
     positions = pos[:, None]
@@ -482,7 +495,8 @@ def decode_step(
         def body(h, xs):
             lp, lc = xs
             h, cout, _ = _layer_apply(
-                lp, h, cfg, seg.kind, ctx, positions, lc, False, shared, e0
+                lp, h, cfg, seg.kind, ctx, positions, lc, False, shared, e0,
+                active,
             )
             return h, cout
 
@@ -497,4 +511,5 @@ def decode_step(
         new_segs.append(new_c)
     h = L.rmsnorm(h, params["final_norm"], cfg.rms_eps)
     logits = unembed(params, h, cfg, ctx)
-    return logits, {"segments": new_segs, "pos": pos + 1}
+    new_pos = pos + 1 if active is None else pos + active.astype(pos.dtype)
+    return logits, {"segments": new_segs, "pos": new_pos}

@@ -1,0 +1,49 @@
+"""Continuous-batching serving over the MISO runtime (``miso.serve``).
+
+Layers:
+  * ``request``  — Request + bounded admission queue (deadlines,
+    cancellation, back-pressure).
+  * ``slots``    — slot ownership + pure-array slot surgery (join/leave/
+    copy/fingerprint) over the resident decoder batch.
+  * ``engine``   — the ServingEngine: Executor.stream + swap hook, per-
+    request DMR/TMR on replica slots, per-request fault attribution,
+    tokens/s + TTFT SLO metrics.
+  * ``lm``       — the LM adapter (slot-masked decoder cell of
+    models/lm_cells.py); imported lazily so toy/generic engines don't
+    pull in the transformer stack.
+"""
+from .engine import RequestRecord, ServingEngine, SlotAdapter  # noqa: F401
+from .request import (  # noqa: F401
+    CANCELLED,
+    DONE,
+    EXPIRED,
+    QUEUED,
+    REJECTED,
+    RUNNING,
+    Request,
+    RequestQueue,
+)
+from .slots import (  # noqa: F401
+    SlotManager,
+    copy_slot,
+    infer_slot_axes,
+    join_slot,
+    mask_slots,
+    read_slot,
+    slot_fingerprints,
+)
+
+__all__ = [
+    "CANCELLED", "DONE", "EXPIRED", "QUEUED", "REJECTED", "RUNNING",
+    "Request", "RequestQueue", "RequestRecord", "ServingEngine",
+    "SlotAdapter", "SlotManager", "copy_slot", "infer_slot_axes",
+    "join_slot", "lm_engine_parts", "mask_slots", "read_slot",
+    "slot_fingerprints",
+]
+
+
+def __getattr__(name):
+    if name == "lm_engine_parts":
+        from .lm import lm_engine_parts
+        return lm_engine_parts
+    raise AttributeError(name)

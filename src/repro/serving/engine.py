@@ -1,0 +1,492 @@
+"""The continuous-batching serving engine.
+
+One resident decoder program (a weights cell + a slot-masked decoder
+cell) is compiled ONCE and driven through ``Executor.stream``; the engine
+multiplexes many independent decode requests onto its fixed batch:
+
+  * between ticks, the stream's ``swap`` hook scatters freshly prefilled
+    prompt caches into free slots (join) and scrubs finished ones
+    (leave/compact) — the resident states never leave the device;
+  * per tick, the engine harvests each running request's new token,
+    checks stop/budget/deadline, and evicts finished requests;
+  * per-request dependability: a request's ``RedundancyPolicy`` maps onto
+    *replica slots* of the same batch — replication is mechanically
+    identical to data parallelism (core/redundancy.py), so DMR = the same
+    prompt joined into 2 slots, TMR = 3.  Replica slots compute bitwise-
+    identical trajectories unless hardware misbehaves; the engine
+    compares their 128-bit per-slot fingerprints between ticks,
+    attributes any mismatch to the *owning request* in the engine's
+    FaultLedger, repairs (TMR: copy a majority slot over the minority;
+    DMR: the paper's §IV third execution — ``Executor.pure_step`` replays
+    the tick from the immutable previous buffer — decides, and both
+    replicas adopt the replay), and only then emits the token.
+
+The isolation invariant that makes all of this sound: an active slot's
+trajectory is bitwise-identical no matter which other slots are occupied
+(row-independent batch math + slot-masked writeback), so requests join
+and leave mid-stream without perturbing anyone — tested in
+tests/test_serving.py against static-batch decodes.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor as _ex
+from repro.core.redundancy import FaultLedger
+
+from .request import (
+    CANCELLED,
+    DONE,
+    EXPIRED,
+    QUEUED,
+    REJECTED,
+    RUNNING,
+    Request,
+    RequestQueue,
+)
+from .slots import SlotManager, copy_slot, join_slot, read_slot, \
+    slot_fingerprints
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# the model adapter: everything request-format-specific in one place
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SlotAdapter:
+    """What the engine needs to know about the slotted program.
+
+    cell        -- name of the slot-masked decoder cell.
+    n_slots     -- its batch width.
+    slot_axes   -- per-leaf slot-axis pytree of the cell state
+                   (``slots.infer_slot_axes``).
+    prefill     -- ``(request, states) -> (slot_state, first_token)``:
+                   run the prompt, return a width-1 decoder slot state
+                   ready to join, plus the first emitted token.
+    read_tokens -- ``(cell_state) -> (B, ...)`` device array of each
+                   slot's last emitted token.
+    make_empty  -- ``() -> slot_state``: a width-1 *inactive* slot state
+                   (scrubbed cache); scattered over evicted slots.
+    validate    -- optional ``(request) -> str | None`` admission check
+                   (e.g. prompt longer than the cache); a string rejects.
+    """
+
+    cell: str
+    n_slots: int
+    slot_axes: Pytree
+    prefill: Callable[[Request, dict], tuple[Pytree, jax.Array]]
+    read_tokens: Callable[[Pytree], jax.Array]
+    make_empty: Callable[[], Pytree]
+    validate: Optional[Callable[[Request], Optional[str]]] = None
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Engine-side lifecycle record of one request (the report ledger's
+    unit of attribution)."""
+
+    req: Request
+    status: str
+    submitted_at: float
+    slots: list[int] = dataclasses.field(default_factory=list)
+    tokens: list[np.ndarray] = dataclasses.field(default_factory=list)
+    ttft: Optional[float] = None
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    faults: int = 0
+    cancel_requested: bool = False
+
+    @property
+    def id(self) -> str:
+        return self.req.id
+
+    def token_ids(self) -> list[int]:
+        return [int(t.reshape(-1)[0]) for t in self.tokens]
+
+
+class ServingEngine:
+    """Continuous batcher over one compiled ``Executor``.
+
+    Construct through ``miso.serve(program, adapter, ...)``; then::
+
+        engine.start(jax.random.PRNGKey(0))
+        engine.submit(Request(prompt, max_new_tokens=32))
+        engine.submit(Request(prompt2, policy=RedundancyPolicy(level=2)))
+        engine.pump()                  # tick until drained
+        engine.result("r0")            # tokens, status, ttft, faults
+        engine.metrics()               # tokens/s, TTFT p50/p99, ledger
+    """
+
+    def __init__(
+        self,
+        program,
+        adapter: SlotAdapter,
+        *,
+        backend: str = "lockstep",
+        max_queue: int = 64,
+        retain_results: int = 1024,
+        time_fn: Callable[[], float] = time.monotonic,
+        **compile_opts,
+    ):
+        self.adapter = adapter
+        self.exe = _ex.compile(program, backend=backend, **compile_opts)
+        if type(self.exe).pure_step is _ex.Executor.pure_step:
+            raise ValueError(
+                f"backend {self.exe.name!r} has no pure_step replay; the "
+                "engine needs it for DMR tie-breaks (use a lockstep "
+                "flavor or 'host')")
+        self.queue = RequestQueue(max_depth=max_queue, time_fn=time_fn)
+        self.slots = SlotManager(adapter.n_slots)
+        self.ledger = FaultLedger()   # keyed by REQUEST id, not cell name
+        self.time_fn = time_fn
+        self.requests: dict[str, RequestRecord] = {}
+        #: finished records are retained for result() pickup, bounded so a
+        #: long-running server's host memory stays flat: beyond
+        #: `retain_results` finished requests, the oldest record (and its
+        #: queue-status + non-flagged ledger entries) is dropped FIFO.
+        #: Callers that want immediate reclamation call drop(rid).
+        self.retain_results = retain_results
+        self._finished: collections.deque[str] = collections.deque()
+        self._terminal_counts = {DONE: 0, CANCELLED: 0, EXPIRED: 0}
+        self._states: Optional[dict] = None
+        self._override: Optional[dict] = None
+        self._tick_input: Optional[dict] = None
+        self._tick_step: int = 0
+        self._ticks = 0
+        self._tokens_out = 0
+        self._submitted = 0
+        self._t0: Optional[float] = None
+
+        cell, axes = adapter.cell, adapter.slot_axes
+        self._jit_join = jax.jit(
+            lambda st, slot_state, slot:
+                {**st, cell: join_slot(st[cell], slot_state, slot, axes)})
+        self._jit_copy = jax.jit(
+            lambda st, src, dst:
+                {**st, cell: copy_slot(st[cell], src, dst, axes)})
+        # adopt: one slot of `other` (the §IV replay) replaces ours
+        self._jit_adopt = jax.jit(
+            lambda st, other, slot:
+                {**st, cell: join_slot(
+                    st[cell], read_slot(other[cell], slot, axes), slot,
+                    axes)})
+        self._jit_fps = jax.jit(lambda dec: slot_fingerprints(dec, axes))
+        self._empty = adapter.make_empty()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self, key: jax.Array) -> None:
+        """Initialize the resident states (weights + empty slots)."""
+        self._states = self.exe.init(key)
+        self._t0 = self.time_fn()
+
+    def submit(self, req: Request) -> bool:
+        """Admission control + enqueue.  False = rejected (queue full,
+        too many replica slots, or adapter validation)."""
+        reason = None
+        if req.n_slots > self.adapter.n_slots:
+            reason = (f"policy needs {req.n_slots} slots, engine has "
+                      f"{self.adapter.n_slots}")
+        elif self.adapter.validate is not None:
+            reason = self.adapter.validate(req)
+        rec = RequestRecord(req=req, status=QUEUED,
+                            submitted_at=self.time_fn())
+        self.requests[req.id] = rec
+        self._submitted += 1
+        if reason is not None:
+            self.queue.rejected += 1
+            self._finish_record(rec, REJECTED)
+            return False
+        ok = self.queue.submit(req)
+        rec.status = self.queue.status[req.id]
+        if not ok:
+            self._finish_record(rec, REJECTED)
+        return ok
+
+    def cancel(self, rid: str) -> bool:
+        """Cancel a queued request now, or a running one at the next tick
+        boundary."""
+        rec = self.requests.get(rid)
+        if rec is None:
+            return False
+        if rec.status == QUEUED and self.queue.cancel(rid):
+            self._finish_record(rec, CANCELLED)
+            return True
+        if rec.status == RUNNING:
+            rec.cancel_requested = True
+            return True
+        return False
+
+    def _reconcile(self) -> None:
+        """Pull lazily-updated queue statuses (deadline expiry happens at
+        queue-head inspection) into the engine records."""
+        self.queue.peek()   # prune deadline-expired heads
+        for rec in list(self.requests.values()):
+            if rec.status == QUEUED:
+                status = self.queue.status.get(rec.id, rec.status)
+                if status != QUEUED:
+                    self._finish_record(rec, status)
+
+    def result(self, rid: str) -> dict:
+        self._reconcile()
+        rec = self.requests[rid]
+        return {
+            "status": rec.status,
+            "tokens": rec.token_ids() if rec.tokens and
+                      rec.tokens[0].size == 1 else list(rec.tokens),
+            "n_tokens": len(rec.tokens),
+            "ttft_s": rec.ttft,
+            "faults": rec.faults,
+            "slots": list(rec.slots),
+        }
+
+    # -- the serving loop --------------------------------------------------
+    def has_work(self) -> bool:
+        """Anything queued or resident?  (pump() returns when this turns
+        false; arrival loops poll it.)"""
+        return self.queue.peek() is not None or self.slots.active > 0
+
+    def pump(self, max_ticks: Optional[int] = None, *, faults=None) -> int:
+        """Drive the stream until drained (or ``max_ticks``).  Returns the
+        number of ticks executed.  ``faults`` (FaultSpecs keyed on global
+        step index) thread into the compiled step — the fault-injection
+        hook the dependability tests use."""
+        if self._states is None:
+            raise RuntimeError("call start(key) before pump()")
+        if not self.has_work():
+            return 0
+        ticks = 0
+        stream = self.exe.stream(self._states, swap=self._swap,
+                                 faults=faults)
+        try:
+            for states, _reports in stream:
+                states = self._postprocess(self._tick_step, states)
+                self._states = states
+                self._override = states
+                self._ticks += 1
+                ticks += 1
+                if max_ticks is not None and ticks >= max_ticks:
+                    break
+                if not self.has_work():
+                    break
+        finally:
+            stream.close()
+        return ticks
+
+    def _swap(self, t: int, states: dict) -> dict:
+        """The stream's state swap-in hook (pre-tick boundary): apply the
+        previous tick's repairs/evictions, then join newly admitted
+        requests into free slots."""
+        if self._override is not None:
+            states = self._override
+            self._override = None
+        states = self._admit(t, states)
+        self._tick_input = states   # immutable prev buffer (§IV replays)
+        self._tick_step = t
+        return states
+
+    # -- admission: queue -> slots ----------------------------------------
+    def _admit(self, t: int, states: dict) -> dict:
+        while True:
+            req = self.queue.peek()
+            if req is None or self.slots.free < req.n_slots:
+                break   # FIFO: no overtaking of a head that doesn't fit
+            req = self.queue.pop()
+            rec = self.requests[req.id]
+            slot_state, first = self.adapter.prefill(req, states)
+            slots = self.slots.alloc(req.id, req.n_slots)
+            for s in slots:
+                states = self._jit_join(states, slot_state, jnp.int32(s))
+            now = self.time_fn()
+            rec.slots = slots
+            rec.status = RUNNING
+            rec.started_at = now
+            # the prefill's greedy continuation IS the first emitted token
+            self._emit(rec, np.asarray(jax.device_get(first)).reshape(-1),
+                       now)
+            status = self._should_finish(rec, now)
+            if status is not None:   # e.g. max_new_tokens == 1
+                states = self._evict(states, rec, status)
+        return states
+
+    # -- per-tick postprocessing: repair -> harvest -> evict ---------------
+    def _postprocess(self, t: int, states: dict) -> dict:
+        running = [r for r in self.requests.values()
+                   if r.status == RUNNING]
+        replicated = [r for r in running if r.req.policy.level > 1]
+        if replicated:
+            states = self._check_replicas(t, states, replicated)
+        if running:
+            toks = np.asarray(jax.device_get(
+                self.adapter.read_tokens(states[self.adapter.cell])))
+            now = self.time_fn()
+            for rec in running:
+                if rec.status != RUNNING:
+                    continue   # evicted during repair (should not happen)
+                self._emit(rec, toks[rec.slots[0]].reshape(-1), now)
+                status = self._should_finish(rec, now)
+                if status is not None:
+                    states = self._evict(states, rec, status)
+        return states
+
+    def _check_replicas(self, t: int, states: dict,
+                        recs: list[RequestRecord]) -> dict:
+        """Compare each replicated request's replica-slot fingerprints;
+        attribute mismatches to the owning request and repair."""
+        fps = np.asarray(jax.device_get(
+            self._jit_fps(states[self.adapter.cell])))
+        replay = None   # lazy: one §IV replay serves every event this tick
+        for rec in recs:
+            s = rec.slots
+            eq = [np.array_equal(fps[s[0]], fps[s[i]])
+                  for i in range(1, len(s))]
+            if all(eq) and (len(s) < 3
+                            or np.array_equal(fps[s[1]], fps[s[2]])):
+                continue
+            level = rec.req.policy.level
+            if level == 3:
+                pairs = [(0, 1, np.array_equal(fps[s[0]], fps[s[1]])),
+                         (0, 2, np.array_equal(fps[s[0]], fps[s[2]])),
+                         (1, 2, np.array_equal(fps[s[1]], fps[s[2]]))]
+                agree = [(i, j) for i, j, ok in pairs if ok]
+                if agree:
+                    i, j = agree[0]
+                    bad = ({0, 1, 2} - {i, j}).pop()
+                    states = self._jit_copy(states, jnp.int32(s[i]),
+                                            jnp.int32(s[bad]))
+                    self._attribute(rec, t, [bad], fps, s)
+                    continue
+                bad = [0, 1, 2]   # triple divergence: fall through to replay
+            else:
+                bad = None        # DMR: symmetric — the replay decides
+            if replay is None:
+                # paper §IV: "a third equal transition should be executed
+                # to decide between the two possible outcomes" — replay
+                # the tick (no armed fault) from the immutable pre-tick
+                # buffer; pure_step has no ledger/counter side effects
+                replay, _ = self.exe.pure_step(self._tick_input, t)
+                rfps = np.asarray(jax.device_get(
+                    self._jit_fps(replay[self.adapter.cell])))
+            if bad is None:
+                bad = [i for i, sl in enumerate(s)
+                       if not np.array_equal(fps[sl], rfps[sl])]
+            for sl in s:
+                states = self._jit_adopt(states, replay, jnp.int32(sl))
+            self._attribute(rec, t, bad, fps, s)
+        return states
+
+    def _attribute(self, rec: RequestRecord, t: int, bad: list[int],
+                   fps: np.ndarray, slots: list[int]) -> None:
+        """One detected strike, charged to the owning request in the
+        engine ledger (per-request fault accounting; repeated offenders
+        surface in ``permanent_fault_suspects`` keyed by request)."""
+        rec.faults += 1
+        words = 0
+        for i in range(1, len(slots)):
+            words = max(words,
+                        int(np.sum(fps[slots[0]] != fps[slots[i]])))
+        per = [0.0] * 3
+        for b in bad:
+            per[b] = 1.0
+        self.ledger.update(t, {rec.id: {
+            "events": 1.0,
+            "mismatch_elems": float(max(words, 1)),
+            "per_replica": per,
+        }})
+
+    # -- emit / finish / evict --------------------------------------------
+    def _emit(self, rec: RequestRecord, token: np.ndarray,
+              now: float) -> None:
+        rec.tokens.append(token)
+        self._tokens_out += 1
+        if rec.ttft is None:
+            rec.ttft = now - rec.submitted_at
+
+    def _should_finish(self, rec: RequestRecord,
+                       now: float) -> Optional[str]:
+        if rec.cancel_requested:
+            return CANCELLED
+        if rec.req.deadline is not None and now >= rec.req.deadline:
+            return EXPIRED
+        if len(rec.tokens) >= rec.req.max_new_tokens:
+            return DONE
+        if (rec.req.stop_token is not None and rec.tokens
+                and int(rec.tokens[-1].reshape(-1)[0]) == rec.req.stop_token):
+            return DONE
+        return None
+
+    def _evict(self, states: dict, rec: RequestRecord, status: str) -> dict:
+        """Leave: scrub the request's slots back to empty (inactive mask,
+        zeroed cache) and return them to the free pool."""
+        for s in self.slots.release(rec.id):
+            states = self._jit_join(states, self._empty, jnp.int32(s))
+        self._finish_record(rec, status)
+        return states
+
+    def _finish_record(self, rec: RequestRecord, status: str) -> None:
+        rec.status = status
+        rec.finished_at = self.time_fn()
+        self.queue.status[rec.id] = status
+        if status in self._terminal_counts:
+            self._terminal_counts[status] += 1
+        self._finished.append(rec.id)
+        while len(self._finished) > self.retain_results:
+            self.drop(self._finished[0])
+
+    def drop(self, rid: str) -> bool:
+        """Release a finished request's record and status (result() no
+        longer answers for it); flagged-suspect ledger entries survive.
+        Called automatically FIFO beyond ``retain_results``."""
+        rec = self.requests.get(rid)
+        if rec is None or rec.status in (QUEUED, RUNNING):
+            return False
+        try:
+            self._finished.remove(rid)
+        except ValueError:
+            pass
+        del self.requests[rid]
+        self.queue.status.pop(rid, None)
+        if rid not in self.ledger.flagged:
+            self.ledger.totals.pop(rid, None)
+            self.ledger.recent.pop(rid, None)
+        return True
+
+    # -- the metrics / SLO surface ----------------------------------------
+    def metrics(self) -> dict:
+        self._reconcile()
+        recs = list(self.requests.values())
+        ttfts = sorted(r.ttft for r in recs if r.ttft is not None)
+        wall = (self.time_fn() - self._t0) if self._t0 is not None else 0.0
+        running = sum(1 for r in recs if r.status == RUNNING)
+        m = {
+            "backend": self.exe.name,
+            "n_slots": self.adapter.n_slots,
+            "ticks": self._ticks,
+            "queue_depth": self.queue.depth,
+            "active_requests": running,
+            "free_slots": self.slots.free,
+            # cumulative over the engine's lifetime (records themselves are
+            # retained only up to retain_results)
+            "submitted": self._submitted,
+            "done": self._terminal_counts[DONE],
+            "cancelled": self._terminal_counts[CANCELLED],
+            "expired": self._terminal_counts[EXPIRED],
+            "rejected": self.queue.rejected,
+            "tokens_out": self._tokens_out,
+            "wall_s": wall,
+            "tokens_per_s": self._tokens_out / wall if wall > 0 else 0.0,
+            "request_faults": {r.id: r.faults for r in recs if r.faults},
+            "fault_totals": self.ledger.totals,
+            "suspects": self.ledger.permanent_fault_suspects(),
+        }
+        if ttfts:
+            m["ttft_p50_s"] = float(np.percentile(ttfts, 50))
+            m["ttft_p99_s"] = float(np.percentile(ttfts, 99))
+        return m

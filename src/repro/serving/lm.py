@@ -1,0 +1,65 @@
+"""LM adapter for the continuous batcher: the slot-masked serve program
+of ``models/lm_cells.py`` packaged as a ``SlotAdapter``.
+
+    cfg = get_reduced("internlm2-1.8b")
+    prog, adapter = lm_engine_parts(cfg, ServeConfig(batch=8, max_len=128))
+    engine = miso.serve(prog, adapter)
+
+Prefill is jitted per prompt length (each distinct length compiles once;
+production would bucket lengths — noted in ROADMAP).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import LOCAL, ShardCtx
+from repro.models.config import ModelConfig
+from repro.models.lm_cells import (
+    ServeConfig,
+    make_slot_serve_program,
+    prefill_slot_state,
+    slot_decoder_init,
+)
+
+from .engine import SlotAdapter
+from .request import Request
+from .slots import infer_slot_axes
+
+
+def lm_engine_parts(
+    cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL,
+):
+    """(program, adapter) for ``miso.serve``: the resident slot-masked LM
+    serve program plus the glue the engine needs to run it."""
+    prog = make_slot_serve_program(cfg, scfg, ctx)
+    axes = infer_slot_axes(lambda b: slot_decoder_init(cfg, b, scfg.max_len))
+    # jit keys its compilation cache on input shapes, so one jitted
+    # function compiles once per distinct prompt LENGTH and reuses it
+    # (production would bucket lengths to bound compiles — see ROADMAP)
+    jit_prefill = jax.jit(lambda params, p: prefill_slot_state(
+        cfg, scfg, params, p, ctx=ctx))
+
+    def prefill(req: Request, states: dict):
+        prompt = jnp.asarray(req.prompt, jnp.int32)
+        return jit_prefill(states["weights"]["params"], prompt)
+
+    def validate(req: Request) -> Optional[str]:
+        plen = int(jnp.asarray(req.prompt).shape[0])
+        if plen + req.max_new_tokens > scfg.max_len and not cfg.window:
+            return (f"prompt {plen} + budget {req.max_new_tokens} exceeds "
+                    f"cache capacity {scfg.max_len}")
+        return None
+
+    adapter = SlotAdapter(
+        cell="decoder",
+        n_slots=scfg.batch,
+        slot_axes=axes,
+        prefill=prefill,
+        read_tokens=lambda dec: dec["tokens"],
+        make_empty=lambda: slot_decoder_init(cfg, 1, scfg.max_len),
+        validate=validate,
+    )
+    return prog, adapter

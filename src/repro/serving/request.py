@@ -1,0 +1,125 @@
+"""Requests and the admission queue of the continuous batcher.
+
+A ``Request`` is one decode job: a prompt, a token budget, an optional
+deadline, and — the MISO twist — a per-request ``RedundancyPolicy``: the
+*caller* chooses how dependable their own decode should be (none / DMR /
+TMR), and pays for it in slots of the resident batch, without affecting
+anyone else's latency or bytes.
+
+``RequestQueue`` is the host-side admission layer: bounded depth
+(back-pressure by rejection), FIFO ordering, lazy deadline expiry (a
+request whose deadline passes while queued is never started), and
+cancellation of queued work.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Optional
+
+from repro.core.cell import NO_REDUNDANCY, RedundancyPolicy
+
+# request lifecycle states
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+CANCELLED = "cancelled"
+EXPIRED = "expired"
+REJECTED = "rejected"
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One decode request.
+
+    prompt          -- model-specific payload (LM: (P,) int32 token array).
+    max_new_tokens  -- decode budget (the prefill continuation counts as
+                       token 1).
+    policy          -- per-request dependability: level 1 = none, 2 = DMR
+                       (detect + §IV third-execution tie-break), 3 = TMR
+                       (detect + majority repair).  Costs ``level`` slots.
+    deadline        -- absolute time (engine clock) after which the
+                       request is dropped: while queued it expires
+                       unstarted; while running it is evicted with
+                       partial output.
+    stop_token      -- optional early-stop token id.
+    """
+
+    prompt: Any
+    max_new_tokens: int = 16
+    policy: RedundancyPolicy = NO_REDUNDANCY
+    deadline: Optional[float] = None
+    stop_token: Optional[int] = None
+    id: Optional[str] = None
+
+    def __post_init__(self):
+        if self.id is None:
+            self.id = f"r{next(_ids)}"
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def n_slots(self) -> int:
+        return self.policy.level
+
+
+class RequestQueue:
+    """Bounded FIFO admission queue with deadlines and cancellation."""
+
+    def __init__(self, max_depth: int = 64,
+                 time_fn: Callable[[], float] = time.monotonic):
+        self.max_depth = max_depth
+        self.time_fn = time_fn
+        self._q: collections.deque[Request] = collections.deque()
+        self.status: dict[str, str] = {}
+        self.rejected = 0
+        self.expired = 0
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: Request) -> bool:
+        """Admit or reject (bounded queue = explicit back-pressure)."""
+        if len(self._q) >= self.max_depth:
+            self.status[req.id] = REJECTED
+            self.rejected += 1
+            return False
+        self.status[req.id] = QUEUED
+        self._q.append(req)
+        return True
+
+    def cancel(self, rid: str) -> bool:
+        """Cancel a *queued* request (running ones are the engine's to
+        evict).  True if it was found waiting."""
+        for req in self._q:
+            if req.id == rid:
+                self._q.remove(req)
+                self.status[rid] = CANCELLED
+                return True
+        return False
+
+    def _expire_head(self) -> None:
+        now = self.time_fn()
+        while self._q and self._q[0].deadline is not None \
+                and self._q[0].deadline <= now:
+            dead = self._q.popleft()
+            self.status[dead.id] = EXPIRED
+            self.expired += 1
+
+    def peek(self) -> Optional[Request]:
+        """Next admissible request (deadline-expired heads are dropped)."""
+        self._expire_head()
+        return self._q[0] if self._q else None
+
+    def pop(self) -> Optional[Request]:
+        self._expire_head()
+        if not self._q:
+            return None
+        req = self._q.popleft()
+        self.status[req.id] = RUNNING
+        return req

@@ -1,0 +1,165 @@
+"""Slot bookkeeping + pure-array slot surgery for the continuous batcher.
+
+The resident decoder cell has a fixed batch dimension of ``n_slots``; the
+engine multiplexes many requests onto it by scattering prompt caches into
+free slots between stream ticks and evicting finished ones.  This module
+has the two halves of that:
+
+  * ``SlotManager`` — host-side ownership (which request holds which
+    slots; per-request *replica* slots for DMR/TMR policies).
+  * pure jittable array helpers — ``join_slot`` / ``read_slot`` /
+    ``copy_slot`` / ``slot_fingerprints`` / ``mask_slots``, all driven by
+    a per-leaf *slot-axis* pytree (``infer_slot_axes``), because the
+    decoder state's batch axis is not in the same position on every leaf
+    (KV caches stack a layer axis in front; positions are rank-1).
+
+Everything here is model-agnostic: the LM adapter and the toy test
+programs use the same helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.redundancy import fingerprint
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# slot-axis inference
+# --------------------------------------------------------------------------
+def infer_slot_axes(make_state: Callable[[int], Pytree],
+                    w1: int = 2, w2: int = 3) -> Pytree:
+    """Per-leaf slot (batch) axis of a slotted cell state, found
+    structurally: evaluate the state's shape at two widths and locate the
+    single axis that scales with the width.  Shape-only (``eval_shape``),
+    so no arrays are allocated.  Raises if any leaf has zero or several
+    width-dependent axes — every leaf of a slotted state must be
+    per-slot, otherwise join/leave could not be expressed."""
+    s1 = jax.eval_shape(lambda: make_state(w1))
+    s2 = jax.eval_shape(lambda: make_state(w2))
+
+    def ax(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"leaf {a.shape}/{b.shape} has {len(diffs)} width-dependent "
+                "axes; a slotted cell state needs exactly one slot axis "
+                "per leaf")
+        return diffs[0]
+
+    return jax.tree.map(ax, s1, s2)
+
+
+def _bcast(mask: jax.Array, ndim: int, ax: int) -> jax.Array:
+    """Reshape a (B,) mask to broadcast against a rank-``ndim`` leaf whose
+    slot axis is ``ax``."""
+    return mask.reshape((1,) * ax + (-1,) + (1,) * (ndim - ax - 1))
+
+
+# --------------------------------------------------------------------------
+# pure slot surgery (jit these with ``axes`` closed over)
+# --------------------------------------------------------------------------
+def mask_slots(active: jax.Array, new: Pytree, old: Pytree,
+               axes: Pytree) -> Pytree:
+    """Per-slot select: active slots take ``new``, inactive keep ``old``
+    bit-for-bit.  The writeback gate of the slot-masked decoder."""
+    return jax.tree.map(
+        lambda n, o, ax: jnp.where(_bcast(active, n.ndim, ax), n, o),
+        new, old, axes)
+
+
+def join_slot(state: Pytree, slot_state: Pytree, slot: jax.Array,
+              axes: Pytree) -> Pytree:
+    """Scatter a width-1 slot state into batch slot ``slot`` (traced index
+    is fine — one compile covers every slot)."""
+    return jax.tree.map(
+        lambda dst, src, ax: jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=ax),
+        state, slot_state, axes)
+
+
+def read_slot(state: Pytree, slot: jax.Array, axes: Pytree) -> Pytree:
+    """The width-1 view of batch slot ``slot`` (inverse of ``join_slot``)."""
+    return jax.tree.map(
+        lambda x, ax: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax),
+        state, axes)
+
+
+def copy_slot(state: Pytree, src: jax.Array, dst: jax.Array,
+              axes: Pytree) -> Pytree:
+    """Copy slot ``src`` over slot ``dst`` — TMR repair: re-synchronize a
+    minority replica slot from a majority one (exact, bitwise)."""
+    return join_slot(state, read_slot(state, src, axes), dst, axes)
+
+
+def slot_fingerprints(state: Pytree, axes: Pytree) -> jax.Array:
+    """(B, 4) uint32: the 128-bit state fingerprint of every slot's view
+    of the state.  Replica slots of one request are bitwise-equal by
+    construction, so equal fingerprints <=> healthy; the engine compares
+    these between ticks to detect (DMR) and localize (TMR) strikes at
+    request granularity, at O(B * 16 bytes) host traffic."""
+    moved = jax.tree.map(lambda x, ax: jnp.moveaxis(x, ax, 0), state, axes)
+    return jax.vmap(fingerprint)(moved)
+
+
+# --------------------------------------------------------------------------
+# host-side ownership
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SlotManager:
+    """Ownership of the resident batch's slots.
+
+    A request occupies ``policy.level`` slots (1 = none, 2 = DMR, 3 =
+    TMR): replication maps onto *extra batch rows* of the decoder — the
+    same observation that makes cell replication "mechanically identical
+    to data parallelism" (core/redundancy.py), applied per request, so
+    unprotected requests pay nothing for their neighbors' protection.
+    """
+
+    n_slots: int
+
+    def __post_init__(self):
+        self._free: list[int] = list(range(self.n_slots))
+        self._slots_of: dict[str, list[int]] = {}
+        self._owner: dict[int, str] = {}
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def slots_of(self, rid: str) -> list[int]:
+        return list(self._slots_of.get(rid, ()))
+
+    def owner(self, slot: int) -> Optional[str]:
+        return self._owner.get(slot)
+
+    def alloc(self, rid: str, n: int) -> Optional[list[int]]:
+        """n contiguous-in-ownership (not necessarily adjacent) free slots
+        for request ``rid``; None if the batch can't fit it right now."""
+        if rid in self._slots_of:
+            raise ValueError(f"request {rid!r} already holds slots")
+        if n > len(self._free):
+            return None
+        got = [self._free.pop(0) for _ in range(n)]
+        self._slots_of[rid] = got
+        for s in got:
+            self._owner[s] = rid
+        return got
+
+    def release(self, rid: str) -> list[int]:
+        got = self._slots_of.pop(rid, [])
+        for s in got:
+            del self._owner[s]
+            self._free.append(s)
+        self._free.sort()  # deterministic reuse order
+        return got

@@ -354,6 +354,200 @@ def test_stream_is_resumable_midway():
 
 
 # ---------------------------------------------------------------------------
+# Executor.stream across ALL back-ends: resumption mid-stream, compare_every
+# amortization, report/ledger attribution parity, the swap hook, and the
+# lifted checkpoint protocol (serving-subsystem satellites)
+# ---------------------------------------------------------------------------
+def dmr_program():
+    p = miso.MisoProgram()
+    p.add(miso.CellType(
+        "a", lambda k: {"x": jnp.linspace(0.0, 1.0, 8, dtype=jnp.float32)},
+        lambda prev: {"x": prev["a"]["x"] * 0.5
+                      + jnp.roll(prev["a"]["x"], 1) * 0.25},
+        redundancy=miso.RedundancyPolicy(level=2)))
+    p.add(miso.CellType(
+        "c", lambda k: {"x": jnp.float32(1.0)},
+        lambda prev: {"x": prev["c"]["x"] * 0.5 + 0.5}))
+    return p
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_stream_resumes_midway_on_every_backend(backend):
+    """Tearing a stream down and opening a new one continues the same
+    trajectory (the serving engine re-opens the stream every pump)."""
+    exe = miso.compile(three_cell_program(), backend=backend)
+    states = exe.init(jax.random.PRNGKey(0))
+    it = exe.stream(states)
+    for _ in range(3):
+        states, _ = next(it)
+    it.close()
+    it2 = exe.stream(states)   # resumes at exe's internal step counter
+    for _ in range(4):
+        states, _ = next(it2)
+    it2.close()
+    ref = miso.compile(three_cell_program(), backend=backend)
+    expect = ref.run(ref.init(jax.random.PRNGKey(0)), 7).states
+    assert _leaves_equal(states, expect)
+    assert exe.metrics()["steps"] == 7
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_stream_ledger_attribution_parity(backend):
+    """A DMR strike observed through stream lands on the same ledger step
+    with the same totals on every back-end (the host back-end additionally
+    recovers, which must not change detection accounting)."""
+    prog = dmr_program()
+    fault = miso.FaultSpec.at(step=2, cell_id=0, replica=1, index=3, bit=21)
+    exe = miso.compile(prog, backend=backend, donate=False)
+    states = exe.init(jax.random.PRNGKey(0))
+    for states, _ in exe.stream(states, 5, start_step=0, faults=fault):
+        pass
+    assert exe.ledger.recent["a"][0] == 2
+    assert exe.ledger.totals["a"]["events"] >= 1.0
+    if backend == "host":
+        assert exe.recoveries[0] == (2, "a")   # §IV tie-break ran
+        assert exe.ledger.totals["a"]["events"] == 1.0  # and re-synced
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_stream_compare_every_contract(backend):
+    """compare_every amortization through stream: lock-step flavors fuse k
+    transitions per tick (bitwise-equal to per-step compare); the per-step
+    back-ends reject the option instead of silently mis-striding."""
+    prog = chain_program()
+    if backend in ("host", "wavefront"):
+        with pytest.raises(ValueError, match="compare_every"):
+            miso.compile(prog, backend=backend, compare_every=4)
+        return
+    e4 = miso.compile(prog, backend=backend, compare_every=4, donate=False)
+    ticks = [s for s, _ in e4.stream(e4.init(jax.random.PRNGKey(0)), 8,
+                                     start_step=0)]
+    assert len(ticks) == 2 and e4.metrics()["steps"] == 8
+    e1 = miso.compile(prog, backend=backend, donate=False)
+    ref = e1.run(e1.init(jax.random.PRNGKey(0)), 8, start_step=0).states
+    assert _leaves_equal(ticks[-1], ref)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_stream_swap_hook_swaps_state_between_ticks(backend):
+    """The serving swap hook: states handed back before a tick replace the
+    resident states (join/leave between ticks), and a None return keeps
+    them untouched."""
+    prog = chain_program()
+    exe = miso.compile(prog, backend=backend)
+    states = exe.init(jax.random.PRNGKey(0))
+    seen = []
+
+    def swap(t, st):
+        seen.append(t)
+        if t == 1:   # swap-in: overwrite cell a's state before tick 1
+            st = dict(st)
+            st["a"] = {"x": jnp.float32(100.0)}
+            return st
+        return None
+
+    out = [s for s, _ in exe.stream(states, 3, start_step=0, swap=swap)]
+    assert seen == [0, 1, 2]
+    # tick 1 consumed the swapped-in value: b reads a's previous state
+    assert float(out[1]["a"]["x"]) == 101.0
+    assert float(out[2]["b"]["x"]) == float(out[1]["b"]["x"]) + 101.0
+
+
+def test_checkpointed_lockstep_run_is_bitwise_identical(tmp_path):
+    """checkpoint_cb is base-protocol now: the lockstep back-end splits
+    its in-graph scan into segments at checkpoint boundaries; trajectory,
+    reports, collect stacking, and ledger attribution are unchanged."""
+    prog = dmr_program()
+    fault = miso.FaultSpec.at(step=5, cell_id=0, replica=0, index=2, bit=20)
+    plain = miso.compile(prog, donate=False)
+    ref = plain.run(plain.init(jax.random.PRNGKey(0)), 8, start_step=0,
+                    faults=fault, collect=lambda st: st["c"]["x"])
+    snaps = []
+    seg = miso.compile(prog, donate=False,
+                       checkpoint_cb=lambda t, st: snaps.append(t),
+                       checkpoint_every=2)
+    got = seg.run(seg.init(jax.random.PRNGKey(0)), 8, start_step=0,
+                  faults=fault, collect=lambda st: st["c"]["x"])
+    assert snaps == [0, 2, 4, 6]
+    assert _leaves_equal(ref.states, got.states)
+    assert _leaves_equal(ref.reports, got.reports)
+    assert np.array_equal(np.asarray(ref.collected),
+                          np.asarray(got.collected))
+    # divergence persists after a DMR strike (lockstep detects, host
+    # corrects) — both runs attribute the same event steps
+    assert plain.ledger.recent["a"] == seg.ledger.recent["a"] == [5, 6, 7]
+
+
+def test_checkpoint_snapshots_stay_live_and_resumed_runs_stay_aligned():
+    """Two regressions: (1) a cb that RETAINS the snapshot must not see
+    its buffers donated away by the following scan segment; (2) a run
+    resumed from a step that is not a checkpoint multiple still fires on
+    the same t % every == 0 grid as the per-step back-ends."""
+    prog = chain_program()
+    for backend in ("lockstep", "host"):
+        snaps = []
+        exe = miso.compile(prog, backend=backend,
+                           checkpoint_cb=lambda t, st: snaps.append((t, st)),
+                           checkpoint_every=2)   # lockstep: donate defaults on
+        s0 = exe.init(jax.random.PRNGKey(0))
+        r = exe.run(s0, 3)          # steps 0..2, leaves _t = 3
+        exe.run(r.states, 4)        # resumes at 3: grid points are 4, 6
+        assert [t for t, _ in snaps] == [0, 2, 4, 6], backend
+        # every retained snapshot is still readable (no donated buffers)
+        vals = [float(st["a"]["x"]) for _, st in snaps]
+        assert vals == [1.0, 3.0, 5.0, 7.0], backend
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_stream_checkpoints_on_every_backend(backend):
+    """Base-protocol checkpointing through stream: every back-end
+    snapshots the pre-tick buffer at the configured cadence."""
+    snaps = []
+    exe = miso.compile(three_cell_program(), backend=backend,
+                       checkpoint_cb=lambda t, st: snaps.append(
+                           (t, float(st["c"]["x"]))),
+                       checkpoint_every=2)
+    states = exe.init(jax.random.PRNGKey(0))
+    for states, _ in exe.stream(states, 4, start_step=0):
+        pass
+    assert [t for t, _ in snaps] == [0, 2]
+    assert snaps[0][1] == 1.0   # tick-0 snapshot is the initial state
+
+
+def test_wavefront_run_rejects_checkpointing():
+    exe = miso.compile(three_cell_program(), backend="wavefront",
+                       checkpoint_cb=lambda t, st: None,
+                       checkpoint_every=2)
+    states = exe.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="consistent cut"):
+        exe.run(states, 4)
+
+
+@pytest.mark.parametrize("backend", ["lockstep", "lockstep_pallas", "host"])
+def test_pure_step_replays_without_side_effects(backend):
+    """pure_step is the §IV third execution: same output as step, but no
+    ledger entries and no step-counter advance (the serving engine's DMR
+    tie-break depends on both)."""
+    prog = dmr_program()
+    exe = miso.compile(prog, backend=backend, donate=False)
+    states = exe.init(jax.random.PRNGKey(0))
+    replay, _ = exe.pure_step(states, 0)
+    stepped, _ = exe.step(states, step_idx=0)
+    assert _leaves_equal(replay, stepped)
+    assert exe.metrics()["steps"] == 1      # only step() advanced
+    # and the replay ignored nothing it shouldn't: a second replay of the
+    # SAME window is identical (pure)
+    replay2, _ = exe.pure_step(states, 0)
+    assert _leaves_equal(replay, replay2)
+
+
+def test_pure_step_unsupported_on_wavefront():
+    exe = miso.compile(three_cell_program(), backend="wavefront")
+    with pytest.raises(NotImplementedError, match="replay"):
+        exe.pure_step(exe.init(jax.random.PRNGKey(0)), 0)
+
+
+# ---------------------------------------------------------------------------
 # deprecation shims (one release of backwards compatibility)
 # ---------------------------------------------------------------------------
 def test_deprecated_names_warn_and_match_new_api():

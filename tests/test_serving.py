@@ -1,0 +1,501 @@
+"""The continuous-batching serving subsystem (repro/serving).
+
+The load-bearing property is the ISOLATION INVARIANT: a request decoded
+through the continuous batcher — with unrelated requests joining and
+leaving its batch mid-stream — produces bitwise-identical tokens to the
+same request decoded in a static batch, for none/DMR/TMR policies; and
+injected faults are attributed to the correct request in the engine's
+ledger.  Most tests run on a tiny toy decoder so the invariant is cheap
+to check exhaustively; one integration test runs the real LM stack.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as miso
+from repro.serving import (
+    DONE,
+    EXPIRED,
+    QUEUED,
+    REJECTED,
+    RUNNING,
+    Request,
+    RequestQueue,
+    ServingEngine,
+    SlotAdapter,
+    SlotManager,
+    infer_slot_axes,
+    mask_slots,
+)
+
+
+# ---------------------------------------------------------------------------
+# a tiny slotted decoder: weights = scalar multiplier (StaticImage), decoder
+# slot state = {x, tokens, active, pos}; one tick = x' = x*w + pos,
+# token = f(x').  Deterministic, position-dependent, row-independent.
+# ---------------------------------------------------------------------------
+def toy_decoder_init(batch: int) -> dict:
+    return {
+        "x": jnp.zeros((batch,), jnp.float32),
+        "tokens": jnp.zeros((batch, 1), jnp.int32),
+        "active": jnp.zeros((batch,), jnp.bool_),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def toy_parts(n_slots: int):
+    axes = infer_slot_axes(toy_decoder_init)
+
+    def w_init(key):
+        return {"m": jnp.float32(1.0) + jnp.float32(2.0) ** -3}
+
+    weights = miso.CellType("w", w_init, lambda prev: prev["w"])
+
+    def d_transition(prev):
+        st = prev["dec"]
+        act = st["active"]
+        x = st["x"] * prev["w"]["m"] + st["pos"].astype(jnp.float32)
+        tok = (jnp.abs(x) * 64.0).astype(jnp.int32) % 1009
+        new = {
+            "x": x,
+            "tokens": tok[:, None],
+            "active": act,
+            "pos": st["pos"] + 1,
+        }
+        return mask_slots(act, new, st, axes)
+
+    decoder = miso.CellType(
+        "dec", lambda key: toy_decoder_init(n_slots), d_transition,
+        reads=("w",), instances=n_slots)
+
+    prog = miso.MisoProgram()
+    prog.add(weights)
+    prog.add(decoder)
+
+    def prefill(req: Request, states: dict):
+        p = jnp.asarray(req.prompt, jnp.float32)
+        x0 = jnp.sum(p) * jnp.float32(2.0) ** -6
+        tok0 = (jnp.abs(x0) * 64.0).astype(jnp.int32) % 1009
+        slot = {
+            "x": x0[None],
+            "tokens": tok0[None, None],
+            "active": jnp.ones((1,), jnp.bool_),
+            "pos": jnp.full((1,), p.shape[0], jnp.int32),
+        }
+        return slot, tok0[None, None]
+
+    adapter = SlotAdapter(
+        cell="dec", n_slots=n_slots, slot_axes=axes,
+        prefill=prefill,
+        read_tokens=lambda dec: dec["tokens"],
+        make_empty=lambda: toy_decoder_init(1),
+    )
+    return prog, adapter
+
+
+def toy_engine(n_slots: int, **kw) -> ServingEngine:
+    prog, adapter = toy_parts(n_slots)
+    eng = ServingEngine(prog, adapter, **kw)
+    eng.start(jax.random.PRNGKey(0))
+    return eng
+
+
+def decoder_leaf_index(state_example: dict, leaf_name: str) -> int:
+    """Flat leaf index of a named decoder-state leaf (FaultSpec.leaf)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(state_example)
+    for i, (path, _) in enumerate(flat):
+        if any(getattr(p, "key", None) == leaf_name for p in path):
+            return i
+    raise KeyError(leaf_name)
+
+
+# ---------------------------------------------------------------------------
+# queue + slot bookkeeping
+# ---------------------------------------------------------------------------
+def test_queue_fifo_backpressure_and_cancel():
+    clock = [0.0]
+    q = RequestQueue(max_depth=2, time_fn=lambda: clock[0])
+    a, b, c = (Request(prompt=[i], max_new_tokens=1) for i in range(3))
+    assert q.submit(a) and q.submit(b)
+    assert not q.submit(c)            # bounded: explicit back-pressure
+    assert q.status[c.id] == REJECTED and q.rejected == 1
+    assert q.cancel(b.id) and q.depth == 1
+    assert q.pop() is a and q.status[a.id] == RUNNING
+
+
+def test_queue_deadline_expires_while_queued():
+    clock = [0.0]
+    q = RequestQueue(time_fn=lambda: clock[0])
+    a = Request(prompt=[1], deadline=1.0)
+    b = Request(prompt=[2])
+    q.submit(a), q.submit(b)
+    clock[0] = 2.0                    # a's deadline passes in the queue
+    assert q.pop() is b
+    assert q.status[a.id] == EXPIRED and q.expired == 1
+
+
+def test_slot_manager_replica_alloc_release():
+    sm = SlotManager(4)
+    assert sm.alloc("tmr", 3) == [0, 1, 2]
+    assert sm.alloc("big", 2) is None          # only 1 free
+    assert sm.alloc("one", 1) == [3]
+    assert sm.owner(1) == "tmr" and sm.active == 4
+    assert sorted(sm.release("tmr")) == [0, 1, 2]
+    assert sm.free == 3 and sm.alloc("next", 2) == [0, 1]
+
+
+def test_infer_slot_axes_mixed_ranks():
+    axes = infer_slot_axes(lambda b: {
+        "a": jnp.zeros((b,)), "b": jnp.zeros((3, b, 5)),
+        "c": jnp.zeros((2, 7, b, 1))})
+    assert axes == {"a": 0, "b": 1, "c": 2}
+    with pytest.raises(ValueError, match="slot axis"):
+        infer_slot_axes(lambda b: {"bad": jnp.zeros((4,))})
+
+
+# ---------------------------------------------------------------------------
+# the isolation invariant (toy decoder, exhaustive)
+# ---------------------------------------------------------------------------
+def run_solo(prompt, n_tokens, n_slots=4, policy=None) -> list[int]:
+    """The static-batch reference: one request, nobody joins or leaves."""
+    eng = toy_engine(n_slots)
+    req = Request(prompt=prompt, max_new_tokens=n_tokens,
+                  policy=policy or miso.RedundancyPolicy())
+    assert eng.submit(req)
+    eng.pump()
+    res = eng.result(req.id)
+    assert res["status"] == DONE
+    return res["tokens"]
+
+
+@pytest.mark.parametrize("level", [1, 2, 3])
+def test_isolation_under_churn(level):
+    """Tokens of a request are bitwise-identical whether decoded alone or
+    with unrelated requests joining/leaving its batch mid-stream — for
+    none (1), DMR (2), and TMR (3) policies."""
+    policy = miso.RedundancyPolicy(level=level)
+    ref = run_solo([3.0, 1.0, 4.0], 10, policy=policy)
+
+    eng = toy_engine(8)
+    victim = Request(prompt=[3.0, 1.0, 4.0], max_new_tokens=10,
+                     policy=policy)
+    churn1 = Request(prompt=[9.0], max_new_tokens=3)
+    assert eng.submit(churn1) and eng.submit(victim)
+    eng.pump(max_ticks=2)
+    # churn: new neighbors join mid-stream...
+    churn2 = Request(prompt=[2.0, 7.0], max_new_tokens=2)
+    churn3 = Request(prompt=[5.0, 5.0, 5.0], max_new_tokens=4,
+                     policy=miso.RedundancyPolicy(level=2))
+    assert eng.submit(churn2) and eng.submit(churn3)
+    eng.pump(max_ticks=2)
+    # ...and one is cancelled while running
+    eng.cancel(churn3.id)
+    eng.pump()
+    res = eng.result(victim.id)
+    assert res["status"] == DONE
+    assert res["tokens"] == ref, "churn perturbed an unrelated request"
+    # the churn requests themselves completed/cancelled as asked
+    assert eng.result(churn1.id)["status"] == DONE
+    assert eng.result(churn2.id)["status"] == DONE
+    assert eng.metrics()["request_faults"] == {}
+
+
+def test_slot_position_does_not_change_tokens():
+    """The same request admitted into different physical slots produces
+    identical tokens (row position is semantically invisible)."""
+    ref = run_solo([1.0, 2.0], 6)
+    eng = toy_engine(4)
+    filler = Request(prompt=[8.0], max_new_tokens=8)
+    probe = Request(prompt=[1.0, 2.0], max_new_tokens=6)
+    assert eng.submit(filler) and eng.submit(probe)   # probe lands in slot 1
+    eng.pump()
+    res = eng.result(probe.id)
+    assert res["slots"] != [0]
+    assert res["tokens"] == ref
+
+
+def test_slot_reuse_after_leave_is_clean():
+    """A slot freed by an evicted request is scrubbed: its next tenant
+    decodes exactly as if the slot had never been used."""
+    ref = run_solo([6.0, 6.0], 5)
+    eng = toy_engine(2)
+    first = Request(prompt=[1.0], max_new_tokens=2)
+    assert eng.submit(first)
+    eng.pump()                                    # first finishes, leaves
+    assert eng.result(first.id)["status"] == DONE
+    second = Request(prompt=[6.0, 6.0], max_new_tokens=5)
+    assert eng.submit(second)
+    eng.pump()
+    assert eng.result(second.id)["tokens"] == ref
+
+
+# ---------------------------------------------------------------------------
+# per-request dependability: detection, repair, attribution
+# ---------------------------------------------------------------------------
+def strike(eng, rid, replica, step, leaf="x", bit=18):
+    """A FaultSpec aimed at one replica slot of a running request."""
+    rec = eng.requests[rid]
+    slot = rec.slots[replica]
+    cell_id = eng.exe.program.cell_id("dec")
+    leaf_i = decoder_leaf_index(toy_decoder_init(2), leaf)
+    return miso.FaultSpec.at(step=step, cell_id=cell_id, leaf=leaf_i,
+                             index=slot, bit=bit)
+
+
+@pytest.mark.parametrize("replica", [0, 1])
+def test_dmr_detects_tiebreaks_and_attributes(replica):
+    """DMR request: a strike on either replica slot is detected, repaired
+    by the §IV third execution (pure_step replay), charged to the owning
+    request, and the emitted tokens stay bitwise-clean."""
+    ref = run_solo([3.0, 1.0, 4.0], 8,
+                   policy=miso.RedundancyPolicy(level=2))
+    eng = toy_engine(4)
+    victim = Request(prompt=[3.0, 1.0, 4.0], max_new_tokens=8,
+                     policy=miso.RedundancyPolicy(level=2))
+    bystander = Request(prompt=[9.0], max_new_tokens=8)
+    assert eng.submit(victim) and eng.submit(bystander)
+    eng.pump(max_ticks=1)
+    fault = strike(eng, victim.id, replica, step=2)
+    eng.pump(faults=fault)
+    res = eng.result(victim.id)
+    assert res["status"] == DONE
+    assert res["tokens"] == ref, "tie-break failed to repair the strike"
+    assert res["faults"] == 1
+    # attribution: the event is charged to the victim request, nobody else
+    assert set(eng.metrics()["request_faults"]) == {victim.id}
+    assert eng.ledger.totals[victim.id]["events"] == 1.0
+    # the replay localizes WHICH replica was struck (beyond plain DMR)
+    assert eng.ledger.totals[victim.id]["per_replica"][replica] == 1.0
+    assert eng.result(bystander.id)["faults"] == 0
+
+
+@pytest.mark.parametrize("replica", [0, 1, 2])
+def test_tmr_majority_repairs_and_localizes(replica):
+    ref = run_solo([2.0, 2.0], 8, policy=miso.RedundancyPolicy(level=3))
+    eng = toy_engine(4)
+    victim = Request(prompt=[2.0, 2.0], max_new_tokens=8,
+                     policy=miso.RedundancyPolicy(level=3))
+    assert eng.submit(victim)
+    eng.pump(max_ticks=1)
+    eng.pump(faults=strike(eng, victim.id, replica, step=2))
+    res = eng.result(victim.id)
+    assert res["status"] == DONE and res["tokens"] == ref
+    assert eng.ledger.totals[victim.id]["per_replica"][replica] == 1.0
+
+
+def test_unprotected_request_fault_goes_undetected():
+    """Paper §IV's motivating failure mode, at request granularity: a
+    strike on a level-1 request corrupts its output silently — and its
+    protected neighbor is untouched."""
+    ref = run_solo([3.0, 1.0, 4.0], 8)
+    eng = toy_engine(4)
+    victim = Request(prompt=[3.0, 1.0, 4.0], max_new_tokens=8)
+    guarded = Request(prompt=[9.0], max_new_tokens=8,
+                      policy=miso.RedundancyPolicy(level=2))
+    assert eng.submit(victim) and eng.submit(guarded)
+    eng.pump(max_ticks=1)
+    eng.pump(faults=strike(eng, victim.id, 0, step=2))
+    assert eng.result(victim.id)["tokens"] != ref   # corrupted...
+    assert eng.metrics()["request_faults"] == {}    # ...and nobody noticed
+    assert eng.result(guarded.id)["faults"] == 0
+
+
+def test_repeated_faults_flag_request_as_suspect():
+    eng = toy_engine(4)
+    victim = Request(prompt=[1.0], max_new_tokens=12,
+                     policy=miso.RedundancyPolicy(level=3))
+    assert eng.submit(victim)
+    eng.pump(max_ticks=1)
+    for step in (2, 4, 6):   # a flaky replica slot strikes 3x in-window
+        eng.pump(max_ticks=2,
+                 faults=strike(eng, victim.id, 1, step=step))
+    eng.pump()
+    m = eng.metrics()
+    assert m["fault_totals"][victim.id]["events"] == 3.0
+    assert victim.id in m["suspects"]
+    assert m["suspects"][victim.id]["replica"] == 1
+
+
+# ---------------------------------------------------------------------------
+# engine lifecycle: deadlines, cancellation, back-pressure, metrics
+# ---------------------------------------------------------------------------
+def test_running_deadline_evicts_with_partial_output():
+    clock = [0.0]
+    eng = toy_engine(2, time_fn=lambda: clock[0])
+    req = Request(prompt=[1.0], max_new_tokens=100, deadline=5.0)
+    assert eng.submit(req)
+    eng.pump(max_ticks=2)
+    assert eng.result(req.id)["status"] == RUNNING
+    clock[0] = 6.0
+    eng.pump(max_ticks=2)
+    res = eng.result(req.id)
+    assert res["status"] == EXPIRED
+    assert 0 < res["n_tokens"] < 100          # partial output delivered
+    assert eng.slots.free == 2                # slots reclaimed
+
+
+def test_queued_deadline_expires_unstarted_in_engine():
+    """A deadline that passes while the request is still queued: never
+    admitted, status surfaces as expired, zero tokens."""
+    clock = [0.0]
+    eng = toy_engine(1, time_fn=lambda: clock[0])
+    hog = Request(prompt=[1.0], max_new_tokens=8)
+    doomed = Request(prompt=[2.0], max_new_tokens=4, deadline=0.5)
+    assert eng.submit(hog) and eng.submit(doomed)
+    eng.pump(max_ticks=2)       # hog occupies the only slot
+    clock[0] = 1.0              # doomed's deadline passes in the queue
+    eng.pump()
+    assert eng.result(hog.id)["status"] == DONE
+    res = eng.result(doomed.id)
+    assert res["status"] == EXPIRED and res["n_tokens"] == 0
+    assert eng.metrics()["expired"] == 1
+
+
+def test_admission_rejects_oversized_policy_and_queue_overflow():
+    eng = toy_engine(2, max_queue=1)
+    assert not eng.submit(Request(prompt=[1.0],
+                                  policy=miso.RedundancyPolicy(level=3)))
+    ok = Request(prompt=[1.0], max_new_tokens=2)
+    assert eng.submit(ok)
+    assert not eng.submit(Request(prompt=[2.0]))   # queue full
+    assert eng.metrics()["rejected"] == 2
+    eng.pump()
+    assert eng.result(ok.id)["status"] == DONE
+
+
+def test_queue_waits_for_replica_slots_fifo():
+    """A TMR request that doesn't fit yet holds the queue head (FIFO, no
+    overtaking) until enough replica slots free up."""
+    eng = toy_engine(3)
+    long1 = Request(prompt=[1.0], max_new_tokens=6)
+    tmr = Request(prompt=[2.0], max_new_tokens=3,
+                  policy=miso.RedundancyPolicy(level=3))
+    assert eng.submit(long1) and eng.submit(tmr)
+    eng.pump(max_ticks=2)
+    assert eng.result(tmr.id)["status"] == QUEUED  # 2 free < 3 needed
+    eng.pump()
+    assert eng.result(tmr.id)["status"] == DONE
+    assert eng.result(long1.id)["status"] == DONE
+
+
+def test_metrics_slo_surface():
+    clock = [0.0]
+    def tick_clock():
+        clock[0] += 0.125
+        return clock[0]
+    eng = toy_engine(4, time_fn=tick_clock)
+    reqs = [Request(prompt=[float(i)], max_new_tokens=3) for i in range(3)]
+    for r in reqs:
+        assert eng.submit(r)
+    eng.pump()
+    m = eng.metrics()
+    assert m["done"] == 3 and m["tokens_out"] == 9
+    assert m["tokens_per_s"] > 0 and m["wall_s"] > 0
+    assert m["ttft_p50_s"] > 0 and m["ttft_p99_s"] >= m["ttft_p50_s"]
+    assert m["queue_depth"] == 0 and m["free_slots"] == 4
+    assert m["ticks"] > 0
+
+
+def test_finished_records_bounded_counters_cumulative():
+    """A long-running server must not grow host memory per request:
+    finished records are pruned FIFO beyond retain_results while the
+    metrics counters stay cumulative; drop() releases eagerly."""
+    eng = toy_engine(2, retain_results=2)
+    reqs = [Request(prompt=[float(i)], max_new_tokens=2) for i in range(5)]
+    for r in reqs:
+        assert eng.submit(r)
+        eng.pump()
+    assert set(eng.requests) == {reqs[-2].id, reqs[-1].id}
+    m = eng.metrics()
+    assert m["done"] == 5 and m["submitted"] == 5
+    assert eng.drop(reqs[-1].id) and reqs[-1].id not in eng.requests
+    assert not eng.drop(reqs[0].id)      # already pruned
+    assert eng.metrics()["done"] == 5    # counters unaffected by drops
+
+
+def test_stop_token_finishes_early():
+    probe = run_solo([3.0, 1.0, 4.0], 10)
+    stop = probe[4]
+    eng = toy_engine(2)
+    req = Request(prompt=[3.0, 1.0, 4.0], max_new_tokens=10,
+                  stop_token=stop)
+    assert eng.submit(req)
+    eng.pump()
+    res = eng.result(req.id)
+    assert res["status"] == DONE
+    assert res["tokens"] == probe[:5]          # stops AT the stop token
+
+
+# ---------------------------------------------------------------------------
+# the real LM stack through the engine (integration)
+# ---------------------------------------------------------------------------
+def tiny_lm():
+    import dataclasses as dc
+
+    from repro.configs import get_reduced
+    from repro.models.lm_cells import ServeConfig
+
+    cfg = get_reduced("internlm2-1.8b")
+    cfg = dc.replace(cfg, d_model=32, n_layers=2, d_ff=64, n_heads=2,
+                     n_kv_heads=1, vocab_size=128)
+    return cfg, ServeConfig(batch=4, max_len=32)
+
+
+def lm_engine(cfg, scfg):
+    from repro.serving.lm import lm_engine_parts
+
+    prog, adapter = lm_engine_parts(cfg, scfg)
+    eng = ServingEngine(prog, adapter)
+    eng.start(jax.random.PRNGKey(0))
+    return eng
+
+
+def test_lm_engine_isolation_and_dmr():
+    cfg, scfg = tiny_lm()
+    rng = np.random.default_rng(0)
+    prompt_a = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    prompt_b = rng.integers(0, cfg.vocab_size, size=3).astype(np.int32)
+
+    # static-batch reference: each request alone in the resident batch
+    refs = {}
+    for name, prompt, pol in (("a", prompt_a, miso.RedundancyPolicy()),
+                              ("b", prompt_b,
+                               miso.RedundancyPolicy(level=2))):
+        eng = lm_engine(cfg, scfg)
+        req = Request(prompt=prompt, max_new_tokens=6, policy=pol)
+        assert eng.submit(req)
+        eng.pump()
+        refs[name] = eng.result(req.id)["tokens"]
+
+    # continuous batching with churn: b (DMR) joins after a, a leaves first
+    eng = lm_engine(cfg, scfg)
+    ra = Request(prompt=prompt_a, max_new_tokens=6)
+    assert eng.submit(ra)
+    eng.pump(max_ticks=2)
+    rb = Request(prompt=prompt_b, max_new_tokens=6,
+                 policy=miso.RedundancyPolicy(level=2))
+    assert eng.submit(rb)
+    eng.pump()
+    assert eng.result(ra.id)["tokens"] == refs["a"]
+    assert eng.result(rb.id)["tokens"] == refs["b"]
+    assert eng.metrics()["request_faults"] == {}
+
+    # DMR detection + repair on the real model: strike rb's replica cache
+    eng = lm_engine(cfg, scfg)
+    rb2 = Request(prompt=prompt_b, max_new_tokens=6,
+                  policy=miso.RedundancyPolicy(level=2))
+    assert eng.submit(rb2)
+    eng.pump(max_ticks=1)
+    from repro.models.lm_cells import slot_decoder_init
+    leaf_i = decoder_leaf_index(slot_decoder_init(cfg, 2, scfg.max_len),
+                                "tokens")
+    slot = eng.requests[rb2.id].slots[1]
+    fault = miso.FaultSpec.at(
+        step=2, cell_id=eng.exe.program.cell_id("decoder"),
+        leaf=leaf_i, index=slot, bit=3)
+    eng.pump(faults=fault)
+    res = eng.result(rb2.id)
+    assert res["status"] == DONE
+    assert res["tokens"] == refs["b"], "DMR tie-break failed on the LM"
+    assert eng.ledger.totals[rb2.id]["events"] == 1.0
