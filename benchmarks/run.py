@@ -170,9 +170,9 @@ def _small_train(redundancy, compare="bitwise", compare_every=1):
         data=DataConfig(batch=8, seq_len=128, vocab=cfg.vocab_size),
         opt=OptConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100),
     )
-    pol = RedundancyPolicy(level=redundancy, compare=compare,
-                           compare_every=compare_every) \
-        if redundancy > 1 else RedundancyPolicy()
+    pol = (RedundancyPolicy(level=redundancy, compare=compare,
+                            compare_every=compare_every)
+           if redundancy > 1 else RedundancyPolicy())
     prog = make_train_program(cfg, tcfg)
     exe = miso.compile(prog, policies={"trainer": pol},
                        compare_every=compare_every, donate=False)
@@ -407,14 +407,15 @@ def bench_lockstep_pallas() -> None:
             # parity gate: bitwise-identical states and fault reports
             for la, lb in zip(jax.tree.leaves(finals["lockstep"]),
                               jax.tree.leaves(finals["lockstep_pallas"])):
-                assert np.array_equal(np.asarray(la), np.asarray(lb)), \
-                    f"state parity broke at {mode} n={n}"
+                assert np.array_equal(np.asarray(la), np.asarray(lb)), (
+                    f"state parity broke at {mode} n={n}")
             for la, lb in zip(jax.tree.leaves(reports["lockstep"]),
                               jax.tree.leaves(reports["lockstep_pallas"])):
-                assert np.array_equal(np.asarray(la), np.asarray(lb)), \
-                    f"report parity broke at {mode} n={n}"
-            assert float(reports["lockstep_pallas"]["c"]["events"]) >= 1.0, \
-                f"injected fault went undetected at {mode} n={n}"
+                assert np.array_equal(np.asarray(la), np.asarray(lb)), (
+                    f"report parity broke at {mode} n={n}")
+            assert float(
+                reports["lockstep_pallas"]["c"]["events"]) >= 1.0, (
+                f"injected fault went undetected at {mode} n={n}")
             t_ls = times["lockstep"] * 1e3
             t_lp = times["lockstep_pallas"] * 1e3
             row("lockstep_pallas", f"{mode}_n{n}_lockstep_step_ms",
@@ -442,6 +443,142 @@ def bench_lockstep_pallas() -> None:
     out.write_text(json.dumps(payload, indent=2) + "\n")
     row("lockstep_pallas", "json_artifact", str(out),
         f"{len(cases)} cases, all parity-gated")
+
+
+# ===========================================================================
+# spatial-DMR: fingerprint vs bitwise cross-pod compare (traffic + time)
+# ===========================================================================
+_SPATIAL_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro import api as miso
+from repro.kernels import ops
+
+SIZES = %(sizes)r
+STEPS = %(steps)d
+REPS = %(reps)d
+
+def timeit(fn, *args):
+    for _ in range(1):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+def mesh_for(level):
+    if level == 2:
+        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    return Mesh(np.array(jax.devices()[:6]).reshape(3, 2, 1),
+                ("pod", "data", "model"))
+
+cases = []
+for n in SIZES:
+    def init(key, n=n):
+        return {"x": jax.random.normal(key, (n,), jnp.float32)}
+
+    def transition(prev):
+        x = prev["c"]["x"]
+        return {"x": 0.5 * x + 0.25 * jnp.roll(x, 1)}
+
+    words = ops.word_layout(jax.eval_shape(
+        init, jax.ShapeDtypeStruct((2,), jnp.uint32))).total
+    for level, mode in ((2, "dmr"), (3, "tmr")):
+        for compare in ("bitwise", "hash"):
+            prog = miso.MisoProgram().add(miso.CellType(
+                "c", init, transition,
+                redundancy=miso.RedundancyPolicy(
+                    level=level, compare=compare, placement="spatial")))
+            exe = miso.compile(prog, backend="spatial_lockstep",
+                               mesh=mesh_for(level), donate=False)
+            s0 = exe.init(jax.random.PRNGKey(0))
+            t = timeit(lambda: exe.run(s0, STEPS, start_step=0).states)
+            # parity gate: bitwise-identical to the temporal reference
+            ref = miso.compile(prog, backend="lockstep", donate=False)
+            fault = miso.FaultSpec.at(step=1, cell_id=0, replica=level - 1,
+                                      index=n // 2, bit=20)
+            rs = exe.run(s0, STEPS, start_step=0, faults=fault)
+            rr = ref.run(ref.init(jax.random.PRNGKey(0)), STEPS,
+                         start_step=0, faults=fault)
+            for la, lb in zip(jax.tree.leaves(rs.states),
+                              jax.tree.leaves(rr.states)):
+                assert np.array_equal(np.asarray(la), np.asarray(lb)), \
+                    (mode, compare, n)
+            assert float(rs.reports["c"]["events"]) >= 1.0, (mode, compare)
+            # steady-state cross-pod receive bytes per pod per compare step
+            if compare == "hash":
+                wire = 16 if level == 2 else 16 * level
+            else:
+                wire = words * 4 * (level - 1)
+            cases.append({
+                "mode": mode, "compare": compare, "state_words": words,
+                "step_ms": round(t / STEPS * 1e3, 4),
+                "wire_bytes_per_compare": wire,
+                "parity": True, "n": n,
+            })
+print("RESULT" + json.dumps({"cases": cases, "jax": jax.__version__}))
+"""
+
+
+def bench_spatial() -> None:
+    """Cross-pod spatial-DMR compare cost: the 128-bit fingerprint psum
+    (O(1) wire bytes) vs the paper-faithful full-bitwise exchange
+    (O(state)), at DMR and TMR, on a forced-8-device CPU host mesh with
+    the explicit 3-axis (pod, data, model) layout.  jax pins the device
+    count at first init, so the measurement runs in a subprocess; every
+    case is parity-gated against temporal lockstep (bitwise states +
+    detected strike).  Emits BENCH_spatial.json — wall time documents the
+    CPU-host trajectory, wire bytes the collective term a TPU deployment
+    pays on ICI.
+    """
+    import os
+    import subprocess
+    import sys
+
+    sizes = (1 << 10, 1 << 12) if SMOKE else (1 << 12, 1 << 14, 1 << 16)
+    child = _SPATIAL_CHILD % {
+        "sizes": tuple(sizes),
+        "steps": 4 if SMOKE else 16,
+        "reps": 2 if SMOKE else 5,
+    }
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", child], env=env,
+                          capture_output=True, text=True, timeout=2400)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][-1]
+    payload = json.loads(line[len("RESULT"):])
+    for c in payload["cases"]:
+        key = f"{c['mode']}_{c['compare']}_n{c['n']}"
+        row("spatial", f"{key}_step_ms", c["step_ms"], "parity ok")
+        row("spatial", f"{key}_wire_B_per_compare",
+            c["wire_bytes_per_compare"],
+            "cross-pod receive bytes/pod (fingerprint vs bitwise)")
+    # headline: wire reduction of the fingerprint compare at the largest n
+    big = [c for c in payload["cases"] if c["n"] == max(sizes)]
+    bw = {(c["mode"], c["compare"]): c["wire_bytes_per_compare"]
+          for c in big}
+    for mode in ("dmr", "tmr"):
+        row("spatial", f"{mode}_fingerprint_wire_reduction_x",
+            round(bw[(mode, "bitwise")] / bw[(mode, "hash")], 1),
+            "O(state) -> O(1) cross-pod compare traffic")
+    payload.update({"bench": "spatial", "smoke": SMOKE,
+                    "device": "cpu-host-8dev"})
+    JSON_DIR.mkdir(parents=True, exist_ok=True)
+    out = JSON_DIR / "BENCH_spatial.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    row("spatial", "json_artifact", str(out),
+        f"{len(payload['cases'])} cases, all parity-gated")
 
 
 # ===========================================================================
@@ -595,6 +732,7 @@ BENCHES = {
     "selective": bench_selective,
     "kernels": bench_kernels,
     "lockstep_pallas": bench_lockstep_pallas,
+    "spatial": bench_spatial,
     "serving": bench_serving,
     "roofline": bench_roofline,
 }

@@ -24,6 +24,7 @@ This walkthrough compiles one tiny program four ways:
 
 Run:  PYTHONPATH=src python examples/quickstart.py
       PYTHONPATH=src python examples/quickstart.py --backend lockstep_pallas
+      PYTHONPATH=src python examples/quickstart.py --placement spatial
 
 The --backend flag picks the lock-step flavor used below: "lockstep"
 (XLA-fused) or "lockstep_pallas" (each replicated cell's compare/vote
@@ -32,13 +33,16 @@ elsewhere).  ``backend="auto"`` makes the same accelerator-based choice
 (lockstep_pallas on TPU, lockstep on CPU/GPU) whenever the dependency
 graph is a single unit; for THIS program auto resolves to the wavefront
 schedule instead, because the lfsr cell is independent (section 3).
+
+--placement spatial adds section 4b: the SAME program and the SAME policy
+knob, but the replicas now live on distinct devices (one per "pod" mesh
+axis member — the paper's "different processors and memories") and the
+DMR compare becomes a 16-byte cross-pod fingerprint psum instead of an
+O(state) exchange.  The example forces a 2-device CPU host platform so it
+runs anywhere; on a real multi-pod mesh only the mesh line changes.
 """
 import argparse
-
-import jax
-import jax.numpy as jnp
-
-from repro import api as miso
+import os
 
 args = argparse.ArgumentParser()
 args.add_argument("--backend", default="lockstep",
@@ -47,9 +51,27 @@ args.add_argument("--backend", default="lockstep",
 args.add_argument("--engine", action="store_true",
                   help="also run section 5: the continuous-batching "
                        "serving engine (miso.serve)")
+args.add_argument("--placement", default="temporal",
+                  choices=("temporal", "spatial"),
+                  help="replica placement for section 4: temporal (same "
+                       "devices) or spatial (one replica per pod)")
 _ns = args.parse_args()
 BACKEND = _ns.backend
 ENGINE = _ns.engine
+PLACEMENT = _ns.placement
+if PLACEMENT == "spatial":
+    # spatial replicas need one device per pod; force a 2-device host
+    # platform BEFORE jax initializes (real deployments have real pods).
+    # Appended so a user's existing XLA_FLAGS survive.
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=2").strip()
+
+import jax
+import jax.numpy as jnp
+
+from repro import api as miso
 
 # ---------------------------------------------------------------------------
 # 1. A MISO program: a 1-D heat rod (SIMD stencil cell) + a probe cell (MIMD)
@@ -147,6 +169,42 @@ tres = tmr.run(tmr.init(jax.random.PRNGKey(0)), 100, start_step=0,
 ok = jnp.allclose(tres.states["rod"]["t"][0], final["rod"]["t"])
 print(f"TMR        : corrected in-graph={bool(ok)} "
       f"(votes fixed {float(tres.reports['rod']['events']):.0f} strike)")
+
+# ---------------------------------------------------------------------------
+# 4b. (--placement spatial) The SAME policy knob, spatial placement: each
+#     replica runs on its own pod (here: 2 forced host devices), and the
+#     compare is a cross-pod collective — a 16-byte fingerprint psum
+#     (compare="hash") instead of moving O(state) bytes.  backend="auto"
+#     sees the placement request + a pod-axis mesh and resolves to the
+#     spatial back-end; everything else (run/stream/faults/ledger) is the
+#     inherited Executor protocol.
+# ---------------------------------------------------------------------------
+if PLACEMENT == "spatial":
+    mesh = jax.make_mesh((2,), ("pod",))
+    sp = miso.compile(prog, backend="auto", mesh=mesh,
+                      policies={"rod": miso.RedundancyPolicy(
+                          level=2, placement="spatial", compare="hash")})
+    sres = sp.run(sp.init(jax.random.PRNGKey(0)), 100, start_step=0,
+                  faults=fault)
+    sm = sp.metrics()
+    srepaired = jnp.allclose(sres.states["rod"]["t"][0], final["rod"]["t"])
+    print(f"spatial DMR: backend={sm['backend']!r} "
+          f"pods={sm['n_pods']} compare=16-byte fingerprint psum; "
+          f"strike detected at step {sp.ledger.recent['rod'][0]} "
+          f"(repaired={bool(srepaired)}: DMR detects; repair is the "
+          "host/serving tie-break)")
+    # a whole fault campaign in ONE dispatch: the FaultSpecs stack and the
+    # executor vmaps the injected sweep (Executor.run_campaign)
+    rod = prog.cell_id("rod")
+    campaign = [miso.FaultSpec.at(step=s, cell_id=rod, replica=s % 2,
+                                  index=N // 2, bit=30)
+                for s in (10, 40, 70)]
+    camp = sp.run_campaign(sp.init(jax.random.PRNGKey(0)), 100, campaign,
+                           start_step=0)
+    ev = [float(e) for e in camp.reports["rod"]["events"]]
+    print(f"campaign   : {len(campaign)} strikes, one vmap'd dispatch -> "
+          f"per-strike detection events {ev}")
+
 print("\nThe same program scales to the 512-chip mesh unchanged — see "
       "src/repro/launch/dryrun.py; new back-ends register with "
       "miso.register_backend without touching this file (the Pallas-fused "
@@ -159,8 +217,12 @@ print("\nThe same program scales to the 512-chip mesh unchanged — see "
 #    and pays for it in replica slots; nobody else pays anything).
 # ---------------------------------------------------------------------------
 if ENGINE:
-    from repro.serving import Request, SlotAdapter, infer_slot_axes, \
-        mask_slots
+    from repro.serving import (
+        Request,
+        SlotAdapter,
+        infer_slot_axes,
+        mask_slots,
+    )
 
     def slot_init(b):
         return {"x": jnp.zeros((b,), jnp.float32),
@@ -188,12 +250,11 @@ if ENGINE:
 
     def prefill(req, states):
         x0 = jnp.sum(jnp.asarray(req.prompt, jnp.float32)) * 0.125
+        tok0 = (jnp.abs(x0) * 64).astype(jnp.int32)[None, None] % 997
         return {"x": x0[None],
-                "tokens": (jnp.abs(x0) * 64).astype(jnp.int32)[None, None]
-                % 997,
+                "tokens": tok0,
                 "active": jnp.ones((1,), bool),
-                "pos": jnp.full((1,), len(req.prompt), jnp.int32)}, \
-            (jnp.abs(x0) * 64).astype(jnp.int32)[None, None] % 997
+                "pos": jnp.full((1,), len(req.prompt), jnp.int32)}, tok0
 
     engine = miso.serve(sprog, SlotAdapter(
         cell="dec", n_slots=6, slot_axes=axes, prefill=prefill,

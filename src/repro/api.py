@@ -35,6 +35,13 @@ Every back-end returned by ``compile()`` implements:
     the run, and (if ``collect`` was given) the per-step stack of
     ``collect(states)``.
 
+``run_campaign(states, n_steps, faults, ...) -> RunResult``
+    A multi-fault campaign: the same trajectory once per armed
+    ``FaultSpec``, every output gaining a leading campaign axis of size
+    ``len(faults)``.  The lock-step back-ends stack the FaultSpecs and
+    sweep the whole campaign in ONE vmap'd in-graph dispatch; no ledger
+    entries and no step-counter advance (campaigns are analysis).
+
 ``stream(states, n_steps=None, ...) -> generator of (states, reports)``
     The serving loop: yields after every transition; ``n_steps=None``
     streams until the caller breaks.
@@ -65,6 +72,17 @@ registry (``repro.core.executor.BACKENDS``):
     (default
     auto: real kernels on TPU, interpret mode elsewhere — so CPU CI
     exercises the path), ``block``.
+  * ``"spatial_lockstep"`` — the lock-step schedule with
+    ``placement="spatial"`` replicas laid ONE PER POD across the mesh's
+    ``pod`` axis (``compile(..., mesh=...)`` required; the paper's
+    "different processors and memories" made real).  Detect/vote are
+    cross-pod collectives: DMR-hash compares 128-bit fingerprints with an
+    all_gather-free 16-byte psum (O(1) wire traffic instead of O(state));
+    DMR-bitwise is the paper-faithful full exchange; TMR-hash adopts the
+    majority replica only on an actual mismatch (48-byte steady state);
+    TMR-bitwise gathers and majority-votes the word streams.  States and
+    fault reports are bitwise-identical to temporal ``lockstep``
+    (tests/test_spatial.py).  Options: ``pod_axis`` (default "pod").
   * ``"host"``      — per-step host loop with the paper's §IV recovery:
     DMR tie-breaking, FaultLedger accounting, async checkpoint callbacks.
     Options: ``ledger``, ``checkpoint_cb``, ``checkpoint_every``, ``jit``.
@@ -72,8 +90,11 @@ registry (``repro.core.executor.BACKENDS``):
     of the read graph; units free-run up to ``window`` steps ahead.
   * ``"auto"``      — wavefront when the dependency graph has more than one
     independent unit, otherwise the lock-step flavor for the accelerator:
-    ``lockstep_pallas`` on TPU, ``lockstep`` elsewhere.  The back-end
-    observes both the parallel nature of the program and the hardware.
+    ``lockstep_pallas`` on TPU, ``lockstep`` elsewhere.  A program that
+    requests spatial placement AND a mesh whose ``pod`` axis can hold one
+    replica per pod resolve to ``spatial_lockstep`` (the only schedule
+    that honors the placement).  The back-end observes the parallel
+    nature of the program, the hardware, and the dependability policy.
 
 New back-ends register with ``@register_backend("name")`` on an
 ``Executor`` subclass and become reachable from every existing call site

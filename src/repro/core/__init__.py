@@ -35,4 +35,5 @@ from .schedule import (  # noqa: F401  (deprecated shims — see executor)
     run_scan,
 )
 from . import backend_pallas  # noqa: F401  (registers "lockstep_pallas")
+from . import backend_spatial  # noqa: F401  (registers "spatial_lockstep")
 from . import ir  # noqa: F401

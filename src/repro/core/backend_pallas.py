@@ -164,8 +164,8 @@ class LockstepPallasExecutor(LockstepExecutor):
     def __init__(self, program, *, interpret: Optional[bool] = None,
                  block: Optional[int] = None, **kw):
         # resolved before super().__init__ triggers _compile_step
-        self.interpret = (not ops.on_tpu()) if interpret is None \
-            else bool(interpret)
+        self.interpret = ((not ops.on_tpu()) if interpret is None
+                          else bool(interpret))
         self.block = block
         super().__init__(program, **kw)
 

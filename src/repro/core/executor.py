@@ -32,6 +32,10 @@ without touching any call site):
     epilogue (DMR compare / TMR vote + counts + fingerprint) fused into
     one Pallas kernel per replicated cell per step (see
     ``core/backend_pallas.py``); TPU fast path, ``interpret=True`` off-TPU.
+  * ``spatial_lockstep`` — the same schedule with ``placement="spatial"``
+    replicas laid one-per-pod across the mesh's ``pod`` axis; detect/vote
+    are cross-pod collectives (16-byte fingerprint psum for DMR-hash; see
+    ``core/backend_spatial.py``).  Requires ``compile(..., mesh=...)``.
   * ``host``      — lock-step with the paper's §IV recovery protocol in the
     loop: DMR mismatches trigger a third tie-breaking execution from the
     immutable previous buffer; a FaultLedger accumulates per-cell counters
@@ -230,13 +234,21 @@ class Executor:
         states: dict,
         step_idx: int,
         fault: Optional[FaultSpec] = None,
+        *,
+        compare: bool = True,
     ) -> tuple[dict, dict]:
         """Side-effect-free re-execution of one step window: no ledger
         update, no counter advance, no recovery protocol.  This is the
         paper's §IV "third equal transition" surfaced on the executor —
         the serving engine replays a tick from the immutable previous
-        buffer to tie-break a DMR mismatch.  Back-ends with a compiled
-        step implement it; schedules without one (wavefront) raise."""
+        buffer to tie-break a DMR mismatch.  ``compare=False``
+        additionally elides the replica compare statically (reports stay
+        zero; on the spatial back-end the cross-pod compare collectives
+        disappear from the dispatch — the straggler policy's adopt path
+        really does not wait for the slow pod).  TMR still votes and
+        re-synchronizes every sub-step, so the trajectory is unchanged.
+        Back-ends with a compiled step implement it; schedules without
+        one (wavefront) raise."""
         raise NotImplementedError(
             f"backend {self.name!r} has no side-effect-free replay")
 
@@ -270,6 +282,56 @@ class Executor:
         return RunResult(states=states,
                          reports=totals if totals is not None else {},
                          collected=collected)
+
+    # -- multi-fault campaigns --------------------------------------------
+    def run_campaign(
+        self,
+        states: dict,
+        n_steps: int,
+        faults,
+        *,
+        start_step: Optional[int] = None,
+        collect: Optional[Callable[[dict], Pytree]] = None,
+    ) -> RunResult:
+        """Run the SAME trajectory once per armed ``FaultSpec`` — a fault
+        campaign.  Returns a ``RunResult`` whose states/reports/collected
+        carry a leading campaign axis of size ``len(faults)``.
+
+        Campaigns are analysis, not production runs: no FaultLedger
+        entries, no step-counter advance (the §IV ``pure_step`` contract,
+        batched).  This base implementation loops ``pure_step`` on the
+        host; the lock-step back-ends override it with a single vmap'd
+        in-graph dispatch over a stacked FaultSpec batch.
+        """
+        flist = _as_fault_list(faults)
+        if not flist:
+            raise ValueError("run_campaign needs at least one FaultSpec")
+        stride = self.step_stride
+        if n_steps % stride != 0:
+            raise ValueError("n_steps must be a multiple of compare_every")
+        start = self._t if start_step is None else int(start_step)
+        finals, totals_all, coll_all = [], [], []
+        for fault in flist:
+            st, totals = states, None
+            coll = [] if collect is not None else None
+            for t in range(start, start + n_steps, stride):
+                st, rep = self.pure_step(
+                    st, t, _fault_in_window([fault], t, stride))
+                totals = rep if totals is None else jax.tree.map(
+                    lambda a, b: a + b, totals, rep)
+                if collect is not None:
+                    coll.append(collect(st))
+            finals.append(st)
+            totals_all.append(totals)
+            if collect is not None:
+                coll_all.append(jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *coll))
+        stack = lambda trees: jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        return RunResult(
+            states=stack(finals),
+            reports=stack(totals_all),
+            collected=stack(coll_all) if collect is not None else None,
+        )
 
     # -- serving stream ---------------------------------------------------
     def stream(
@@ -400,6 +462,7 @@ class LockstepExecutor(Executor):
         #: dry-run driver) and for embedding in larger jit programs.
         self.step_fn = step_fn
         self._jit_step = jax.jit(step_fn)
+        self._jit_plain_window = None   # lazy: pure_step(compare=False)
         self._run_cache: dict = {}
 
     def step(self, states, *, step_idx=None, fault=None):
@@ -413,10 +476,29 @@ class LockstepExecutor(Executor):
         self._t = t + self.compare_every
         return states, reports
 
-    def pure_step(self, states, step_idx, fault=None):
+    def pure_step(self, states, step_idx, fault=None, *, compare=True):
         """The §IV third execution: replay one compiled step window with no
-        ledger/counter side effects (see ``Executor.pure_step``)."""
+        ledger/counter side effects (see ``Executor.pure_step``).
+        ``compare=False`` dispatches an all-plain window (every sub-step
+        compiled ``with_compare=False``), so the compare — and, spatially,
+        its collectives — is statically gone, not merely discarded."""
         fault = fault if fault is not None else FaultSpec.none()
+        if not compare:
+            if self._jit_plain_window is None:
+                plain = (self._step_plain if self._step_plain is not None
+                         else self._compile_step(with_compare=False))
+                k = self.compare_every
+
+                def window(states, step_idx, fault):
+                    reports = None
+                    for j in range(k):
+                        states, reports = plain(states, step_idx + j, fault)
+                    return states, reports
+
+                self._jit_plain_window = jax.jit(window)
+            with self._mesh_ctx():
+                return self._jit_plain_window(
+                    states, jnp.int32(int(step_idx)), fault)
         with self._mesh_ctx():
             return self._jit_step(states, jnp.int32(int(step_idx)), fault)
 
@@ -509,6 +591,59 @@ class LockstepExecutor(Executor):
                          reports=totals if totals is not None else {},
                          collected=collected)
 
+    def run_campaign(self, states, n_steps, faults, *, start_step=None,
+                     collect=None):
+        """The vmap'd campaign: N FaultSpecs stack into one batched spec
+        and the whole N-trajectory sweep is ONE dispatch (scan inside
+        vmap), instead of the base class's host loop.  The initial states
+        are closed over, so they broadcast across the batch without
+        copying.  Same contract as the base: a leading campaign axis on
+        every output, no ledger/counter side effects."""
+        flist = _as_fault_list(faults)
+        if not flist:
+            raise ValueError("run_campaign needs at least one FaultSpec")
+        k = self.compare_every
+        if n_steps % k != 0:
+            raise ValueError("n_steps must be a multiple of compare_every")
+        start = self._t if start_step is None else int(start_step)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *flist)
+        iters = n_steps // k
+        # compiled-campaign cache, sibling of the run() scan cache: states
+        # and start are traced arguments (not closed-over constants), so
+        # repeated campaigns — a sensitivity sweep loop — retrace nothing
+        key = ("campaign", n_steps,
+               None if collect is None else id(collect))
+        fn = self._run_cache.get(key)
+        if fn is None:
+            while len(self._run_cache) >= 16:
+                self._run_cache.pop(next(iter(self._run_cache)))
+
+            def campaign_run(states, start, stacked):
+                def one(fault):
+                    idxs = start + jnp.arange(iters, dtype=jnp.int32) * k
+
+                    def body(st, idx):
+                        st, rep = self.step_fn(st, idx, fault)
+                        out = (rep,
+                               collect(st) if collect is not None else None)
+                        return st, out
+
+                    final, (reps, coll) = jax.lax.scan(body, states, idxs)
+                    summed = jax.tree.map(
+                        lambda x: jnp.sum(x, axis=0), reps)
+                    return final, summed, coll
+
+                # `one` maps over the fault batch only; states/start are
+                # broadcast through the closure (vmap in_axes=None)
+                return jax.vmap(one)(stacked)
+
+            fn = jax.jit(campaign_run)
+            self._run_cache[key] = fn
+        with self._mesh_ctx():
+            finals, reports, coll = fn(states, jnp.int32(start), stacked)
+        return RunResult(states=finals, reports=reports,
+                         collected=coll if collect is not None else None)
+
 
 # --------------------------------------------------------------------------
 # host back-end: §IV recovery protocol in the loop
@@ -534,7 +669,9 @@ class HostExecutor(Executor):
                 "compare_every amortization")
         if ledger is not None:
             self.ledger = ledger
+        self._jit = jit
         self._step = compile_step(program)
+        self._step_nocmp = None        # lazy: pure_step(compare=False)
         if jit:
             self._step = jax.jit(self._step)
         levels = program.levels()
@@ -545,10 +682,17 @@ class HostExecutor(Executor):
             if cell.redundancy.level == 2
         }
 
-    def pure_step(self, states, step_idx, fault=None):
+    def pure_step(self, states, step_idx, fault=None, *, compare=True):
         """Replay one transition with no ledger/recovery side effects (the
         §IV third execution; see ``Executor.pure_step``)."""
         fault = fault if fault is not None else FaultSpec.none()
+        if not compare:
+            if self._step_nocmp is None:
+                fn = compile_step(self.program, with_compare=False)
+                self._step_nocmp = jax.jit(fn) if self._jit else fn
+            with self._mesh_ctx():
+                return self._step_nocmp(
+                    states, jnp.int32(int(step_idx)), fault)
         with self._mesh_ctx():
             return self._step(states, jnp.int32(int(step_idx)), fault)
 
@@ -763,6 +907,31 @@ def _auto_backend(program: MisoProgram) -> str:
             else _lockstep_flavor())
 
 
+def _wants_spatial(program: MisoProgram, mesh, pod_axis: str) -> bool:
+    """True when the program asks for spatial replica placement AND the
+    mesh can realize it for EVERY spatial cell — auto then resolves to the
+    spatial back-end (the only schedule that puts replicas on distinct
+    pods).  A spatial cell the pod axis cannot hold keeps the whole
+    program on the temporal fallback instead of a compile-time error
+    (auto must always produce a runnable executor)."""
+    from repro.kernels import ops
+
+    if mesh is None or pod_axis not in getattr(mesh, "axis_names", ()):
+        return False
+    spatial = [
+        c for c in program.cells.values()
+        if c.redundancy.level > 1 and c.redundancy.placement == "spatial"
+    ]
+    return bool(spatial) and all(
+        c.redundancy.level == mesh.shape[pod_axis]
+        # mirror every constructor validation: an empty state has nothing
+        # to place across pods, so it too falls back to temporal
+        and ops.word_layout(jax.eval_shape(
+            lambda c=c: c.init(jax.random.PRNGKey(0)))).total > 0
+        for c in spatial
+    )
+
+
 def compile(
     program: MisoProgram,
     *,
@@ -778,11 +947,12 @@ def compile(
 ) -> Executor:
     """Compile a MisoProgram into an Executor — the single front door.
 
-    backend       -- "lockstep" | "lockstep_pallas" | "host" | "wavefront"
-                     | "auto" (or any name added through
-                     ``register_backend``).
+    backend       -- "lockstep" | "lockstep_pallas" | "spatial_lockstep"
+                     | "host" | "wavefront" | "auto" (or any name added
+                     through ``register_backend``).
     mesh          -- optional jax Mesh; compilation/execution happen under
-                     this mesh context.
+                     this mesh context.  Required by the spatial back-end
+                     (the replica axis lives on the mesh's ``pod`` axis).
     sharding      -- optional pytree of shardings applied to the states at
                      ``init``.
     policies      -- optional {cell_name: RedundancyPolicy}: selective
@@ -802,7 +972,7 @@ def compile(
                      consistent mid-run cut).
     backend_opts  -- forwarded to the back-end (host: ledger, jit;
                      wavefront: window, jit; lockstep_pallas: interpret,
-                     block).
+                     block; spatial_lockstep: pod_axis).
     """
     if policies:
         program = program.with_policies(policies)
@@ -814,6 +984,13 @@ def compile(
             # option rather than letting the graph shape pick a back-end
             # that would reject it
             backend = _lockstep_flavor()
+        if ("spatial_lockstep" in BACKENDS
+                and _wants_spatial(program, mesh,
+                                   backend_opts.get("pod_axis", "pod"))):
+            # spatial placement is a *policy request*: only the spatial
+            # back-end honors it (replicas on distinct pods), so it wins
+            # over the graph-shape choice
+            backend = "spatial_lockstep"
     try:
         cls = BACKENDS[backend]
     except KeyError:

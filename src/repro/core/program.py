@@ -57,8 +57,8 @@ class MisoProgram:
         try:
             return self._ids[name]
         except KeyError:
-            raise ValueError(f"{name!r} is not a cell of this program") \
-                from None
+            raise ValueError(
+                f"{name!r} is not a cell of this program") from None
 
     def levels(self) -> dict[str, int]:
         return {n: c.redundancy.level for n, c in self.cells.items()}

@@ -108,6 +108,28 @@ def fingerprint(state: Pytree) -> jax.Array:
 # --------------------------------------------------------------------------
 # reports
 # --------------------------------------------------------------------------
+def fingerprint_majority(hs: jax.Array):
+    """Majority relation over a (3, 4) stack of replica fingerprints.
+
+    Returns ``((eq01, eq02, eq12), idx, per)``: the pairwise equality
+    flags, the index of a replica belonging to the majority (hash-mode TMR
+    adopts that replica's state wholesale), and the per-replica mismatch
+    indicators (float32).  Single source of truth shared by the temporal
+    hash-TMR epilogue below and the spatial back-end's cross-pod vote
+    (``core/backend_spatial.py``) — bitwise parity between the two
+    placements depends on this logic staying identical."""
+    eq01 = jnp.all(hs[0] == hs[1])
+    eq02 = jnp.all(hs[0] == hs[2])
+    eq12 = jnp.all(hs[1] == hs[2])
+    idx = jnp.where(eq01 | eq02, 0, jnp.where(eq12, 1, 0))
+    per = jnp.stack([
+        (~(eq01 | eq02)).astype(jnp.float32),
+        (~(eq01 | eq12)).astype(jnp.float32),
+        (~(eq02 | eq12)).astype(jnp.float32),
+    ])
+    return (eq01, eq02, eq12), idx, per
+
+
 def zero_report() -> dict:
     return {
         "mismatch_elems": jnp.float32(0),   # elements (or hash words) differing
@@ -236,19 +258,10 @@ def run_transition(
     # R == 3: in-graph correction
     if policy.compare == "hash":
         h = jnp.stack([fingerprint(r) for r in reps])  # (3, 4)
-        eq01 = jnp.all(h[0] == h[1])
-        eq02 = jnp.all(h[0] == h[2])
-        eq12 = jnp.all(h[1] == h[2])
-        # pick a replica belonging to the majority
-        idx = jnp.where(eq01 | eq02, 0, jnp.where(eq12, 1, 0))
+        _, idx, per = fingerprint_majority(h)
         voted = jax.tree.map(
             lambda x: jnp.take(x, idx, axis=0), new
         )
-        per = jnp.stack([
-            (~(eq01 | eq02)).astype(jnp.float32),
-            (~(eq01 | eq12)).astype(jnp.float32),
-            (~(eq02 | eq12)).astype(jnp.float32),
-        ])
     else:
         voted = majority_vote(*reps)
         per = jnp.stack(

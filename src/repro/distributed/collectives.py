@@ -1,4 +1,27 @@
-"""Compressed gradient collectives (beyond-paper distributed optimization).
+"""Cross-device collectives: compressed gradient reductions and the
+cross-pod replica primitives used by the spatial-DMR executor.
+
+Spatial replica primitives (``core/backend_spatial.py``)
+--------------------------------------------------------
+Under spatial placement each pod holds ONE replica of a MISO cell's state,
+so detect/vote become collectives along the ``pod`` mesh axis.  All state
+transport goes through the ``kernels.ops`` u32 word stream so every dtype
+(bool / bf16 / f32 / i64) moves bit-exactly in a single wire array:
+
+  * ``psum_delta``        — the all_gather-free DMR fingerprint compare:
+    ``psum(h) - 2h`` is nonzero exactly where the two pods' fingerprints
+    differ (uint32 wraparound: a + b == 2a  <=>  a == b), so detection
+    ships 16 bytes per pod instead of O(state).
+  * ``bcast_pytree``      — bit-exact broadcast of a pytree from one pod
+    (masked psum of the u32 words; the source index may be traced, which
+    is how TMR adopts the majority replica).
+  * ``exchange_pytree``   — pairwise state swap between the two pods of a
+    DMR pair (the paper-faithful O(state) bitwise compare).
+  * ``gather_replicas``   — every pod receives all R replicas, re-stacked
+    on a leading replica axis (bitwise TMR vote; temporal-replica readers
+    of a spatial cell).
+
+Compressed gradient collectives (beyond-paper distributed optimization).
 
 ``compressed_psum_int8`` replaces a bf16 ring all-reduce (~4 bytes/element on
 the wire) with the two-hop quantized pattern used by THC/CocktailSGD-style
@@ -24,6 +47,61 @@ import jax
 import jax.numpy as jnp
 
 Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# spatial-replica primitives (pod-axis collectives; see module docstring)
+# --------------------------------------------------------------------------
+def psum_delta(h: jax.Array, axis: str) -> jax.Array:
+    """DMR compare without moving the peer's fingerprint: over a 2-member
+    ``axis``, ``psum(h) - 2h`` is nonzero exactly at the words where the
+    two members' values differ (uint32 wraparound arithmetic is exact)."""
+    return jax.lax.psum(h, axis) - h * jnp.asarray(2, h.dtype)
+
+
+def bcast_pytree(tree: Pytree, axis: str, src) -> Pytree:
+    """Bit-exact broadcast of ``tree`` from member ``src`` of ``axis`` to
+    every member.  ``src`` may be a traced scalar (TMR majority adoption).
+
+    Implemented as a masked psum of the u32 word stream: summing zeros
+    transports any dtype's bit pattern exactly (a float psum would lose
+    -0.0 signs and NaN payloads)."""
+    from repro.kernels import ops
+
+    layout = ops.word_layout(tree)
+    flat = ops.flatten_to_u32(tree, layout=layout)
+    me = jax.lax.axis_index(axis)
+    masked = jnp.where(me == src, flat, jnp.zeros_like(flat))
+    return ops.unflatten_from_u32(
+        jax.lax.psum(masked, axis), tree, layout=layout)
+
+
+def exchange_pytree(tree: Pytree, axis: str) -> Pytree:
+    """Each of the TWO members of ``axis`` receives the other's ``tree``
+    (one ppermute of the u32 word stream) — the O(state) wire cost of the
+    paper-faithful bitwise DMR compare under spatial placement."""
+    from repro.kernels import ops
+
+    layout = ops.word_layout(tree)
+    flat = ops.flatten_to_u32(tree, layout=layout)
+    other = jax.lax.ppermute(flat, axis, perm=[(0, 1), (1, 0)])
+    return ops.unflatten_from_u32(other, tree, layout=layout)
+
+
+def gather_replicas(tree: Pytree, axis: str) -> Pytree:
+    """All R members' local ``tree``s, re-stacked on a leading replica axis
+    (every member receives all R) — the spatial analog of a temporal
+    replicated state's in-memory layout."""
+    from repro.kernels import ops
+
+    layout = ops.word_layout(tree)
+    flat = ops.flatten_to_u32(tree, layout=layout)
+    gathered = jax.lax.all_gather(flat, axis)          # (R, words)
+    R = gathered.shape[0]
+    reps = [ops.unflatten_from_u32(gathered[i], tree, layout=layout)
+            for i in range(R)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
 
 _QBLOCK = 512
 

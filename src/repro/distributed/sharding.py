@@ -66,8 +66,8 @@ class ShardCtx:
         if logical == "fsdp":
             if not self.fsdp_axes:
                 return None
-            return self.fsdp_axes if len(self.fsdp_axes) > 1 else \
-                self.fsdp_axes[0]
+            return (self.fsdp_axes if len(self.fsdp_axes) > 1
+                    else self.fsdp_axes[0])
         return logical
 
     def pspec(self, *logical) -> P:
@@ -87,11 +87,17 @@ class ShardCtx:
                     return None
                 if isinstance(entry, tuple):
                     left = tuple(a for a in entry if a not in drop)
-                    return left if len(left) > 1 else \
-                        (left[0] if left else None)
+                    return (left if len(left) > 1
+                            else (left[0] if left else None))
                 return None if entry in drop else entry
 
             spec = P(*(keep(e) for e in spec))
+            if all(e is None for e in spec):
+                # nothing left to constrain (e.g. the spatial-DMR executor
+                # runs transitions full-manual): a constraint would be
+                # rejected inside the manual region, and an all-None spec
+                # says nothing anyway
+                return x
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(self.mesh, spec)
         )

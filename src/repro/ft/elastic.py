@@ -14,8 +14,15 @@ This module covers the rest of the 1000-node story:
     transitions; ``StragglerPolicy("first_wins")`` lets the runtime adopt
     the faster replica's state when the gap exceeds ``slack`` and skip the
     compare for that step (the compare deficit is repaid on the next
-    compare step).  On CPU CI we *simulate* replica latencies; on real
-    hardware the same policy consumes per-pod completion timestamps.
+    compare step).  Replica *latencies* are an input (simulated on CPU CI,
+    per-pod completion timestamps on real hardware), but the steps
+    themselves are real now: ``run_with_straggler_policy`` drives an
+    actual ``spatial_lockstep`` executor under the policy's decisions
+    (adopt = the executor's side-effect-free replay, compare discarded),
+    and ``spatial_strike_report`` sweeps a whole multi-strike campaign in
+    ONE vmap'd dispatch (``Executor.run_campaign``) instead of a host
+    loop — ``simulate_spatial_step`` survives only as the decision
+    function both share.
 """
 from __future__ import annotations
 
@@ -116,3 +123,108 @@ def simulate_spatial_step(
         return f"adopt:{fast_idx}"
     stats.waited += 1
     return "wait"
+
+
+def run_with_straggler_policy(
+    exe,
+    states: Pytree,
+    n_steps: int,
+    policy: StragglerPolicy,
+    replica_times,
+    *,
+    faults=None,
+    start_step: int = 0,
+    stats: Optional[StragglerStats] = None,
+    log: Optional[FailureLog] = None,
+):
+    """Drive a REAL spatially-replicated executor under a straggler policy.
+
+    For each step, ``simulate_spatial_step`` decides from the observed
+    per-replica completion times (``replica_times[t]``); the step itself
+    is an actual executor transition:
+
+      'wait'     -- the full compare step (``exe.step``): strikes are
+                    detected, ledger-attributed, and any outstanding
+                    compare deficit is repaid (DMR divergence persists, so
+                    a strike hidden by an adopted step surfaces here).
+      'adopt:<i>'-- the runtime takes the fast replica without waiting for
+                    the compare: the executor's side-effect-free replay
+                    with the compare statically elided
+                    (``exe.pure_step(..., compare=False)``) advances the
+                    state — under spatial placement the cross-pod compare
+                    collective is GONE from the dispatch, so the step
+                    really does not synchronize with the slow pod.  The
+                    skipped compare is the deficit the stats count.
+
+    Returns ``(states, stats, log)``; ``log`` records detect/adopt/repay
+    events with their true step.  This replaces the old latency-only
+    simulation: the decisions are identical (same function) but the
+    dependability consequences are the executor's, not a model's.
+    """
+    from repro.core.executor import _as_fault_list, _fault_in_window
+
+    stats = stats if stats is not None else StragglerStats()
+    log = log if log is not None else FailureLog()
+    flist = _as_fault_list(faults)
+    stride = exe.step_stride
+    if n_steps % stride != 0:
+        raise ValueError("n_steps must be a multiple of compare_every")
+    for t in range(start_step, start_step + n_steps, stride):
+        times = replica_times[min((t - start_step) // stride,
+                                  len(replica_times) - 1)]
+        decision = simulate_spatial_step(policy, stats, times)
+        fault = _fault_in_window(flist, t, stride)
+        if decision.startswith("adopt"):
+            states, _ = exe.pure_step(states, t, fault, compare=False)
+            log.record(t, "adopt", decision.split(":", 1)[1])
+            continue
+        states, rep = exe.step(states, step_idx=t, fault=fault)
+        rep = jax.tree.map(jax.device_get, rep)
+        detected = [name for name, r in rep.items()
+                    if float(r["events"]) > 0]
+        for name in detected:
+            log.record(t, "detect", name)
+        if detected and stats.compare_deficit:
+            # a deficit step may have hidden this strike; this compare
+            # repays every outstanding skipped compare
+            log.record(t, "repay", str(stats.compare_deficit))
+        if stats.compare_deficit:
+            stats.compare_deficit = 0
+    return states, stats, log
+
+
+def spatial_strike_report(
+    exe,
+    states: Pytree,
+    n_steps: int,
+    faults,
+    *,
+    start_step: int = 0,
+) -> list[dict]:
+    """Per-strike detect/repair outcomes of a multi-fault campaign, from
+    REAL executor trajectories in one vmap'd dispatch.
+
+    ``exe.run_campaign`` stacks the FaultSpecs and sweeps all of them
+    in-graph (the stacked-inject path); each strike's summary says whether
+    any replicated cell detected it and whether the detection implies
+    in-graph repair (TMR votes correct; DMR detects only — the §IV third
+    execution is the serving engine's job)."""
+    res = exe.run_campaign(states, n_steps, faults, start_step=start_step)
+    reports = jax.tree.map(jax.device_get, res.reports)
+    levels = {n: c.redundancy.level for n, c in exe.program.cells.items()}
+    out = []
+    faults = faults if isinstance(faults, (list, tuple)) else [faults]
+    for i, fault in enumerate(faults):
+        events = {
+            name: float(rep["events"][i])
+            for name, rep in reports.items()
+            if float(rep["events"][i]) > 0
+        }
+        out.append({
+            "fault_step": int(fault.step),
+            "detected": bool(events),
+            "events": events,
+            "repaired": bool(events) and all(
+                levels.get(n, 1) == 3 for n in events),
+        })
+    return out

@@ -139,8 +139,8 @@ def collective_bytes(hlo_text: str, top: int = 0) -> dict:
         res = _shape_bytes(m.group("result"))
         if "promoted" in line and op in ("all-reduce", "reduce-scatter"):
             res /= 2.0        # bf16 source promoted to f32 by the CPU pass
-        elif op in ("all-gather", "all-to-all", "collective-permute") \
-                and "f32[" in line and _converted_operand(line, defs):
+        elif (op in ("all-gather", "all-to-all", "collective-permute")
+                and "f32[" in line and _converted_operand(line, defs)):
             # CPU FloatNormalization promotes every bf16 scatter to f32 and
             # the resulting converts hoist across data-movement collectives,
             # widening them to f32.  TPU scatters/moves bf16 natively; count
@@ -302,18 +302,18 @@ def _cache_bytes(cfg, B_loc: int, S: int, tp: int) -> float:
         if cfg.shared_attn_every:
             S_eff = min(S, 10**9)
             inv = cfg.n_layers // cfg.shared_attn_every
-            total += inv * 2.0 * B_loc * cfg.n_kv_heads * S_eff * \
-                (cfg.d_model // max(cfg.n_heads, 1)) * 2 / tp
+            total += (inv * 2.0 * B_loc * cfg.n_kv_heads * S_eff
+                      * (cfg.d_model // max(cfg.n_heads, 1)) * 2 / tp)
         return total
     if cfg.attn_type == "mla":
         m = cfg.mla
-        return 2.0 * B_loc * S * (m.kv_lora_rank + m.qk_rope_dim) \
-            * cfg.n_layers / tp
+        return (2.0 * B_loc * S * (m.kv_lora_rank + m.qk_rope_dim)
+                * cfg.n_layers / tp)
     S_eff = min(S, cfg.window) if cfg.window else S
     dh = cfg.d_model // max(cfg.n_heads, 1)
     kv_shard = tp if cfg.n_kv_heads % tp == 0 else tp  # seq- or head-shard
-    return 2.0 * 2.0 * B_loc * cfg.n_kv_heads * S_eff * dh \
-        * cfg.n_layers / kv_shard
+    return (2.0 * 2.0 * B_loc * cfg.n_kv_heads * S_eff * dh
+            * cfg.n_layers / kv_shard)
 
 
 def model_flops_for(cfg, shape) -> float:

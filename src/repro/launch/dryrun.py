@@ -359,8 +359,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         ideal = mf / (chips * analysis.HW["peak_flops"])
         roof["bound_s"] = bound
         roof["roofline_fraction"] = ideal / bound if bound else 0.0
-        roof["useful_ratio"] = mf / (total["flops"] * chips) \
-            if total["flops"] else 0.0
+        roof["useful_ratio"] = (mf / (total["flops"] * chips)
+                                if total["flops"] else 0.0)
         rec["roofline"] = roof
         rec["ok"] = True
         if verbose:

@@ -52,8 +52,8 @@ def make_ctx(
     if embed_strategy == "auto":
         # one-hot matmul embedding when a replicated table would be heavy
         table_bytes = vocab_size * d_model * 2
-        embed_strategy = "onehot" if table_bytes > 512 * 1024 * 1024 else \
-            "gather"
+        embed_strategy = ("onehot" if table_bytes > 512 * 1024 * 1024
+                          else "gather")
     return ShardCtx(
         mesh=mesh,
         data_axes=data_axes,
@@ -62,3 +62,15 @@ def make_ctx(
         embed_strategy=embed_strategy,
         **kw,
     )
+
+
+def make_spatial_ctx(mesh, **kw) -> ShardCtx:
+    """ShardCtx for transitions running INSIDE the spatial-DMR executor's
+    cross-pod ``shard_map`` (``core/backend_spatial.py``): the pod axis
+    carries the MISO replica axis and is manual there, so the transition's
+    own sharding constraints must never mention it.  The executor runs the
+    body full-manual, so every mesh axis is marked manual —
+    ``ShardCtx.constrain`` then drops to a no-op instead of emitting a
+    constraint the manual region would reject."""
+    return make_ctx(mesh, pod_role="replica",
+                    manual_axes=tuple(mesh.axis_names), **kw)

@@ -118,8 +118,8 @@ def engine_main(cfg, args):
         # arm a flip against its SECOND replica slot on the next tick
         rec = engine.requests[victim.id]
         for _ in range(10 * args.decode):
-            if rec.status == RUNNING \
-                    and len(rec.tokens) + 2 <= victim.max_new_tokens:
+            if (rec.status == RUNNING
+                    and len(rec.tokens) + 2 <= victim.max_new_tokens):
                 break
             engine.pump(max_ticks=1)
         if rec.status != RUNNING:

@@ -124,8 +124,8 @@ def main():
     try:
         while step < args.steps:
             n = min(args.log_every, args.steps - step)
-            if args.simulate_failure >= 0 and \
-                    step <= args.simulate_failure < step + n:
+            if (args.simulate_failure >= 0
+                    and step <= args.simulate_failure < step + n):
                 n = args.simulate_failure - step + 1
             states = exe.run(states, n, faults=faults,
                              start_step=step).states

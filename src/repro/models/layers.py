@@ -247,8 +247,8 @@ def gqa_attention(
         assert S == 1, "decode path handles one token at a time"
         pos = positions[0] if cfg.mrope_sections else positions  # (B,S)
         pos = pos[:, 0]                                          # (B,)
-        if ctx is not None and getattr(ctx, "decode_shardmap", False) \
-                and ctx.mesh is not None:
+        if (ctx is not None and getattr(ctx, "decode_shardmap", False)
+                and ctx.mesh is not None):
             from repro.distributed import decode as DD
 
             res = DD.gqa_decode(q, k[:, :, 0], v[:, :, 0], cache, pos,
@@ -364,8 +364,8 @@ def mla_attention(
     # absorbed path (decode): attend in the latent space
     assert S == 1
     pos = positions[:, 0]                                   # (B,)
-    if ctx is not None and getattr(ctx, "decode_shardmap", False) \
-            and ctx.mesh is not None:
+    if (ctx is not None and getattr(ctx, "decode_shardmap", False)
+            and ctx.mesh is not None):
         from repro.distributed import decode as DD
 
         q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)

@@ -424,8 +424,8 @@ def loss_fn(
     if cfg.mtp:
         # predict t+2 from (h_t, embed(tok_{t+1})) — simplified MTP head
         emb_next = embed_tokens(params, tokens[:, 1:], cfg, ctx)
-        h_mtp = jnp.concatenate([h[:, :-1], emb_next], axis=-1) \
-            @ params["mtp_proj"]
+        h_mtp = (jnp.concatenate([h[:, :-1], emb_next], axis=-1)
+                 @ params["mtp_proj"])
         h_mtp = L.rmsnorm(h_mtp, params["mtp_norm"], cfg.rms_eps)
         logits2 = unembed(params, h_mtp, cfg, ctx)
         mtp_loss = _xent(logits2[:, :-1], tokens[:, 2:], mask[:, 2:], onehot)

@@ -140,8 +140,8 @@ def apply_updates(
         vf = cfg.b2 * vf + (1 - cfg.b2) * gf * gf
         mhat = mf / c1
         vhat = vf / c2
-        base = master.astype(jnp.float32) if cfg.master_fp32 else \
-            p.astype(jnp.float32)
+        base = (master.astype(jnp.float32) if cfg.master_fp32
+                else p.astype(jnp.float32))
         wd = cfg.weight_decay if p.ndim >= 2 else 0.0
         newf = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + wd * base)
         return (

@@ -51,8 +51,13 @@ from .request import (
     Request,
     RequestQueue,
 )
-from .slots import SlotManager, copy_slot, join_slot, read_slot, \
-    slot_fingerprints
+from .slots import (
+    SlotManager,
+    copy_slot,
+    join_slot,
+    read_slot,
+    slot_fingerprints,
+)
 
 Pytree = Any
 

@@ -105,8 +105,8 @@ class RequestQueue:
 
     def _expire_head(self) -> None:
         now = self.time_fn()
-        while self._q and self._q[0].deadline is not None \
-                and self._q[0].deadline <= now:
+        while (self._q and self._q[0].deadline is not None
+                and self._q[0].deadline <= now):
             dead = self._q.popleft()
             self.status[dead.id] = EXPIRED
             self.expired += 1

@@ -34,8 +34,8 @@ def arch(request):
 @pytest.fixture(scope="module")
 def reduced(arch):
     cfg = get_reduced(arch)
-    assert cfg.n_layers <= 6 and cfg.d_model <= 256, \
-        f"reduced config for {arch} is not CPU-sized"
+    assert cfg.n_layers <= 6 and cfg.d_model <= 256, (
+        f"reduced config for {arch} is not CPU-sized")
     return cfg
 
 

@@ -64,10 +64,10 @@ def test_backend_parity_bitwise():
     for backend in ALL_BACKENDS[1:]:
         for t, (ref, got) in enumerate(zip(trajectories["lockstep"],
                                            trajectories[backend])):
-            assert _leaves_equal(ref, got), \
-                f"{backend} diverged from lockstep at step {t}"
-        assert _leaves_equal(finals["lockstep"], finals[backend]), \
-            f"{backend} .run() final state differs from lockstep"
+            assert _leaves_equal(ref, got), (
+                f"{backend} diverged from lockstep at step {t}")
+        assert _leaves_equal(finals["lockstep"], finals[backend]), (
+            f"{backend} .run() final state differs from lockstep")
     # stream and run agree with each other too
     assert _leaves_equal(trajectories["lockstep"][-1], finals["lockstep"])
 
@@ -539,12 +539,69 @@ def test_pure_step_replays_without_side_effects(backend):
     # SAME window is identical (pure)
     replay2, _ = exe.pure_step(states, 0)
     assert _leaves_equal(replay, replay2)
+    # compare=False: identical trajectory with the compare statically
+    # elided (the straggler policy's adopt path) — reports stay zero
+    nocmp, rep = exe.pure_step(states, 0, compare=False)
+    assert _leaves_equal(nocmp, replay)
+    assert float(rep["a"]["events"]) == 0.0
 
 
 def test_pure_step_unsupported_on_wavefront():
     exe = miso.compile(three_cell_program(), backend="wavefront")
     with pytest.raises(NotImplementedError, match="replay"):
         exe.pure_step(exe.init(jax.random.PRNGKey(0)), 0)
+
+
+# ---------------------------------------------------------------------------
+# run_campaign: stacked-FaultSpec multi-fault runs in one dispatch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["lockstep", "lockstep_pallas", "host"])
+def test_run_campaign_matches_sequential_runs(backend):
+    """N FaultSpecs -> a leading campaign axis, bitwise-equal to N
+    sequential runs, with no ledger entries and no counter advance (the
+    vmap'd-inject path on the lock-step flavors; a pure_step loop on the
+    host back-end)."""
+    prog = dmr_program()
+    faults = [miso.FaultSpec.at(step=s, cell_id=0, replica=r, index=3,
+                                bit=21)
+              for s, r in ((1, 0), (3, 1), (9, 0))]  # last never fires
+    exe = miso.compile(prog, backend=backend, donate=False)
+    s0 = exe.init(jax.random.PRNGKey(0))
+    camp = exe.run_campaign(s0, 6, faults, start_step=0)
+    assert exe.metrics()["steps"] == 0          # no side effects
+    assert exe.ledger.totals == {}
+    seq = []
+    for f in faults:
+        ref = miso.compile(prog, backend="lockstep", donate=False)
+        seq.append(ref.run(ref.init(jax.random.PRNGKey(0)), 6,
+                           start_step=0, faults=f).states)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *seq)
+    assert _leaves_equal(camp.states, stacked)
+    ev = np.asarray(camp.reports["a"]["events"])
+    assert list(ev) == [5.0, 3.0, 0.0]          # divergence persists (DMR)
+
+
+def test_run_campaign_collect_and_errors():
+    prog = dmr_program()
+    exe = miso.compile(prog, donate=False)
+    s0 = exe.init(jax.random.PRNGKey(0))
+    faults = [miso.FaultSpec.at(step=0, cell_id=0, bit=20),
+              miso.FaultSpec.at(step=2, cell_id=0, bit=20)]
+    res = exe.run_campaign(s0, 4, faults, start_step=0,
+                           collect=lambda st: st["c"]["x"])
+    assert res.collected.shape == (2, 4)        # (campaign, step)
+    with pytest.raises(ValueError, match="at least one"):
+        exe.run_campaign(s0, 4, [], start_step=0)
+    e4 = miso.compile(prog, compare_every=4, donate=False)
+    with pytest.raises(ValueError, match="multiple of compare_every"):
+        e4.run_campaign(s0, 6, faults, start_step=0)
+
+
+def test_run_campaign_unsupported_on_wavefront():
+    exe = miso.compile(three_cell_program(), backend="wavefront")
+    with pytest.raises(NotImplementedError, match="replay"):
+        exe.run_campaign(exe.init(jax.random.PRNGKey(0)), 2,
+                         [miso.FaultSpec.at(step=0, cell_id=0)])
 
 
 # ---------------------------------------------------------------------------
