@@ -678,6 +678,53 @@ def bench_serving() -> None:
         row("serving", f"load{load}_ttft_p50_s", case["ttft_p50_s"],
             f"p99={case['ttft_p99_s']}s, {done}/{n_req} done")
         assert done == n_req, f"requests lost at load {load}"
+
+    # -- mixed-length load through chunked + bucketed prefill --------------
+    # short and long prompts interleaved; jit_prefill compiles once per
+    # LADDER BUCKET (not per distinct length) and long admissions walk
+    # their tail inside the resident transition, so short requests' TTFT
+    # stays flat.  prefill_compiles <= ladder size is the tracked bound.
+    scfg_mix = ServeConfig(batch=slots, max_len=64,
+                           prefill_chunk=8, prefill_bucket_min=8)
+    prog, adapter = lm_engine_parts(cfg, scfg_mix)
+    eng = miso.serve(prog, adapter)
+    eng.start(jax.random.PRNGKey(0))
+    n_mix = 12 if SMOKE else 50
+    mix_lens = [2, 5, 9, 17, 23, 33]
+    reqs = []
+    t0 = time.perf_counter()
+    for i in range(n_mix):
+        r = Request(
+            prompt=rng.integers(0, cfg.vocab_size, size=mix_lens[
+                i % len(mix_lens)]).astype(np.int32),
+            max_new_tokens=decode)
+        reqs.append(r)
+        eng.submit(r)
+        if i % 3 == 2:
+            eng.pump(max_ticks=1)   # arrivals interleave with decode
+    eng.pump()
+    wall = time.perf_counter() - t0
+    m = eng.metrics()
+    done = sum(1 for r in reqs if eng.result(r.id)["status"] == "done")
+    assert done == n_mix, "requests lost in mixed-length run"
+    assert m["prefill_compiles"] <= len(m["prefill_buckets"]), (
+        m["prefill_compiles"], m["prefill_buckets"])
+    mixed = {
+        "case": "mixed_length_chunked",
+        "requests": n_mix,
+        "prompt_lens": mix_lens,
+        "prefill_chunk": m["prefill_chunk"],
+        "prefill_buckets": m["prefill_buckets"],
+        "prefill_compiles": m["prefill_compiles"],
+        "tokens_per_s": round(m["tokens_out"] / wall, 2),
+        "ttft_p50_s": round(m["ttft_p50_s"], 4),
+        "ttft_p99_s": round(m["ttft_p99_s"], 4),
+    }
+    row("serving", "mixed_prefill_compiles", mixed["prefill_compiles"],
+        f"<= {len(mixed['prefill_buckets'])} buckets over {n_mix} "
+        f"mixed-length requests (chunk={mixed['prefill_chunk']})")
+    row("serving", "mixed_ttft_p50_s", mixed["ttft_p50_s"],
+        f"p99={mixed['ttft_p99_s']}s")
     payload = {
         "bench": "serving",
         "jax": jax.__version__,
@@ -687,6 +734,7 @@ def bench_serving() -> None:
         "decode_tokens": decode,
         "saturated_tokens_per_s": round(cap_tps, 2),
         "cases": cases,
+        "mixed_length": mixed,
     }
     JSON_DIR.mkdir(parents=True, exist_ok=True)
     out = JSON_DIR / "BENCH_serving.json"

@@ -215,6 +215,21 @@ print("\nThe same program scales to the 512-chip mesh unchanged — see "
 #    ONE resident slot-masked decoder via Executor.stream — continuous
 #    batching with per-REQUEST dependability (a request may ask for DMR/TMR
 #    and pays for it in replica slots; nobody else pays anything).
+#
+#    The LM adapter (repro.serving.lm.lm_engine_parts) additionally buckets
+#    and chunks PREFILL via ServeConfig flags:
+#      prefill_bucket_min=16  -- prompts pad to a geometric compile ladder
+#                                (16/32/.../max_len): jit_prefill compiles
+#                                once per BUCKET, not per distinct length
+#                                (engine.metrics()["prefill_compiles"]);
+#      prefill_chunk=8        -- the out-of-band prefill forward is bounded
+#                                to 8 tokens; a long prompt's tail joins the
+#                                resident batch immediately and is walked
+#                                one token per tick INSIDE the slot-masked
+#                                transition, so admission never stalls the
+#                                running requests' ticks (flat short-request
+#                                TTFT under mixed-length load).
+#    See examples/serve_lm.py and benchmarks/run.py::bench_serving.
 # ---------------------------------------------------------------------------
 if ENGINE:
     from repro.serving import (

@@ -13,6 +13,10 @@ between stream ticks:
 and none of them can perturb the others' tokens — the isolation
 invariant tested in tests/test_serving.py.
 
+Prefill is bucketed (compiles once per geometric bucket, not per prompt
+length) and chunked (``prefill_chunk``: long prompts join immediately
+and walk their tail one token per tick inside the resident transition).
+
 Run:  PYTHONPATH=src python examples/serve_lm.py
       PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
       PYTHONPATH=src python examples/serve_lm.py --strike   # flip a bit
@@ -32,13 +36,16 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="internlm2-1.8b")
 ap.add_argument("--decode", type=int, default=8)
 ap.add_argument("--slots", type=int, default=6)
+ap.add_argument("--prefill-chunk", type=int, default=4)
 ap.add_argument("--strike", action="store_true",
                 help="inject a bit flip into the DMR request's replica")
 args = ap.parse_args()
 
 cfg = get_reduced(args.arch)   # CPU-sized reduced config
-prog, adapter = lm_engine_parts(cfg, ServeConfig(batch=args.slots,
-                                                 max_len=64))
+prog, adapter = lm_engine_parts(
+    cfg, ServeConfig(batch=args.slots, max_len=64,
+                     prefill_chunk=args.prefill_chunk,
+                     prefill_bucket_min=8))
 engine = miso.serve(prog, adapter)
 engine.start(jax.random.PRNGKey(0))
 
@@ -72,7 +79,9 @@ engine.pump(faults=fault)       # drain
 m = engine.metrics()
 print(f"{m['done']}/{m['submitted']} done | {m['tokens_out']} tokens | "
       f"{m['tokens_per_s']:.1f} tok/s | "
-      f"ttft p50={m.get('ttft_p50_s', 0):.3f}s")
+      f"ttft p50={m.get('ttft_p50_s', 0):.3f}s | "
+      f"prefill compiles={m['prefill_compiles']} "
+      f"(buckets={m['prefill_buckets']})")
 for name, r in (("A none", a), ("B dmr ", b), ("C tmr ", c)):
     res = engine.result(r.id)
     print(f"  {name}: {res['status']:8s} slots={res['slots']} "

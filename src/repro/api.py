@@ -133,6 +133,34 @@ bitwise-identical no matter which other slots are occupied (slot-masked
 transition + row-independent batch math) — tested in
 tests/test_serving.py.
 
+Prefill (LM adapter) is *bucketed* and *chunked* — both off the hot
+path's recompile and stall cliffs, both ``ServeConfig`` flags:
+
+  * ``prefill_bucket_min`` — prompts are right-padded to a geometric
+    compile ladder (min, 2*min, ..., max_len); ``jit_prefill`` compiles
+    once per BUCKET instead of once per distinct prompt length, and the
+    padded positions are masked out of the filled cache
+    (``transformer.forward(prompt_len=...)``), so a bucketed prefill is
+    indistinguishable from an exact-length one.  ``metrics()`` reports
+    ``prefill_compiles`` / ``prefill_buckets``.  Recurrent (mamba)
+    archs fall back to exact-length compiles automatically.
+  * ``prefill_chunk`` — admission itself becomes a sequence of MISO
+    transitions: the out-of-band forward covers at most ``chunk`` prompt
+    tokens, the tail rides into the slot's ``pending`` segment and is
+    consumed one token per tick INSIDE the resident slot-masked
+    transition.  A long prompt joins immediately, never stalls the
+    running batch for more than one bounded chunk forward, and short
+    requests' TTFT stays flat under mixed-length load.  Chunked and
+    whole-prompt prefill emit bitwise-identical tokens (tested across
+    bucket boundaries for none/DMR/TMR); ``prefill_chunk=0`` is the
+    degenerate one-chunk (whole-prompt) case.
+
+Replicated (DMR/TMR) requests occupy a CONTIGUOUS run of replica slots;
+when churn fragments the free list the engine defragments instead of
+stalling — a running request's slot is relocated via the bitwise
+``copy_slot`` + scrub machinery (``metrics()["defrag_moves"]``),
+invisible to its owner by the slot-position invariance.
+
 Per-request policy semantics: a request's ``RedundancyPolicy`` maps onto
 *replica slots* of the same resident batch (replication is mechanically
 identical to data parallelism — core/redundancy.py — here applied at

@@ -320,9 +320,11 @@ class FaultLedger:
             )
             t["events"] += ev
             t["elems"] += float(rep["mismatch_elems"])
+            # per_replica may be shorter than MAX_REPLICAS: the serving
+            # engine sizes it to the request's actual level (DMR -> 2)
             pr = [float(x) for x in rep["per_replica"]]
-            for i in range(3):
-                t["per_replica"][i] += 1.0 if pr[i] > 0 else 0.0
+            for i, x in enumerate(pr[:MAX_REPLICAS]):
+                t["per_replica"][i] += 1.0 if x > 0 else 0.0
             if ev > 0:
                 self.recent.setdefault(name, []).append(step)
                 self.recent[name] = [

@@ -8,6 +8,12 @@ SLO surface (tokens/s, TTFT p50/p99, per-request faults).
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
       --reduced --slots 4 --requests 6 --mix none,dmr --decode 12
 
+Prefill is bucketed (``--prefill-bucket-min``: one jit compile per
+geometric bucket, not per distinct prompt length) and optionally chunked
+(``--prefill-chunk``: the out-of-band forward is bounded to the chunk,
+the prompt tail walks through the resident transition one token per
+tick); ``prefill_compiles`` is printed from ``engine.metrics()``.
+
 ``--strike`` arms one bit-flip against the first DMR request's replica
 slot mid-decode and verifies it is detected, attributed to that request,
 and repaired (the CI serving smoke runs this).
@@ -63,6 +69,15 @@ def main():
     ap.add_argument("--strike", action="store_true",
                     help="inject one bit flip into the first DMR "
                          "request's replica slot and verify attribution")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: bound the out-of-band prefill "
+                         "to this many tokens; the prompt tail walks "
+                         "through the resident transition one token per "
+                         "tick (0 = whole prompt)")
+    ap.add_argument("--prefill-bucket-min", type=int, default=16,
+                    help="smallest prefill compile bucket (geometric "
+                         "ladder up to --max-len; 0 = exact-length "
+                         "compiles)")
     # static path
     ap.add_argument("--static", action="store_true",
                     help="fixed-batch reference path (no engine)")
@@ -86,7 +101,9 @@ def engine_main(cfg, args):
     from repro.serving import DONE, RUNNING, Request
     from repro.serving.lm import lm_engine_parts
 
-    scfg = ServeConfig(batch=args.slots, max_len=args.max_len)
+    scfg = ServeConfig(batch=args.slots, max_len=args.max_len,
+                       prefill_chunk=args.prefill_chunk,
+                       prefill_bucket_min=args.prefill_bucket_min)
     prog, adapter = lm_engine_parts(cfg, scfg, LOCAL)
     engine = miso.serve(prog, adapter)
     engine.start(jax.random.PRNGKey(args.seed))
@@ -143,6 +160,9 @@ def engine_main(cfg, args):
           f"({m['tokens_out'] / max(wall, 1e-9):.1f} tok/s) | "
           f"ttft p50={m.get('ttft_p50_s', 0):.3f}s "
           f"p99={m.get('ttft_p99_s', 0):.3f}s")
+    print(f"prefill: {m['prefill_compiles']} compiles "
+          f"(buckets={m['prefill_buckets']}, chunk={m['prefill_chunk']}) | "
+          f"defrag moves={m['defrag_moves']}")
     for r in reqs:
         res = engine.result(r.id)
         mark = f" policy={r.policy.level}" if r.policy.level > 1 else ""

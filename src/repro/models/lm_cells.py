@@ -235,6 +235,42 @@ class ServeConfig:
     max_len: int          # cache capacity == shape seq_len
     param_seed: int = 0
     prefill_len: int = 0  # >0: dry-run-style warm cache position
+    #: continuous batcher only (repro/serving): the out-of-band prefill
+    #: forward is bounded to this many prompt tokens; the remainder is
+    #: stored in the slot's ``pending`` buffer and walked one token per
+    #: tick INSIDE the resident transition, so a long admission never
+    #: stalls running requests for more than one chunk-sized forward.
+    #: 0 = whole-prompt (the degenerate one-chunk case).
+    prefill_chunk: int = 0
+    #: smallest prefill compile bucket; prompts are right-padded to a
+    #: geometric ladder (min, 2*min, ... max_len) so jit compiles once
+    #: per BUCKET instead of once per distinct prompt length.  0 disables
+    #: bucketing (exact-length compiles — recurrent archs fall back to
+    #: this automatically, since padding folds into mamba state).
+    prefill_bucket_min: int = 16
+    #: explicit bucket ladder override (sorted lengths); () = geometric.
+    prefill_buckets: tuple = ()
+
+
+def prefill_bucket_ladder(scfg: "ServeConfig") -> tuple:
+    """The prefill compile-bucket ladder of a serve config: explicit
+    override, or geometric doubling from ``prefill_bucket_min`` capped at
+    ``max_len``; () when bucketing is disabled.  Explicit entries are
+    clamped to ``max_len`` (the cache cannot install a longer fill) and
+    ``max_len`` itself is always present (otherwise prompts above the
+    largest entry would silently revert to one compile per length)."""
+    if scfg.prefill_buckets:
+        return tuple(sorted(
+            {min(b, scfg.max_len) for b in scfg.prefill_buckets if b > 0}
+            | {scfg.max_len}))
+    if scfg.prefill_bucket_min <= 0:
+        return ()
+    ladder, b = [], min(scfg.prefill_bucket_min, scfg.max_len)
+    while b < scfg.max_len:
+        ladder.append(b)
+        b *= 2
+    ladder.append(scfg.max_len)
+    return tuple(ladder)
 
 
 def make_serve_program(
@@ -294,15 +330,27 @@ def slot_decoder_init(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     """Decoder-cell state for the continuous batcher: every leaf is
     per-slot (leading or embedded batch axis), so requests can join/leave
     individual slots between stream ticks.  ``active`` is the slot mask;
-    free slots hold zeros and are never written by the transition."""
+    free slots hold zeros and are never written by the transition.
+
+    ``pending``/``p_head``/``p_len`` is the chunked-prefill prompt
+    segment: the tail of a long prompt that was NOT covered by the
+    out-of-band prefill chunk.  While ``p_head < p_len`` the transition
+    feeds ``pending[p_head]`` (the next prompt token) instead of the last
+    generated token and advances the cursor — admission itself becomes a
+    sequence of ordinary lock-step transitions."""
     shape = (batch, 1)
+    pshape = (batch, max_len)
     if cfg.n_codebooks > 1:
         shape = shape + (cfg.n_codebooks,)
+        pshape = pshape + (cfg.n_codebooks,)
     return {
         "cache": T.init_cache(cfg, batch, max_len),
         "tokens": jnp.zeros(shape, jnp.int32),
         "active": jnp.zeros((batch,), jnp.bool_),
         "n_decoded": jnp.zeros((batch,), jnp.int32),
+        "pending": jnp.zeros(pshape, jnp.int32),
+        "p_head": jnp.zeros((batch,), jnp.int32),
+        "p_len": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -342,8 +390,22 @@ def make_slot_serve_program(
     def d_transition(prev):
         st = prev["decoder"]
         act = st["active"]
+        # chunked prefill: slots still holding prompt tail feed the NEXT
+        # PROMPT TOKEN into the step instead of their last argmax — the
+        # cache builds through the ordinary decode path, one position per
+        # tick, without ever stalling the other slots
+        walking = act & (st["p_head"] < st["p_len"])
+        idx = jnp.clip(st["p_head"], 0, scfg.max_len - 1)
+        if cfg.n_codebooks > 1:
+            nxt_p = jnp.take_along_axis(
+                st["pending"], idx[:, None, None], axis=1)
+            wmask = walking[:, None, None]
+        else:
+            nxt_p = jnp.take_along_axis(st["pending"], idx[:, None], axis=1)
+            wmask = walking[:, None]
+        tok_in = jnp.where(wmask, nxt_p, st["tokens"])
         logits, cache = T.decode_step(
-            cfg, prev["weights"]["params"], st["cache"], st["tokens"],
+            cfg, prev["weights"]["params"], st["cache"], tok_in,
             ctx=ctx, active=act,
         )
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
@@ -353,7 +415,10 @@ def make_slot_serve_program(
             "cache": cache,
             "tokens": nxt,
             "active": act,
-            "n_decoded": st["n_decoded"] + act.astype(jnp.int32),
+            "n_decoded": st["n_decoded"] + (act & ~walking).astype(jnp.int32),
+            "pending": st["pending"],
+            "p_head": st["p_head"] + walking.astype(jnp.int32),
+            "p_len": st["p_len"],
         }
         # gate the whole writeback on the slot mask: the attention paths
         # already mask their cache scatters, this covers every remaining
@@ -371,10 +436,14 @@ def make_slot_serve_program(
 
 
 def install_prefill(cfg: ModelConfig, full: dict, filled: dict,
-                    plen: int) -> dict:
-    """Copy a prefill cache (length ``plen``) into a max_len-capacity
-    cache: pads every length-mismatched axis (slot_pos pads with -1 so
-    padded slots read as empty) and sets pos = plen."""
+                    plen) -> dict:
+    """Copy a prefill cache into a max_len-capacity cache: pads every
+    length-mismatched axis (slot_pos pads with -1 so padded slots read as
+    empty) and sets pos = plen (scalar, may be traced: under bucketed
+    prefill ``filled`` has bucket length while plen is the true prompt
+    length — the in-bucket tail was already scrubbed by the forward's
+    ``prompt_len`` mask).  Whole-prompt prefill is the degenerate
+    one-chunk case of the chunked path (prefill_chunk=0)."""
     def seg(dst, src):
         def leaf(d, s):
             if d.shape == s.shape:
@@ -399,32 +468,58 @@ def install_prefill(cfg: ModelConfig, full: dict, filled: dict,
 
 def prefill_slot_state(
     cfg: ModelConfig, scfg: ServeConfig, params, prompt: jax.Array,
-    *, ctx: ShardCtx = LOCAL,
+    *, ctx: ShardCtx = LOCAL, prompt_len=None, pending=None, n_pending=None,
 ) -> tuple[dict, jax.Array]:
-    """Run the real prefill for ONE prompt and package it as a width-1
-    decoder slot state, ready to scatter into a free slot of the resident
-    batch (``serving.slots.join_slot``).
+    """Run the real prefill for ONE prompt (head chunk) and package it as
+    a width-1 decoder slot state, ready to scatter into a free slot of
+    the resident batch (``serving.slots.join_slot``).
 
-    prompt: (P,) int32 (or (P, K) for multi-codebook archs).
+    prompt: (P,) int32 (or (P, K) for multi-codebook archs).  P may be a
+    compile BUCKET: ``prompt_len`` (scalar, traceable) is then the true
+    head length — the forward masks padded cache positions and the first
+    token is read at ``prompt_len - 1``, so one jit compile per bucket
+    serves every length that rounds up to it.
+
+    ``pending``/``n_pending`` (chunked prefill): the uncovered prompt
+    tail, (max_len[, K]) int32 zero-padded + its true length; stored in
+    the slot's pending segment for the resident transition to walk.
     Returns ``(slot_state, first_token)`` — first_token is the greedy
-    continuation of the prompt (the request's first emitted token) and is
-    also installed as the slot's ``tokens`` so the next decode tick
-    consumes it."""
+    continuation of the HEAD and is only meaningful (= the request's
+    first emitted token) when nothing is pending; with a pending tail the
+    real first token is emitted by the tick that consumes the last
+    pending prompt token."""
     tokens = prompt[None]                        # (1, P[, K])
-    plen = tokens.shape[1]
+    plen = tokens.shape[1] if prompt_len is None else prompt_len
     vision = None
     if cfg.n_vision_tokens:
-        vision = jnp.zeros((1, min(cfg.n_vision_tokens, plen), cfg.d_model),
-                           cfg.compute_dtype)
-    logits, cache, _ = T.forward(cfg, params, tokens, ctx=ctx,
-                                 fill_cache=True, vision_embeds=vision)
+        vision = jnp.zeros(
+            (1, min(cfg.n_vision_tokens, tokens.shape[1]), cfg.d_model),
+            cfg.compute_dtype)
+    logits, cache, _ = T.forward(
+        cfg, params, tokens, ctx=ctx, fill_cache=True,
+        vision_embeds=vision,
+        prompt_len=None if prompt_len is None else plen)
     full = T.init_cache(cfg, 1, scfg.max_len)
-    first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    last = jax.lax.dynamic_slice_in_dim(
+        logits, jnp.asarray(plen, jnp.int32) - 1, 1, axis=1)
+    first = jnp.argmax(last, axis=-1).astype(jnp.int32)
     if cfg.n_codebooks > 1:
         first = first.reshape(1, 1, cfg.n_codebooks)
+    pshape = (1, scfg.max_len)
+    if cfg.n_codebooks > 1:
+        pshape = pshape + (cfg.n_codebooks,)
+    if pending is None:
+        pending = jnp.zeros(pshape, jnp.int32)
+        n_pending = jnp.zeros((1,), jnp.int32)
+    else:
+        pending = jnp.asarray(pending, jnp.int32).reshape(pshape)
+        n_pending = jnp.asarray(n_pending, jnp.int32).reshape((1,))
     return {
         "cache": install_prefill(cfg, full, cache, plen),
         "tokens": first,
         "active": jnp.ones((1,), jnp.bool_),
         "n_decoded": jnp.zeros((1,), jnp.int32),
+        "pending": pending,
+        "p_head": jnp.zeros((1,), jnp.int32),
+        "p_len": n_pending,
     }, first

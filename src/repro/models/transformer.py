@@ -186,10 +186,15 @@ def _shared_attn_apply(shared: Params, xin: jax.Array, cfg: ModelConfig,
 
 
 def _attention(p, x, cfg: ModelConfig, ctx: ShardCtx, positions, cache,
-               fill_cache, active=None):
+               fill_cache, active=None, prompt_len=None):
     """Returns (out, cache_out).  cache_out is the updated cache (decode),
     the filled cache (fill_cache), or None.  ``active`` is the serving
-    batcher's per-slot mask, threaded into the decode cache update."""
+    batcher's per-slot mask, threaded into the decode cache update.
+    ``prompt_len`` (scalar, may be traced) masks the *fill* path for
+    bucket-padded prefill: cache entries at positions >= prompt_len are
+    scrubbed (slot_pos=-1, zero K/V) so the filled cache is
+    indistinguishable from an exact-length prefill — causality already
+    keeps trailing padding out of every real position's logits."""
     fn = L.mla_attention if cfg.attn_type == "mla" else L.gqa_attention
     if cache is not None:
         return fn(p, x, cfg, positions=positions, cache=cache, ctx=ctx,
@@ -207,11 +212,14 @@ def _attention(p, x, cfg: ModelConfig, ctx: ShardCtx, positions, cache,
         ckv = L.rmsnorm(ckv, p["kv_norm"], cfg.rms_eps)
         cos, sin = L.rope_cos_sin(positions, m.qk_rope_dim, cfg.rope_theta)
         k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
-        filled = {
-            "ckv": ckv, "krope": k_rope,
-            "slot_pos": jnp.broadcast_to(
-                positions.astype(jnp.int32), (B, S)),
-        }
+        sp = jnp.broadcast_to(positions.astype(jnp.int32), (B, S))
+        if prompt_len is not None:
+            keep = (sp >= 0) & (sp < prompt_len)
+            ckv = jnp.where(keep[..., None], ckv, jnp.zeros_like(ckv))
+            k_rope = jnp.where(keep[..., None], k_rope,
+                               jnp.zeros_like(k_rope))
+            sp = jnp.where(keep, sp, -1)
+        filled = {"ckv": ckv, "krope": k_rope, "slot_pos": sp}
         return out, filled
     dh = cfg.head_dim
     k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, dh)
@@ -238,13 +246,18 @@ def _attention(p, x, cfg: ModelConfig, ctx: ShardCtx, positions, cache,
     else:
         kc, vc = k, v
         sp = jnp.broadcast_to(pos2d, (B, S)).astype(jnp.int32)
+    if prompt_len is not None:
+        keep = (sp >= 0) & (sp < prompt_len)
+        kc = jnp.where(keep[:, None, :, None], kc, jnp.zeros_like(kc))
+        vc = jnp.where(keep[:, None, :, None], vc, jnp.zeros_like(vc))
+        sp = jnp.where(keep, sp, -1)
     return out, {"k": kc, "v": vc, "slot_pos": sp}
 
 
 def _layer_apply(p: Params, h: jax.Array, cfg: ModelConfig, kind: str,
                  ctx: ShardCtx, positions, cache, fill_cache,
                  shared: Optional[Params], e0: Optional[jax.Array],
-                 active=None):
+                 active=None, prompt_len=None):
     """One scan step.  Returns (h, cache_out, aux)."""
     aux = jnp.float32(0)
     if kind == "mamba":
@@ -281,7 +294,8 @@ def _layer_apply(p: Params, h: jax.Array, cfg: ModelConfig, kind: str,
         return h, cout, aux
     # attn_mlp / attn_moe
     a, cout = _attention(p["attn"], L.rmsnorm(h, p["ln1"], cfg.rms_eps),
-                         cfg, ctx, positions, cache, fill_cache, active)
+                         cfg, ctx, positions, cache, fill_cache, active,
+                         prompt_len)
     # pin the TP boundary on the bf16 block output: without the constraint
     # the partitioner is free to place the model-axis all-reduce after the
     # f32 upcast of the next rmsnorm, doubling its wire bytes (§Perf)
@@ -310,9 +324,28 @@ def forward(
     positions: Optional[jax.Array] = None,
     vision_embeds: Optional[jax.Array] = None,
     fill_cache: bool = False,
+    prompt_len=None,
 ):
-    """Returns (logits, filled_cache|None, aux)."""
+    """Returns (logits, filled_cache|None, aux).
+
+    ``prompt_len`` (scalar, traceable; serving's bucketed prefill): the
+    true prompt length when ``tokens`` is right-padded to a compile
+    bucket.  The filled attention caches are scrubbed past it and logits
+    at real positions are untouched (causal masking).  Attention-only
+    paths: recurrent (mamba) segments fold padding into their final
+    state, so bucket padding cannot be masked after the fact — callers
+    gate on the segment plan."""
     B, S = tokens.shape[:2]
+    if prompt_len is not None and (
+            cfg.window or cfg.n_vision_tokens or any(
+                seg.kind in ("mamba", "zamba_unit")
+                for seg in segment_plan(cfg))):
+        raise ValueError(
+            "prompt_len (bucket-padded prefill) requires full-attention "
+            "text models: recurrent mamba state folds padding in, a "
+            "sliding-window fill keeps trailing PADDED positions (evicting "
+            "real prompt KV), and the vision splice depends on the "
+            "physical prompt length")
     if positions is None:
         positions = jnp.arange(S)[None, :]
         if cfg.mrope_sections:
@@ -335,7 +368,7 @@ def forward(
             lp = xs
             h, cout, a = _layer_apply(
                 lp, h, cfg, seg.kind, ctx, positions, None, fill_cache,
-                shared, e0,
+                shared, e0, None, prompt_len,
             )
             return (h, aux + a), cout
 

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import executor as _ex
-from repro.core.redundancy import FaultLedger
+from repro.core.redundancy import FaultLedger, bit_mismatch_elems
 
 from .request import (
     CANCELLED,
@@ -73,24 +73,34 @@ class SlotAdapter:
     n_slots     -- its batch width.
     slot_axes   -- per-leaf slot-axis pytree of the cell state
                    (``slots.infer_slot_axes``).
-    prefill     -- ``(request, states) -> (slot_state, first_token)``:
-                   run the prompt, return a width-1 decoder slot state
-                   ready to join, plus the first emitted token.
+    prefill     -- ``(request, states) -> (slot_state, first_token)`` or
+                   ``-> (slot_state, first_token | None, n_pending)``:
+                   run the prompt (or its first chunk), return a width-1
+                   decoder slot state ready to join, plus the first
+                   emitted token.  The 3-tuple form supports chunked
+                   prefill: ``n_pending`` > 0 means the slot still holds
+                   that many prompt-tail tokens which the resident
+                   transition consumes one per tick — no token is
+                   emitted (first_token is None) until the walk drains.
     read_tokens -- ``(cell_state) -> (B, ...)`` device array of each
                    slot's last emitted token.
     make_empty  -- ``() -> slot_state``: a width-1 *inactive* slot state
                    (scrubbed cache); scattered over evicted slots.
     validate    -- optional ``(request) -> str | None`` admission check
                    (e.g. prompt longer than the cache); a string rejects.
+    stats       -- optional ``() -> dict`` of adapter-side counters
+                   merged into ``engine.metrics()`` (the LM adapter
+                   reports ``prefill_compiles`` / ``prefill_buckets``).
     """
 
     cell: str
     n_slots: int
     slot_axes: Pytree
-    prefill: Callable[[Request, dict], tuple[Pytree, jax.Array]]
+    prefill: Callable[[Request, dict], tuple]
     read_tokens: Callable[[Pytree], jax.Array]
     make_empty: Callable[[], Pytree]
     validate: Optional[Callable[[Request], Optional[str]]] = None
+    stats: Optional[Callable[[], dict]] = None
 
 
 @dataclasses.dataclass
@@ -108,6 +118,10 @@ class RequestRecord:
     finished_at: Optional[float] = None
     faults: int = 0
     cancel_requested: bool = False
+    #: chunked prefill: prompt-tail tokens the resident transition still
+    #: has to consume before this request emits its first token (advances
+    #: in lock-step with the device-side ``p_head`` cursor)
+    prefill_remaining: int = 0
 
     @property
     def id(self) -> str:
@@ -168,6 +182,8 @@ class ServingEngine:
         self._ticks = 0
         self._tokens_out = 0
         self._submitted = 0
+        self._rejected_invalid = 0
+        self._defrag_moves = 0
         self._t0: Optional[float] = None
 
         cell, axes = adapter.cell, adapter.slot_axes
@@ -184,6 +200,16 @@ class ServingEngine:
                     st[cell], read_slot(other[cell], slot, axes), slot,
                     axes)})
         self._jit_fps = jax.jit(lambda dec: slot_fingerprints(dec, axes))
+        # real damage accounting: mismatched ELEMENTS between two replica
+        # slots (same semantics as temporal lockstep's bitwise compare),
+        # not fingerprint words
+        self._jit_damage = jax.jit(
+            lambda st, a, b: bit_mismatch_elems(
+                read_slot(st[cell], a, axes), read_slot(st[cell], b, axes)))
+        self._jit_damage_vs = jax.jit(
+            lambda st, other, slot: bit_mismatch_elems(
+                read_slot(st[cell], slot, axes),
+                read_slot(other[cell], slot, axes)))
         self._empty = adapter.make_empty()
 
     # -- lifecycle ---------------------------------------------------------
@@ -194,7 +220,10 @@ class ServingEngine:
 
     def submit(self, req: Request) -> bool:
         """Admission control + enqueue.  False = rejected (queue full,
-        too many replica slots, or adapter validation)."""
+        too many replica slots, or adapter validation).  Validation
+        failures count as ``rejected_invalid`` — the queue never saw the
+        request, so charging ``queue.rejected`` would conflate bad input
+        with back-pressure in ``metrics()``."""
         reason = None
         if req.n_slots > self.adapter.n_slots:
             reason = (f"policy needs {req.n_slots} slots, engine has "
@@ -206,7 +235,7 @@ class ServingEngine:
         self.requests[req.id] = rec
         self._submitted += 1
         if reason is not None:
-            self.queue.rejected += 1
+            self._rejected_invalid += 1
             self._finish_record(rec, REJECTED)
             return False
         ok = self.queue.submit(req)
@@ -303,22 +332,48 @@ class ServingEngine:
             req = self.queue.peek()
             if req is None or self.slots.free < req.n_slots:
                 break   # FIFO: no overtaking of a head that doesn't fit
-            req = self.queue.pop()
+            if req.n_slots > 1 and self.slots.find_run(req.n_slots) is None:
+                # capacity exists but no adjacent run: defragment instead
+                # of rejecting/stalling the replicated admission
+                states = self._defrag(states, req.n_slots)
+            if not self.queue.take(req):
+                continue   # head expired underneath us: re-validate
             rec = self.requests[req.id]
-            slot_state, first = self.adapter.prefill(req, states)
-            slots = self.slots.alloc(req.id, req.n_slots)
+            out = self.adapter.prefill(req, states)
+            slot_state, first = out[0], out[1]
+            pending = out[2] if len(out) > 2 else 0
+            slots = self.slots.alloc(req.id, req.n_slots,
+                                     contiguous=req.n_slots > 1)
             for s in slots:
                 states = self._jit_join(states, slot_state, jnp.int32(s))
             now = self.time_fn()
             rec.slots = slots
             rec.status = RUNNING
             rec.started_at = now
-            # the prefill's greedy continuation IS the first emitted token
-            self._emit(rec, np.asarray(jax.device_get(first)).reshape(-1),
-                       now)
+            rec.prefill_remaining = int(pending)
+            if pending == 0:
+                # the prefill's greedy continuation IS the first emitted
+                # token; with a pending tail the first token arrives when
+                # the in-slot walk drains (_postprocess)
+                self._emit(rec,
+                           np.asarray(jax.device_get(first)).reshape(-1),
+                           now)
             status = self._should_finish(rec, now)
             if status is not None:   # e.g. max_new_tokens == 1
                 states = self._evict(states, rec, status)
+        return states
+
+    def _defrag(self, states: dict, n: int) -> dict:
+        """Relocate running requests' slots (bitwise copy + scrub) until
+        an ``n``-slot adjacent free run exists."""
+        for src, dst in self.slots.defrag_plan(n):
+            states = self._jit_copy(states, jnp.int32(src), jnp.int32(dst))
+            states = self._jit_join(states, self._empty, jnp.int32(src))
+            rid = self.slots.relocate(src, dst)    # manager's bookkeeping
+            rec = self.requests.get(rid)
+            if rec is not None:                    # engine's record copy
+                rec.slots[rec.slots.index(src)] = dst
+            self._defrag_moves += 1
         return states
 
     # -- per-tick postprocessing: repair -> harvest -> evict ---------------
@@ -335,6 +390,18 @@ class ServingEngine:
             for rec in running:
                 if rec.status != RUNNING:
                     continue   # evicted during repair (should not happen)
+                if rec.prefill_remaining > 0:
+                    # this tick consumed one pending prompt token
+                    rec.prefill_remaining -= 1
+                    if rec.prefill_remaining > 0:
+                        # still walking: nothing to emit, but a deadline
+                        # can expire mid-walk
+                        status = self._should_finish(rec, now)
+                        if status is not None:
+                            states = self._evict(states, rec, status)
+                        continue
+                    # the tick consuming the LAST prompt token produced
+                    # the first real continuation token -> harvest it
                 self._emit(rec, toks[rec.slots[0]].reshape(-1), now)
                 status = self._should_finish(rec, now)
                 if status is not None:
@@ -364,9 +431,13 @@ class ServingEngine:
                 if agree:
                     i, j = agree[0]
                     bad = ({0, 1, 2} - {i, j}).pop()
+                    # real damage: elements of the struck replica slot
+                    # differing from a majority slot (pre-repair)
+                    dmg = float(jax.device_get(self._jit_damage(
+                        states, jnp.int32(s[i]), jnp.int32(s[bad]))))
                     states = self._jit_copy(states, jnp.int32(s[i]),
                                             jnp.int32(s[bad]))
-                    self._attribute(rec, t, [bad], fps, s)
+                    self._attribute(rec, t, [bad], level, dmg)
                     continue
                 bad = [0, 1, 2]   # triple divergence: fall through to replay
             else:
@@ -382,27 +453,33 @@ class ServingEngine:
             if bad is None:
                 bad = [i for i, sl in enumerate(s)
                        if not np.array_equal(fps[sl], rfps[sl])]
+            dmg = sum(
+                float(jax.device_get(self._jit_damage_vs(
+                    states, replay, jnp.int32(s[b]))))
+                for b in bad)
             for sl in s:
                 states = self._jit_adopt(states, replay, jnp.int32(sl))
-            self._attribute(rec, t, bad, fps, s)
+            self._attribute(rec, t, bad, level, dmg)
         return states
 
     def _attribute(self, rec: RequestRecord, t: int, bad: list[int],
-                   fps: np.ndarray, slots: list[int]) -> None:
+                   level: int, damage: float) -> None:
         """One detected strike, charged to the owning request in the
         engine ledger (per-request fault accounting; repeated offenders
-        surface in ``permanent_fault_suspects`` keyed by request)."""
+        surface in ``permanent_fault_suspects`` keyed by request).
+
+        ``damage`` is the REAL corruption size — state elements of the
+        struck replica slot(s) differing from the repaired value, the
+        same unit temporal lockstep's bitwise compare reports — not the
+        (<=4) differing 128-bit fingerprint words.  ``per_replica`` is
+        sized to the request's actual level (DMR -> 2 entries)."""
         rec.faults += 1
-        words = 0
-        for i in range(1, len(slots)):
-            words = max(words,
-                        int(np.sum(fps[slots[0]] != fps[slots[i]])))
-        per = [0.0] * 3
+        per = [0.0] * level
         for b in bad:
             per[b] = 1.0
         self.ledger.update(t, {rec.id: {
             "events": 1.0,
-            "mismatch_elems": float(max(words, 1)),
+            "mismatch_elems": max(damage, 1.0),
             "per_replica": per,
         }})
 
@@ -418,13 +495,17 @@ class ServingEngine:
                        now: float) -> Optional[str]:
         if rec.cancel_requested:
             return CANCELLED
-        if rec.req.deadline is not None and now >= rec.req.deadline:
-            return EXPIRED
+        # DONE checks come BEFORE the deadline: a request whose final
+        # budgeted (or stop) token was just emitted has delivered its
+        # full output and must not be reported EXPIRED merely because
+        # the deadline passed within the same tick
         if len(rec.tokens) >= rec.req.max_new_tokens:
             return DONE
         if (rec.req.stop_token is not None and rec.tokens
                 and int(rec.tokens[-1].reshape(-1)[0]) == rec.req.stop_token):
             return DONE
+        if rec.req.deadline is not None and now >= rec.req.deadline:
+            return EXPIRED
         return None
 
     def _evict(self, states: dict, rec: RequestRecord, status: str) -> dict:
@@ -483,7 +564,13 @@ class ServingEngine:
             "done": self._terminal_counts[DONE],
             "cancelled": self._terminal_counts[CANCELLED],
             "expired": self._terminal_counts[EXPIRED],
-            "rejected": self.queue.rejected,
+            # back-pressure and bad input are different signals: a full
+            # queue calls for shedding load, a validation failure for
+            # fixing the client
+            "rejected_queue_full": self.queue.rejected,
+            "rejected_invalid": self._rejected_invalid,
+            "rejected": self.queue.rejected + self._rejected_invalid,
+            "defrag_moves": self._defrag_moves,
             "tokens_out": self._tokens_out,
             "wall_s": wall,
             "tokens_per_s": self._tokens_out / wall if wall > 0 else 0.0,
@@ -494,4 +581,6 @@ class ServingEngine:
         if ttfts:
             m["ttft_p50_s"] = float(np.percentile(ttfts, 50))
             m["ttft_p99_s"] = float(np.percentile(ttfts, 99))
+        if self.adapter.stats is not None:
+            m.update(self.adapter.stats())
         return m

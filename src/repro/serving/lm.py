@@ -5,8 +5,25 @@ of ``models/lm_cells.py`` packaged as a ``SlotAdapter``.
     prog, adapter = lm_engine_parts(cfg, ServeConfig(batch=8, max_len=128))
     engine = miso.serve(prog, adapter)
 
-Prefill is jitted per prompt length (each distinct length compiles once;
-production would bucket lengths — noted in ROADMAP).
+Prefill is BUCKETED: prompts are right-padded to a small geometric
+compile ladder (``ServeConfig.prefill_bucket_min`` doubling up to
+``max_len``), so ``jit_prefill`` compiles once per bucket instead of once
+per distinct prompt length — no recompile storm under real traffic.  The
+padded positions are masked out of the filled cache by the forward's
+``prompt_len`` argument, so a bucketed prefill is indistinguishable from
+an exact-length one.  Recurrent archs (mamba/zamba) and the vision stub
+fall back to exact-length compiles (padding folds into their state).
+
+Prefill is optionally CHUNKED (``ServeConfig.prefill_chunk``): the
+out-of-band forward covers at most ``prefill_chunk`` prompt tokens; the
+tail rides into the slot's ``pending`` segment and is walked one token
+per tick INSIDE the resident slot-masked transition, so admitting a long
+prompt stalls the running batch for one bounded chunk forward instead of
+the whole prompt.  ``prefill_chunk=0`` is the degenerate one-chunk case
+(whole prompt out-of-band).
+
+The engine surfaces ``prefill_compiles`` / ``prefill_buckets`` in
+``metrics()`` via the adapter's ``stats`` hook.
 """
 from __future__ import annotations
 
@@ -14,12 +31,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.distributed.sharding import LOCAL, ShardCtx
 from repro.models.config import ModelConfig
 from repro.models.lm_cells import (
     ServeConfig,
     make_slot_serve_program,
+    prefill_bucket_ladder,
     prefill_slot_state,
     slot_decoder_init,
 )
@@ -36,22 +55,84 @@ def lm_engine_parts(
     serve program plus the glue the engine needs to run it."""
     prog = make_slot_serve_program(cfg, scfg, ctx)
     axes = infer_slot_axes(lambda b: slot_decoder_init(cfg, b, scfg.max_len))
-    # jit keys its compilation cache on input shapes, so one jitted
-    # function compiles once per distinct prompt LENGTH and reuses it
-    # (production would bucket lengths to bound compiles — see ROADMAP)
-    jit_prefill = jax.jit(lambda params, p: prefill_slot_state(
-        cfg, scfg, params, p, ctx=ctx))
+
+    # bucket padding is maskable only for full-attention caches:
+    # recurrent (mamba) segments fold padding into their state; the
+    # vision-stub splice depends on the physical prompt length; and a
+    # sliding-window fill keeps the trailing W positions of the PADDED
+    # sequence, evicting real prompt KV the prompt_len scrub cannot
+    # restore — all fall back to exact-length prefill compiles
+    bucketable = (cfg.mixer_type != "mamba2" and not cfg.n_vision_tokens
+                  and not cfg.window)
+    chunkable = not cfg.n_vision_tokens
+    ladder = prefill_bucket_ladder(scfg) if bucketable else ()
+    chunk = scfg.prefill_chunk if chunkable else 0
+    if chunk > 0 and ladder:
+        # honor the documented stall bound: a chunk-sized head must run
+        # a chunk-sized forward, not round up to the ladder floor
+        ladder = tuple(sorted(set(ladder) | {min(chunk, scfg.max_len)}))
+
+    # jit keys its compilation cache on input shapes: the prompt head is
+    # padded to a ladder bucket (pending tail is always max_len-shaped),
+    # so one compile covers every prompt length that rounds up to it.
+    # On the exact-length fallback the head is never padded, so
+    # prompt_len masking is unnecessary (and recurrent archs reject it)
+    jit_prefill = jax.jit(
+        lambda params, head, plen, pend, npend: prefill_slot_state(
+            cfg, scfg, params, head, ctx=ctx,
+            prompt_len=plen if bucketable else None,
+            pending=pend, n_pending=npend))
+    buckets_used: set = set()
+
+    tail_dims = (cfg.n_codebooks,) if cfg.n_codebooks > 1 else ()
 
     def prefill(req: Request, states: dict):
-        prompt = jnp.asarray(req.prompt, jnp.int32)
-        return jit_prefill(states["weights"]["params"], prompt)
+        prompt = np.asarray(req.prompt, np.int32).reshape(
+            (-1,) + tail_dims)
+        plen = int(prompt.shape[0])
+        if chunk <= 0 or plen <= chunk:
+            c0 = plen
+        else:
+            # grow the head past the chunk if needed so the tail always
+            # fits the max_len pending segment (windowed archs serve
+            # prompts longer than the cache; their whole-prompt path
+            # admits them, chunking must too)
+            c0 = max(chunk, plen - scfg.max_len)
+        bucket = min((b for b in ladder if b >= c0), default=c0)
+        # the bucket-sized forward is paid for regardless: cover as much
+        # prompt as fits in it, shrinking the one-token-per-tick tail
+        c0 = min(plen, bucket)
+        head = np.zeros((bucket,) + tail_dims, np.int32)
+        head[:c0] = prompt[:c0]
+        pend = np.zeros((scfg.max_len,) + tail_dims, np.int32)
+        n_pending = plen - c0
+        pend[:n_pending] = prompt[c0:]
+        slot_state, first = jit_prefill(
+            states["weights"]["params"], head, jnp.int32(c0), pend,
+            jnp.int32(n_pending))
+        buckets_used.add(bucket)
+        if n_pending:
+            # the head continuation is a truncated-prompt token: the real
+            # first token is emitted by the tick that consumes the last
+            # pending prompt token
+            return slot_state, None, n_pending
+        return slot_state, first, 0
 
     def validate(req: Request) -> Optional[str]:
-        plen = int(jnp.asarray(req.prompt).shape[0])
+        plen = int(np.asarray(req.prompt).shape[0])
         if plen + req.max_new_tokens > scfg.max_len and not cfg.window:
             return (f"prompt {plen} + budget {req.max_new_tokens} exceeds "
                     f"cache capacity {scfg.max_len}")
+        # no pending-capacity check: prefill() grows the head chunk so
+        # the uncovered tail never exceeds the max_len pending segment
         return None
+
+    def stats() -> dict:
+        return {
+            "prefill_compiles": len(buckets_used),
+            "prefill_buckets": list(ladder) if ladder else None,
+            "prefill_chunk": chunk,
+        }
 
     adapter = SlotAdapter(
         cell="decoder",
@@ -61,5 +142,6 @@ def lm_engine_parts(
         read_tokens=lambda dec: dec["tokens"],
         make_empty=lambda: slot_decoder_init(cfg, 1, scfg.max_len),
         validate=validate,
+        stats=stats,
     )
     return prog, adapter

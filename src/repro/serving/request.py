@@ -78,48 +78,92 @@ class RequestQueue:
         self.status: dict[str, str] = {}
         self.rejected = 0
         self.expired = 0
+        self._deadlines = 0   # deadline-bearing entries currently queued
 
     @property
     def depth(self) -> int:
         return len(self._q)
 
     def submit(self, req: Request) -> bool:
-        """Admit or reject (bounded queue = explicit back-pressure)."""
+        """Admit or reject (bounded queue = explicit back-pressure).
+
+        The expiry sweep runs FIRST: dead entries anywhere in the deque
+        must not hold ``depth`` against a fresh submission (a queue full
+        of deadline-passed requests would otherwise reject live traffic
+        — false back-pressure)."""
+        self._expire()
         if len(self._q) >= self.max_depth:
             self.status[req.id] = REJECTED
             self.rejected += 1
             return False
         self.status[req.id] = QUEUED
         self._q.append(req)
+        if req.deadline is not None:
+            self._deadlines += 1
         return True
 
     def cancel(self, rid: str) -> bool:
         """Cancel a *queued* request (running ones are the engine's to
-        evict).  True if it was found waiting."""
-        for req in self._q:
+        evict).  True if it was found waiting.  Removal is by index —
+        never by value: ``deque.remove`` would run the dataclass __eq__
+        against every earlier entry, and ndarray prompts make that raise
+        (ambiguous array truth value)."""
+        for i, req in enumerate(self._q):
             if req.id == rid:
-                self._q.remove(req)
+                del self._q[i]
+                if req.deadline is not None:
+                    self._deadlines -= 1
                 self.status[rid] = CANCELLED
                 return True
         return False
 
-    def _expire_head(self) -> None:
+    def _expire(self) -> None:
+        """Drop every deadline-passed request, wherever it sits in the
+        deque.  (Head-only expiry left mid-queue corpses counted in
+        ``depth``, causing false back-pressure rejections.)  O(1) when no
+        queued request carries a deadline (the common case; peek runs
+        every engine tick), one-pass partition rebuild otherwise — no
+        value-based removal that would trip dataclass __eq__ on ndarray
+        prompts."""
+        if self._deadlines == 0:
+            return
         now = self.time_fn()
-        while (self._q and self._q[0].deadline is not None
-                and self._q[0].deadline <= now):
-            dead = self._q.popleft()
-            self.status[dead.id] = EXPIRED
-            self.expired += 1
+        live: collections.deque[Request] = collections.deque()
+        for r in self._q:
+            if r.deadline is not None and r.deadline <= now:
+                self.status[r.id] = EXPIRED
+                self.expired += 1
+                self._deadlines -= 1
+            else:
+                live.append(r)
+        self._q = live
 
     def peek(self) -> Optional[Request]:
-        """Next admissible request (deadline-expired heads are dropped)."""
-        self._expire_head()
+        """Next admissible request (deadline-expired entries are dropped)."""
+        self._expire()
         return self._q[0] if self._q else None
 
     def pop(self) -> Optional[Request]:
-        self._expire_head()
+        self._expire()
         if not self._q:
             return None
         req = self._q.popleft()
+        if req.deadline is not None:
+            self._deadlines -= 1
         self.status[req.id] = RUNNING
         return req
+
+    def take(self, req: Request) -> bool:
+        """Pop a specific request the caller just ``peek``-validated —
+        NO expiry re-sweep, so the head cannot change between the
+        admission check and the pop (pop() re-runs expiry against a
+        fresh clock reading: under deadline traffic it can return None
+        or a request whose slot fit was never checked).  False if ``req``
+        is no longer the head."""
+        if self._q and self._q[0] is req:
+            self._q.popleft()
+            if req.deadline is not None:
+                self._deadlines -= 1
+            self.status[req.id] = RUNNING
+            return True
+        return False

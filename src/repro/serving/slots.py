@@ -120,6 +120,17 @@ class SlotManager:
     same observation that makes cell replication "mechanically identical
     to data parallelism" (core/redundancy.py), applied per request, so
     unprotected requests pay nothing for their neighbors' protection.
+
+    Replica slots are allocated CONTIGUOUS (``alloc(..., contiguous=
+    True)``) so a replicated request occupies one aligned run of batch
+    rows — the layout the spatial-placement next notch (replica slots on
+    pods) needs.  Churn fragments the free list; rather than rejecting a
+    replicated admission that fits by count but not by adjacency,
+    ``defrag_plan``/``relocate`` let the engine compact: a running
+    request's slot is moved with the existing ``copy_slot`` + scrub
+    machinery (bitwise-transparent to its owner — the slot-position
+    invariance tested in tests/test_serving.py), so fragmentation never
+    blocks an admission the batch has capacity for.
     """
 
     n_slots: int
@@ -143,18 +154,83 @@ class SlotManager:
     def owner(self, slot: int) -> Optional[str]:
         return self._owner.get(slot)
 
-    def alloc(self, rid: str, n: int) -> Optional[list[int]]:
-        """n contiguous-in-ownership (not necessarily adjacent) free slots
-        for request ``rid``; None if the batch can't fit it right now."""
+    def alloc(self, rid: str, n: int,
+              contiguous: bool = False) -> Optional[list[int]]:
+        """n free slots for request ``rid``; None if the batch can't fit
+        it right now.  ``contiguous=True`` (replicated requests) requires
+        one adjacent run of n slots — run ``defrag_plan``/``relocate``
+        first if ``find_run`` comes up empty."""
         if rid in self._slots_of:
             raise ValueError(f"request {rid!r} already holds slots")
         if n > len(self._free):
             return None
-        got = [self._free.pop(0) for _ in range(n)]
+        if contiguous and n > 1:
+            start = self.find_run(n)
+            if start is None:
+                return None
+            got = list(range(start, start + n))
+            for s in got:
+                self._free.remove(s)
+        else:
+            got = [self._free.pop(0) for _ in range(n)]
         self._slots_of[rid] = got
         for s in got:
             self._owner[s] = rid
-        return got
+        return list(got)   # caller-owned copy: relocate() mutates ours
+
+    def find_run(self, n: int) -> Optional[int]:
+        """Start index of the leftmost run of ``n`` adjacent free slots."""
+        free = set(self._free)
+        for start in range(self.n_slots - n + 1):
+            if all(start + i in free for i in range(n)):
+                return start
+        return None
+
+    def defrag_plan(self, n: int) -> Optional[list[tuple[int, int]]]:
+        """Relocations ``[(src, dst), ...]`` that open an n-slot adjacent
+        free run: pick the window holding the fewest REPLICA slots, then
+        the fewest tenants overall (single-slot tenants are the preferred
+        eviction victims — moving a replicated tenant's slot would
+        scatter the adjacent run it was just given), and evacuate them
+        into free slots outside the window.  None if total free capacity
+        < n; [] if a run already exists.  Always satisfiable when ``free
+        >= n``: a window of n slots has at most ``n - free_inside``
+        tenants and there are exactly ``free_total - free_inside >=
+        n - free_inside`` free slots outside it.  (When every window
+        overlaps a replicated tenant, one is evacuated and loses
+        adjacency — correctness is unaffected, the run layout degrades.)
+        """
+        if n > len(self._free):
+            return None
+        free = set(self._free)
+
+        def cost(start):
+            occ = [s for s in range(start, start + n) if s not in free]
+            repl = sum(1 for s in occ
+                       if len(self._slots_of[self._owner[s]]) > 1)
+            return (repl, len(occ)), occ
+
+        best_cost, best_start, best_occ = (n + 1, n + 1), 0, list(range(n))
+        for start in range(self.n_slots - n + 1):
+            c, occ = cost(start)
+            if c < best_cost:
+                best_cost, best_start, best_occ = c, start, occ
+        dsts = [s for s in sorted(free)
+                if s < best_start or s >= best_start + n]
+        return list(zip(best_occ, dsts))
+
+    def relocate(self, src: int, dst: int) -> str:
+        """Move the tenant of slot ``src`` to free slot ``dst`` (ownership
+        only — the engine performs the matching state copy + scrub).
+        Returns the owning request id."""
+        rid = self._owner.pop(src)
+        self._free.remove(dst)
+        self._free.append(src)
+        self._free.sort()
+        self._owner[dst] = rid
+        sl = self._slots_of[rid]
+        sl[sl.index(src)] = dst
+        return rid
 
     def release(self, rid: str) -> list[int]:
         got = self._slots_of.pop(rid, [])

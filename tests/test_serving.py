@@ -135,6 +135,71 @@ def test_queue_deadline_expires_while_queued():
     assert q.status[a.id] == EXPIRED and q.expired == 1
 
 
+def test_queue_full_of_expired_entries_admits_fresh_request():
+    """Regression: expiry must sweep the WHOLE deque, not just the head —
+    mid-queue dead requests held `depth` and caused false back-pressure
+    rejections of fresh submissions."""
+    clock = [0.0]
+    q = RequestQueue(max_depth=3, time_fn=lambda: clock[0])
+    doomed = [Request(prompt=[float(i)], deadline=1.0) for i in range(3)]
+    for r in doomed:
+        assert q.submit(r)
+    clock[0] = 2.0                    # every queued deadline passes
+    fresh = Request(prompt=[9.0])
+    assert q.submit(fresh)            # was: rejected at full depth
+    assert q.depth == 1 and q.expired == 3 and q.rejected == 0
+    assert all(q.status[r.id] == EXPIRED for r in doomed)
+    assert q.peek() is fresh
+
+
+def test_queue_expiry_and_cancel_with_ndarray_prompts():
+    """Regression: sweep/cancel must never remove deque entries BY VALUE
+    — the Request dataclass __eq__ compares ndarray prompts elementwise
+    and bool(array) raises.  The LM path always uses ndarray prompts."""
+    clock = [0.0]
+    q = RequestQueue(time_fn=lambda: clock[0])
+    live = Request(prompt=np.arange(8, dtype=np.int32))
+    dead = Request(prompt=np.arange(8, dtype=np.int32) + 1, deadline=1.0)
+    assert q.submit(live) and q.submit(dead)
+    clock[0] = 2.0
+    assert q.peek() is live and q.depth == 1     # raised ValueError before
+    assert q.status[dead.id] == EXPIRED
+    other = Request(prompt=np.arange(8, dtype=np.int32))
+    assert q.submit(other)
+    assert q.cancel(other.id) and q.depth == 1   # same hazard in cancel()
+
+
+def test_defrag_plan_prefers_single_slot_victims():
+    """Defrag evacuates single-slot tenants before breaking a replicated
+    request's adjacent run."""
+    sm = SlotManager(5)
+    assert sm.alloc("x", 1) == [0]
+    assert sm.alloc("dmr", 2, contiguous=True) == [1, 2]
+    assert sm.alloc("y", 1) == [3]
+    sm.release("x")                              # free {0, 4}, fragmented
+    assert sm.find_run(2) is None
+    # windows [0,1]/[1,2]/[2,3] all touch the DMR run; [3,4] costs one
+    # single-slot move — that is the plan, not the leftmost window
+    assert sm.defrag_plan(2) == [(3, 0)]
+    assert sm.relocate(3, 0) == "y"
+    assert sm.alloc("dmr2", 2, contiguous=True) == [3, 4]
+    assert sm.slots_of("dmr") == [1, 2]          # run preserved
+
+
+def test_queue_mid_queue_corpse_swept_behind_live_head():
+    clock = [0.0]
+    q = RequestQueue(time_fn=lambda: clock[0])
+    head = Request(prompt=[1.0])
+    mid = Request(prompt=[2.0], deadline=1.0)
+    tail = Request(prompt=[3.0])
+    for r in (head, mid, tail):
+        assert q.submit(r)
+    clock[0] = 2.0                    # only the MIDDLE entry is dead
+    assert q.peek() is head and q.depth == 2
+    assert q.status[mid.id] == EXPIRED
+    assert q.pop() is head and q.pop() is tail
+
+
 def test_slot_manager_replica_alloc_release():
     sm = SlotManager(4)
     assert sm.alloc("tmr", 3) == [0, 1, 2]
@@ -301,6 +366,68 @@ def test_unprotected_request_fault_goes_undetected():
     assert eng.result(guarded.id)["faults"] == 0
 
 
+@pytest.mark.parametrize("level", [2, 3])
+def test_attribution_counts_real_damage_and_trims_per_replica(level):
+    """`mismatch_elems` in the request ledger is the REAL corruption size
+    (state elements differing from the repaired value — what temporal
+    lockstep's bitwise compare counts), not capped fingerprint words; and
+    `per_replica` is sized to the request's level (DMR -> 2 entries)."""
+    eng = toy_engine(4)
+    victim = Request(prompt=[1.0], max_new_tokens=8,
+                     policy=miso.RedundancyPolicy(level=level))
+    assert eng.submit(victim)
+    eng.pump(max_ticks=1)
+    eng.pump(faults=strike(eng, victim.id, 1, step=2))
+    t = eng.ledger.totals[victim.id]
+    assert t["events"] == 1.0
+    # the injected flip corrupted exactly ONE state element ("x"); the
+    # old fingerprint-word proxy reported ~4 regardless of real damage
+    assert t["elems"] == 1.0
+    assert eng.result(victim.id)["status"] == DONE
+
+
+def test_fault_ledger_accepts_level_sized_per_replica():
+    led = miso.FaultLedger()
+    led.update(0, {"r9": {"events": 1.0, "mismatch_elems": 2.0,
+                          "per_replica": [0.0, 1.0]}})   # DMR: 2 entries
+    assert led.totals["r9"]["per_replica"] == [0.0, 1.0, 0.0]
+    assert led.totals["r9"]["elems"] == 2.0
+
+
+def test_defrag_relocation_admits_replicated_and_preserves_tokens():
+    """A fragmented free list must not block a replicated admission the
+    batch has capacity for: the engine relocates a running request's slot
+    (copy_slot + scrub) to open an adjacent run — bitwise-transparent to
+    the relocated request."""
+    ref_a = run_solo([3.0, 1.0, 4.0], 12)
+    ref_e = run_solo([2.0, 2.0], 4, policy=miso.RedundancyPolicy(level=2))
+    eng = toy_engine(4)
+    a = Request(prompt=[3.0, 1.0, 4.0], max_new_tokens=12)
+    b = Request(prompt=[1.0], max_new_tokens=2)
+    c = Request(prompt=[5.0], max_new_tokens=12)
+    d = Request(prompt=[7.0], max_new_tokens=2)
+    for r in (a, b, c, d):
+        assert eng.submit(r)
+    eng.pump(max_ticks=1)         # b and d finish -> free slots {1, 3}
+    assert eng.result(b.id)["status"] == DONE
+    assert eng.result(d.id)["status"] == DONE
+    assert eng.requests[a.id].slots == [0]
+    assert eng.requests[c.id].slots == [2]
+    e = Request(prompt=[2.0, 2.0], max_new_tokens=4,
+                policy=miso.RedundancyPolicy(level=2))
+    assert eng.submit(e)
+    eng.pump()
+    res_e = eng.result(e.id)
+    assert res_e["status"] == DONE
+    assert res_e["slots"] == [0, 1]               # adjacent run opened
+    assert eng.requests[a.id].slots == [3]        # a was relocated
+    assert eng.metrics()["defrag_moves"] == 1
+    # relocation perturbed nobody's tokens
+    assert eng.result(a.id)["tokens"] == ref_a
+    assert eng.result(e.id)["tokens"] == ref_e
+    assert eng.metrics()["request_faults"] == {}
+
+
 def test_repeated_faults_flag_request_as_suspect():
     eng = toy_engine(4)
     victim = Request(prompt=[1.0], max_new_tokens=12,
@@ -362,6 +489,37 @@ def test_admission_rejects_oversized_policy_and_queue_overflow():
     assert eng.metrics()["rejected"] == 2
     eng.pump()
     assert eng.result(ok.id)["status"] == DONE
+
+
+def test_rejected_counters_split_bad_input_vs_backpressure():
+    """Adapter/policy validation failures never reached the queue: they
+    count as `rejected_invalid`, not back-pressure (`rejected_queue_full`
+    stays a pure shed-load signal)."""
+    eng = toy_engine(2, max_queue=1)
+    assert not eng.submit(Request(prompt=[1.0],
+                                  policy=miso.RedundancyPolicy(level=3)))
+    assert eng.submit(Request(prompt=[1.0], max_new_tokens=2))
+    assert not eng.submit(Request(prompt=[2.0]))   # genuine queue overflow
+    m = eng.metrics()
+    assert m["rejected_invalid"] == 1
+    assert m["rejected_queue_full"] == 1
+    assert m["rejected"] == 2                      # back-compat total
+
+
+def test_budget_met_exactly_at_deadline_reports_done():
+    """A request whose final budgeted token lands at (or past) its
+    deadline delivered its full output: DONE, not EXPIRED."""
+    clock = [0.0]
+    eng = toy_engine(2, time_fn=lambda: clock[0])
+    req = Request(prompt=[1.0], max_new_tokens=3, deadline=5.0)
+    assert eng.submit(req)
+    eng.pump(max_ticks=1)             # admission + tick 1 -> 2 tokens
+    assert eng.result(req.id)["status"] == RUNNING
+    clock[0] = 5.0                    # deadline passes before the tick...
+    eng.pump(max_ticks=1)             # ...that emits the final token
+    res = eng.result(req.id)
+    assert res["status"] == DONE      # was: EXPIRED with full output
+    assert res["n_tokens"] == 3
 
 
 def test_queue_waits_for_replica_slots_fifo():
@@ -449,6 +607,185 @@ def lm_engine(cfg, scfg):
     eng = ServingEngine(prog, adapter)
     eng.start(jax.random.PRNGKey(0))
     return eng
+
+
+@pytest.mark.parametrize("level", [1, 2, 3])
+def test_chunked_bucketed_prefill_bitwise_at_bucket_boundaries(level):
+    """Chunked + bucketed prefill emits bitwise-identical tokens to
+    whole-prompt exact-length prefill at every bucket boundary
+    (len in {bucket-1, bucket, bucket+1}) for none/DMR/TMR — and the
+    whole run costs ONE prefill compile (every head chunk pads to the
+    same bucket)."""
+    import dataclasses as dc
+
+    cfg, scfg = tiny_lm()
+    exact = dc.replace(scfg, prefill_bucket_min=0)    # whole-prompt ref
+    chunked = dc.replace(scfg, prefill_chunk=4, prefill_bucket_min=4)
+    pol = miso.RedundancyPolicy(level=level)
+    rng = np.random.default_rng(7)
+    bucket = 8
+    eng_ref = lm_engine(cfg, exact)
+    eng_ch = lm_engine(cfg, chunked)
+    for plen in (bucket - 1, bucket, bucket + 1):
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        toks = {}
+        for name, eng in (("ref", eng_ref), ("chunked", eng_ch)):
+            req = Request(prompt=prompt, max_new_tokens=4, policy=pol)
+            assert eng.submit(req)
+            eng.pump()
+            res = eng.result(req.id)
+            assert res["status"] == DONE and res["n_tokens"] == 4
+            toks[name] = res["tokens"]
+        assert toks["chunked"] == toks["ref"], (
+            f"chunked prefill diverged at prompt length {plen}")
+    m = eng_ch.metrics()
+    assert m["prefill_compiles"] == 1
+    assert m["prefill_chunk"] == 4
+    assert m["request_faults"] == {}
+
+
+def test_prefill_compiles_bounded_over_mixed_length_run():
+    """50 requests of mixed prompt lengths through the bucketed prefill:
+    total prefill compiles stay <= the bucket-ladder size (the recompile
+    storm — one jit entry per distinct length — is gone)."""
+    import dataclasses as dc
+
+    cfg, scfg = tiny_lm()
+    scfg = dc.replace(scfg, prefill_bucket_min=8)     # ladder 8/16/32
+    eng = lm_engine(cfg, scfg)
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(50):
+        plen = int(rng.integers(1, 29))
+        r = Request(prompt=rng.integers(0, cfg.vocab_size, size=plen)
+                    .astype(np.int32), max_new_tokens=2)
+        reqs.append(r)
+        assert eng.submit(r)
+        if i % 4 == 3:
+            eng.pump(max_ticks=1)     # interleave arrivals with decode
+    eng.pump()
+    assert all(eng.result(r.id)["status"] == DONE for r in reqs)
+    m = eng.metrics()
+    assert m["prefill_buckets"] == [8, 16, 32]
+    assert m["prefill_compiles"] <= len(m["prefill_buckets"])
+
+
+def test_chunked_walk_strike_is_detected_and_repaired():
+    """A DMR strike landing while a slot is still WALKING its pending
+    prompt tail is detected, charged to the owner, and repaired — the
+    final tokens stay bitwise-identical to the clean whole-prompt run."""
+    import dataclasses as dc
+
+    cfg, scfg = tiny_lm()
+    prompt = np.arange(10, dtype=np.int32) % cfg.vocab_size
+    pol = miso.RedundancyPolicy(level=2)
+
+    eng_ref = lm_engine(cfg, dc.replace(scfg, prefill_bucket_min=0))
+    ref_req = Request(prompt=prompt, max_new_tokens=4, policy=pol)
+    assert eng_ref.submit(ref_req)
+    eng_ref.pump()
+    ref = eng_ref.result(ref_req.id)["tokens"]
+
+    chunked = dc.replace(scfg, prefill_chunk=4, prefill_bucket_min=4)
+    eng = lm_engine(cfg, chunked)
+    req = Request(prompt=prompt, max_new_tokens=4, policy=pol)
+    assert eng.submit(req)
+    eng.pump(max_ticks=1)             # admitted; 6 pending tokens, walking
+    assert eng.result(req.id)["n_tokens"] == 0
+    from repro.models.lm_cells import slot_decoder_init
+    leaf_i = decoder_leaf_index(slot_decoder_init(cfg, 2, scfg.max_len),
+                                "tokens")
+    fault = miso.FaultSpec.at(
+        step=2, cell_id=eng.exe.program.cell_id("decoder"), leaf=leaf_i,
+        index=eng.requests[req.id].slots[1], bit=3)
+    eng.pump(faults=fault)            # strike lands mid-walk
+    res = eng.result(req.id)
+    assert res["status"] == DONE
+    assert res["faults"] == 1 and eng.ledger.totals[req.id]["events"] == 1.0
+    assert res["tokens"] == ref, "strike during the prompt walk leaked"
+
+
+def test_windowed_arch_exact_prefill_fallback_admits_long_prompts():
+    """Sliding-window archs cannot bucket (the windowed fill keeps the
+    trailing W positions of the PADDED sequence, evicting real prompt
+    KV): they fall back to exact-length prefill, and their carve-out for
+    prompts longer than the cache survives the pending-capacity check."""
+    import dataclasses as dc
+
+    cfg, scfg = tiny_lm()
+    cfg = dc.replace(cfg, window=8)
+    eng = lm_engine(cfg, scfg)
+    assert eng.metrics()["prefill_buckets"] is None   # no bucket padding
+    prompt = (np.arange(40, dtype=np.int32) % cfg.vocab_size).astype(
+        np.int32)
+    req = Request(prompt=prompt, max_new_tokens=3)    # 40 > max_len=32
+    assert eng.submit(req)
+    eng.pump()
+    assert eng.result(req.id)["status"] == DONE
+    assert eng.result(req.id)["n_tokens"] == 3
+    # chunked must not lose the long-prompt carve-out: the head chunk
+    # grows so the tail fits the pending segment
+    eng2 = lm_engine(cfg, dc.replace(scfg, prefill_chunk=4))
+    long_prompt = (np.arange(2 * scfg.max_len, dtype=np.int32)
+                   % cfg.vocab_size).astype(np.int32)
+    req2 = Request(prompt=long_prompt, max_new_tokens=3)
+    assert eng2.submit(req2)
+    eng2.pump()
+    assert eng2.result(req2.id)["status"] == DONE
+    assert eng2.result(req2.id)["n_tokens"] == 3
+
+
+def test_queue_take_pops_exactly_the_peeked_head():
+    """take() admits exactly the request the caller just validated: no
+    expiry re-sweep between the admission check and the pop (pop() reads
+    the clock again and can return None or an unvalidated request)."""
+    clock = [0.0]
+    q = RequestQueue(time_fn=lambda: clock[0])
+    a = Request(prompt=[1.0], deadline=5.0)
+    b = Request(prompt=[2.0])
+    assert q.submit(a) and q.submit(b)
+    head = q.peek()
+    clock[0] = 10.0              # a's deadline passes after validation
+    assert q.take(head)          # still admitted: caller's check stands
+    assert q.status[a.id] == RUNNING
+    assert not q.take(a)         # no longer the head
+    assert q.take(q.peek())
+    assert q.status[b.id] == RUNNING and q.depth == 0
+
+
+def test_chunk_joins_bucket_ladder_to_honor_stall_bound():
+    """prefill_chunk bounds the out-of-band forward: the chunk size joins
+    the compile ladder so a chunk-sized head never rounds up to the
+    ladder floor."""
+    import dataclasses as dc
+
+    cfg, scfg = tiny_lm()
+    eng = lm_engine(cfg, dc.replace(scfg, prefill_chunk=4,
+                                    prefill_bucket_min=16))
+    m = eng.metrics()
+    assert m["prefill_buckets"] == [4, 16, 32]
+    req = Request(prompt=np.arange(12, dtype=np.int32), max_new_tokens=2)
+    assert eng.submit(req)
+    eng.pump()
+    assert eng.result(req.id)["status"] == DONE
+    assert eng.metrics()["prefill_compiles"] == 1   # one 4-wide compile
+
+
+def test_explicit_bucket_ladder_clamped_and_completed():
+    from repro.models.lm_cells import ServeConfig, prefill_bucket_ladder
+
+    # oversized entries clamp to max_len; max_len itself always present
+    assert prefill_bucket_ladder(
+        ServeConfig(batch=2, max_len=64, prefill_buckets=(8, 100))
+    ) == (8, 64)
+    assert prefill_bucket_ladder(
+        ServeConfig(batch=2, max_len=64, prefill_buckets=(8,))
+    ) == (8, 64)
+    assert prefill_bucket_ladder(
+        ServeConfig(batch=2, max_len=64, prefill_bucket_min=0)) == ()
+    assert prefill_bucket_ladder(
+        ServeConfig(batch=2, max_len=32, prefill_bucket_min=8)
+    ) == (8, 16, 32)
 
 
 def test_lm_engine_isolation_and_dmr():
