@@ -725,6 +725,61 @@ def bench_serving() -> None:
         f"mixed-length requests (chunk={mixed['prefill_chunk']})")
     row("serving", "mixed_ttft_p50_s", mixed["ttft_p50_s"],
         f"p99={mixed['ttft_p99_s']}s")
+    # -- fixed cache-byte budget: paged vs dense residency ------------------
+    # same KV pool bytes both sides (dense: 4 slots x 32 tokens; paged: 16
+    # pages x 8 tokens shared by up to 16 slots).  Short requests reserve
+    # one page each, so the paged engine keeps 4x the resident requests in
+    # the same bytes — and must emit bitwise-identical tokens per request.
+    budget_reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, size=4)
+                .astype(np.int32), max_new_tokens=4)
+        for _ in range(16)
+    ]
+
+    def run_budget(scfg_b):
+        prog_b, adapter_b = lm_engine_parts(cfg, scfg_b)
+        eng_b = miso.serve(prog_b, adapter_b)
+        eng_b.start(jax.random.PRNGKey(0))
+        clones = [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens)
+                  for r in budget_reqs]
+        eng_b.submit(clones[0])
+        eng_b.pump()                    # warm: compile prefill + step
+        warm = eng_b.result(clones[0].id)["tokens"]
+        for r in clones[1:]:
+            eng_b.submit(r)
+        peak = 0
+        t0 = time.perf_counter()
+        while eng_b.has_work():
+            eng_b.pump(max_ticks=1)
+            peak = max(peak, eng_b.metrics()["active_requests"])
+        wall = time.perf_counter() - t0
+        toks = [warm] + [eng_b.result(r.id)["tokens"] for r in clones[1:]]
+        assert all(eng_b.result(r.id)["status"] == "done" for r in clones)
+        return peak, round(15 * 4 / wall, 2), toks
+
+    dense_peak, dense_tps, dense_toks = run_budget(
+        ServeConfig(batch=4, max_len=32))
+    paged_peak, paged_tps, paged_toks = run_budget(
+        ServeConfig(batch=16, max_len=32, paged=True, page_size=8,
+                    page_budget=16))
+    assert paged_toks == dense_toks, "paged/dense token divergence"
+    assert paged_peak >= 2 * dense_peak, (paged_peak, dense_peak)
+    budget = {
+        "case": "fixed_cache_byte_budget",
+        "budget_token_slots": 128,
+        "dense": {"batch": 4, "max_len": 32,
+                  "peak_resident": dense_peak, "tokens_per_s": dense_tps},
+        "paged": {"batch": 16, "max_len": 32, "page_size": 8,
+                  "page_budget": 16,
+                  "peak_resident": paged_peak, "tokens_per_s": paged_tps},
+        "token_parity": True,
+    }
+    row("serving", "budget_peak_resident",
+        f"{paged_peak}x paged vs {dense_peak}x dense",
+        "same cache bytes (128 token-slots), bitwise-equal tokens")
+    row("serving", "budget_tokens_per_s",
+        f"paged {paged_tps} / dense {dense_tps}")
+
     payload = {
         "bench": "serving",
         "jax": jax.__version__,
@@ -735,6 +790,7 @@ def bench_serving() -> None:
         "saturated_tokens_per_s": round(cap_tps, 2),
         "cases": cases,
         "mixed_length": mixed,
+        "fixed_budget": budget,
     }
     JSON_DIR.mkdir(parents=True, exist_ok=True)
     out = JSON_DIR / "BENCH_serving.json"

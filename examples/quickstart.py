@@ -225,10 +225,11 @@ print("\nThe same program scales to the 512-chip mesh unchanged — see "
 #      prefill_chunk=8        -- the out-of-band prefill forward is bounded
 #                                to 8 tokens; a long prompt's tail joins the
 #                                resident batch immediately and is walked
-#                                one token per tick INSIDE the slot-masked
-#                                transition, so admission never stalls the
-#                                running requests' ticks (flat short-request
-#                                TTFT under mixed-length load).
+#                                up to 8 tokens per tick INSIDE the
+#                                slot-masked transition, so admission never
+#                                stalls the running requests' ticks (flat
+#                                short-request TTFT under mixed-length load);
+#      paged=True, page_size=16 -- paged KV cache (section 5b below).
 #    See examples/serve_lm.py and benchmarks/run.py::bench_serving.
 # ---------------------------------------------------------------------------
 if ENGINE:
@@ -289,3 +290,45 @@ if ENGINE:
           f"per-request policies cost only their owner "
           f"(plain={engine.result(plain.id)['slots']} slot, "
           f"dmr={engine.result(guarded.id)['slots']} slots)")
+
+    # -----------------------------------------------------------------------
+    # 5b. Paged KV cache (the real LM adapter): ServeConfig(paged=True)
+    #     swaps the dense per-slot max_len cache for ONE shared pool of
+    #     fixed-size pages (repro/serving/paging.py).  Admission reserves a
+    #     worst-case page count, decode demand-maps pages just ahead of the
+    #     write head (page_faults), eviction is a pure page-table release —
+    #     and attention reads K/V through the page table with the fused
+    #     Pallas kernels of kernels/paged_decode.py.  Tokens are BITWISE
+    #     identical to the dense cache (none/DMR/TMR; tests/test_paging.py),
+    #     while a fixed cache-byte budget holds several times the resident
+    #     requests (benchmarks/run.py "fixed_budget" case).
+    # -----------------------------------------------------------------------
+    import dataclasses as dc
+
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models.lm_cells import ServeConfig
+    from repro.serving.lm import lm_engine_parts
+
+    cfg = get_reduced("internlm2-1.8b")
+    cfg = dc.replace(cfg, d_model=32, n_layers=2, d_ff=64, n_heads=2,
+                     n_kv_heads=1, vocab_size=128)
+    lm_prog, lm_adapter = lm_engine_parts(
+        cfg, ServeConfig(batch=4, max_len=32, paged=True, page_size=8))
+    lm = miso.serve(lm_prog, lm_adapter)
+    lm.start(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lm_reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, size=4)
+                .astype(np.int32), max_new_tokens=4,
+                policy=miso.RedundancyPolicy(level=lv))
+        for lv in (1, 2)          # the DMR request's replicas share the pool
+    ]
+    for r in lm_reqs:
+        lm.submit(r)
+    lm.pump()
+    pm = lm.metrics()
+    print(f"paged LM   : {pm['done']}/{pm['submitted']} requests done, "
+          f"pages {pm['pages_free']}/{pm['pages_total']} free after drain "
+          f"(page_size={pm['page_size']}, page_faults={pm['page_faults']})")

@@ -147,8 +147,9 @@ path's recompile and stall cliffs, both ``ServeConfig`` flags:
   * ``prefill_chunk`` — admission itself becomes a sequence of MISO
     transitions: the out-of-band forward covers at most ``chunk`` prompt
     tokens, the tail rides into the slot's ``pending`` segment and is
-    consumed one token per tick INSIDE the resident slot-masked
-    transition.  A long prompt joins immediately, never stalls the
+    consumed up to ``chunk`` tokens per tick INSIDE the resident
+    slot-masked transition (the walking slot sub-steps k times while its
+    neighbors step once).  A long prompt joins immediately, never stalls the
     running batch for more than one bounded chunk forward, and short
     requests' TTFT stays flat under mixed-length load.  Chunked and
     whole-prompt prefill emit bitwise-identical tokens (tested across
@@ -160,6 +161,24 @@ when churn fragments the free list the engine defragments instead of
 stalling — a running request's slot is relocated via the bitwise
 ``copy_slot`` + scrub machinery (``metrics()["defrag_moves"]``),
 invisible to its owner by the slot-position invariance.
+
+Paged KV cache (``ServeConfig(paged=True, page_size=...)``): the dense
+per-slot ``max_len`` cache is replaced by ONE shared pool of fixed-size
+KV pages per layer (``repro.serving.paging``).  Each slot owns a page
+table; admission reserves its worst-case page count (``can_admit``), a
+pre-tick hook demand-maps pages just ahead of the write head
+(``metrics()["page_faults"]``), and eviction is a pure page-table
+release — the contiguous-run/defrag machinery disappears for paged
+requests, so a fixed cache-byte budget holds several times the resident
+requests (benchmarks/run.py ``fixed_budget``).  Decode attention runs
+the fused gather+attention Pallas kernels of ``kernels/paged_decode``
+(GQA and absorbed-MLA; ``interpret=None`` auto-resolves so CPU CI
+exercises the same kernel).  Paged decode is BITWISE-identical to dense
+— tokens and FaultLedger reports, for none/DMR/TMR, through slot churn
+and page reuse (tests/test_paging.py): replica fingerprints and repair
+operate on the gathered dense-layout view, so per-request redundancy is
+unchanged even though replica slots share the pool.  Recurrent archs
+(mamba/zamba) fall back to the dense cache automatically.
 
 Per-request policy semantics: a request's ``RedundancyPolicy`` maps onto
 *replica slots* of the same resident batch (replication is mechanically

@@ -1,0 +1,258 @@
+"""Fused paged-decode attention Pallas kernels (gqa + mla).
+
+Single-query attention over a PAGED KV cache: each sequence's KV bytes
+live in fixed-size pages of one shared pool (``serving/paging.py``), and
+the per-slot page table maps logical page index -> pool row.  The kernel
+fuses the gather-from-pages with the attention math in one
+``pallas_call``: the page loop is the innermost sequential grid
+dimension, each step DMA-ing one page of K/V into VMEM scratch via a
+scalar-prefetched page-table lookup (``PrefetchScalarGridSpec`` — the
+index map reads the page id, so unmapped pages are never fetched twice),
+and the final step runs exactly the dense ``decode_attention`` /
+absorbed-MLA math over the gathered scratch.
+
+Bitwise parity with the dense path is load-bearing (the serving engine's
+paged-vs-dense token parity gate): the finalize step performs the SAME
+ops in the SAME f32 shapes and lane order as ``layers.decode_attention``
+(gqa) / the absorbed-MLA decode (mla) — full softmax, no online
+rescaling — so a paged decode emits bit-identical logits to a dense one.
+
+``interpret=None`` auto-resolves to interpret mode off-TPU (like
+``fused_step.py``), so CPU CI exercises the real kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas_tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        from . import ops
+
+        return not ops.on_tpu()
+    return bool(interpret)
+
+
+# --------------------------------------------------------------------------
+# GQA paged decode
+# --------------------------------------------------------------------------
+def _gqa_kernel(
+    pm_ref,  # (B, P) int32 scalar-prefetch: page table (-1 = unmapped)
+    pos_ref,  # (B,) int32 scalar-prefetch: current query position
+    q_ref,  # (1, Hq, Dk) block
+    k_ref,  # (1, Hkv, ps, Dk) block: the page selected by the index map
+    v_ref,  # (1, Hkv, ps, Dk) block
+    o_ref,  # (1, Hq, Dk) block
+    k_scr,  # (Hkv, S, Dk) VMEM scratch, S = P * ps
+    v_scr,  # (Hkv, S, Dk) VMEM scratch
+    m_scr,  # (1, S) int32 VMEM scratch: per-lane mapped flag
+    *,
+    scale: float,
+    ps: int,
+    n_pages_per_slot: int,
+    hkv: int,
+    group: int,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    ok = pm_ref[b, i] >= 0
+    # unmapped pages gather as zeros — exactly the dense empty-cache bytes
+    k_scr[:, pl.ds(i * ps, ps), :] = jnp.where(ok, k_ref[0], 0)
+    v_scr[:, pl.ds(i * ps, ps), :] = jnp.where(ok, v_ref[0], 0)
+    m_scr[:, pl.ds(i * ps, ps)] = jnp.broadcast_to(ok.astype(jnp.int32), (1, ps))
+
+    @pl.when(i == n_pages_per_slot - 1)
+    def _finalize():
+        seq = n_pages_per_slot * ps
+        q = q_ref[0]  # (Hq, Dk)
+        dk = q.shape[-1]
+        qf = q.reshape(hkv, group, dk).astype(jnp.float32) * scale
+        kf = k_scr[...].astype(jnp.float32)  # (Hkv, S, Dk)
+        # same contraction as the dense einsum "bhgd,bhsd->bhgs" per b
+        s = jax.lax.dot_general(
+            qf, kf, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+        )  # (Hkv, G, S)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, seq), 1)
+        valid = (m_scr[...] > 0) & (lane <= pos_ref[b])
+        s = jnp.where(valid[None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        vf = v_scr[...].astype(jnp.float32)
+        o = jax.lax.dot_general(
+            p, vf, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+        )  # (Hkv, G, Dk)
+        o_ref[0] = o.reshape(hkv * group, dk).astype(o_ref.dtype)
+
+
+def paged_gqa_attention(
+    q: jax.Array,  # (B, Hq, Dk)
+    k_pool: jax.Array,  # (N, Hkv, ps, Dk) shared page pool
+    v_pool: jax.Array,  # (N, Hkv, ps, Dk)
+    pages: jax.Array,  # (B, P) int32 per-slot page table, -1 = unmapped
+    pos: jax.Array,  # (B,) int32 current query position
+    *,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Single-query GQA attention reading K/V through a page table.
+
+    Bit-identical to ``layers.decode_attention`` over the equivalent
+    dense cache (pages gathered in logical order, unmapped pages = zero
+    lanes masked invalid).  Returns (B, Hq, Dk) in q.dtype."""
+    B, Hq, Dk = q.shape
+    _, Hkv, ps, _ = k_pool.shape
+    P = pages.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = (Dk**-0.5) if scale is None else scale
+    seq = P * ps
+
+    kernel = functools.partial(
+        _gqa_kernel, scale=scale, ps=ps, n_pages_per_slot=P, hkv=Hkv, group=G
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, Hq, Dk), lambda b, i, pm, ps_: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, Hkv, ps, Dk),
+                lambda b, i, pm, ps_: (jnp.maximum(pm[b, i], 0), 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, Hkv, ps, Dk),
+                lambda b, i, pm, ps_: (jnp.maximum(pm[b, i], 0), 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, Dk), lambda b, i, pm, ps_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, seq, Dk), k_pool.dtype),
+            pltpu.VMEM((Hkv, seq, Dk), v_pool.dtype),
+            pltpu.VMEM((1, seq), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Dk), q.dtype),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=_resolve_interpret(interpret),
+    )(pages.astype(jnp.int32), pos.astype(jnp.int32), q, k_pool, v_pool)
+
+
+# --------------------------------------------------------------------------
+# MLA paged decode (absorbed latent attention)
+# --------------------------------------------------------------------------
+def _mla_kernel(
+    pm_ref,  # (B, P) int32
+    pos_ref,  # (B,) int32
+    ql_ref,  # (1, h, lora) block: latent-absorbed query
+    qr_ref,  # (1, h, rope) block: rope query
+    ckv_ref,  # (1, ps, lora) block: selected latent page
+    kr_ref,  # (1, ps, rope) block: selected rope page
+    o_ref,  # (1, h, lora) f32 block: latent context
+    ckv_scr,  # (S, lora) VMEM scratch
+    kr_scr,  # (S, rope) VMEM scratch
+    m_scr,  # (1, S) int32 VMEM scratch
+    *,
+    scale: float,
+    ps: int,
+    n_pages_per_slot: int,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    ok = pm_ref[b, i] >= 0
+    ckv_scr[pl.ds(i * ps, ps), :] = jnp.where(ok, ckv_ref[0], 0)
+    kr_scr[pl.ds(i * ps, ps), :] = jnp.where(ok, kr_ref[0], 0)
+    m_scr[:, pl.ds(i * ps, ps)] = jnp.broadcast_to(ok.astype(jnp.int32), (1, ps))
+
+    @pl.when(i == n_pages_per_slot - 1)
+    def _finalize():
+        seq = n_pages_per_slot * ps
+        qlf = ql_ref[0].astype(jnp.float32)  # (h, lora)
+        qrf = qr_ref[0].astype(jnp.float32)  # (h, rope)
+        ckv = ckv_scr[...].astype(jnp.float32)  # (S, lora)
+        kr = kr_scr[...].astype(jnp.float32)  # (S, rope)
+        # dense: s = (s_lat + s_rope) * scale — scale applied AFTER sum
+        s_lat = jax.lax.dot_general(
+            qlf, ckv, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (h, S)
+        s_rope = jax.lax.dot_general(
+            qrf, kr, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = (s_lat + s_rope) * scale
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, seq), 1)
+        valid = (m_scr[...] > 0) & (lane <= pos_ref[b])
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_ref[0] = jax.lax.dot_general(
+            p, ckv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (h, lora) f32 — caller casts at the w_uv einsum like dense
+
+
+def paged_mla_attention(
+    q_lat: jax.Array,  # (B, h, lora) latent-absorbed query
+    q_rope: jax.Array,  # (B, h, rope)
+    ckv_pool: jax.Array,  # (N, ps, lora)
+    krope_pool: jax.Array,  # (N, ps, rope)
+    pages: jax.Array,  # (B, P) int32
+    pos: jax.Array,  # (B,) int32
+    *,
+    scale: float,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Absorbed-MLA single-query attention through a page table.  Returns
+    the f32 latent context (B, h, lora) — bit-identical to the dense
+    absorbed decode's ``einsum("bhst,btl->bshl", softmax(s), ckv)``."""
+    B, h, lora = q_lat.shape
+    _, ps, _ = ckv_pool.shape
+    P = pages.shape[1]
+    rope = q_rope.shape[-1]
+    seq = P * ps
+
+    kernel = functools.partial(_mla_kernel, scale=scale, ps=ps, n_pages_per_slot=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, h, lora), lambda b, i, pm, ps_: (b, 0, 0)),
+            pl.BlockSpec((1, h, rope), lambda b, i, pm, ps_: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, lora),
+                lambda b, i, pm, ps_: (jnp.maximum(pm[b, i], 0), 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, ps, rope),
+                lambda b, i, pm, ps_: (jnp.maximum(pm[b, i], 0), 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, h, lora), lambda b, i, pm, ps_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((seq, lora), ckv_pool.dtype),
+            pltpu.VMEM((seq, rope), krope_pool.dtype),
+            pltpu.VMEM((1, seq), jnp.int32),
+        ],
+    )
+    pm = pages.astype(jnp.int32)
+    qpos = pos.astype(jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, h, lora), jnp.float32),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=_resolve_interpret(interpret),
+    )(pm, qpos, q_lat, q_rope, ckv_pool, krope_pool)

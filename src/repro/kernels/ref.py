@@ -51,6 +51,83 @@ def attention_ref(
 
 
 # --------------------------------------------------------------------------
+# paged decode oracles (kernels/paged_decode.py)
+# --------------------------------------------------------------------------
+def paged_gather_ref(pool: jax.Array, pages: jax.Array) -> jax.Array:
+    """Gather a slot-major dense view (B, P*ps, ...) from a page pool
+    (N, ps, ...) through a page table (B, P); unmapped pages (-1) read as
+    zeros."""
+    n = pool.shape[0]
+    safe = jnp.clip(pages, 0, n - 1)
+    g = pool[safe]  # (B, P, ps, ...)
+    mapped = (pages >= 0).reshape(pages.shape + (1,) * (g.ndim - 2))
+    g = jnp.where(mapped, g, 0)
+    return g.reshape((pages.shape[0], -1) + pool.shape[2:])
+
+
+def paged_gqa_ref(
+    q: jax.Array,  # (B, Hq, Dk)
+    k_pool: jax.Array,  # (N, Hkv, ps, Dk)
+    v_pool: jax.Array,  # (N, Hkv, ps, Dk)
+    pages: jax.Array,  # (B, P) int32, -1 = unmapped
+    pos: jax.Array,  # (B,) int32
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Dense-equivalent paged GQA decode: gather pages in logical order,
+    then run exactly the ``layers.decode_attention`` math."""
+    B, Hq, Dk = q.shape
+    Hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    G = Hq // Hkv
+    scale = (Dk ** -0.5) if scale is None else scale
+    # pool lanes are (N, Hkv, ps, Dk): move Hkv out so the gather merges
+    # (P, ps) into the sequence axis, then restore the dense cache layout
+    kg = paged_gather_ref(jnp.moveaxis(k_pool, 1, 2), pages)  # (B,S,Hkv,Dk)
+    vg = paged_gather_ref(jnp.moveaxis(v_pool, 1, 2), pages)
+    kg = jnp.moveaxis(kg, 1, 2)  # (B, Hkv, S, Dk)
+    vg = jnp.moveaxis(vg, 1, 2)
+    seq = pages.shape[1] * ps
+    lane = jnp.arange(seq)[None, :]
+    mapped = jnp.repeat(pages >= 0, ps, axis=1)
+    valid = mapped & (lane <= pos[:, None])
+    qf = q.reshape(B, Hkv, G, Dk).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bhsd->bhgs", qf, kg.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, vg.astype(jnp.float32))
+    return out.reshape(B, Hq, Dk).astype(q.dtype)
+
+
+def paged_mla_ref(
+    q_lat: jax.Array,  # (B, h, lora)
+    q_rope: jax.Array,  # (B, h, rope)
+    ckv_pool: jax.Array,  # (N, ps, lora)
+    krope_pool: jax.Array,  # (N, ps, rope)
+    pages: jax.Array,  # (B, P) int32
+    pos: jax.Array,  # (B,) int32
+    *,
+    scale: float,
+) -> jax.Array:
+    """Dense-equivalent paged absorbed-MLA decode; returns the f32 latent
+    context (B, h, lora)."""
+    ps = ckv_pool.shape[1]
+    ckv = paged_gather_ref(ckv_pool, pages)  # (B, S, lora)
+    kr = paged_gather_ref(krope_pool, pages)  # (B, S, rope)
+    seq = pages.shape[1] * ps
+    lane = jnp.arange(seq)[None, :]
+    mapped = jnp.repeat(pages >= 0, ps, axis=1)
+    valid = mapped & (lane <= pos[:, None])
+    s_lat = jnp.einsum("bhl,btl->bht", q_lat.astype(jnp.float32),
+                       ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,btr->bht", q_rope.astype(jnp.float32),
+                        kr.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btl->bhl", p, ckv.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
 # Mamba2 SSD oracle (quadratic "attention-like" formulation)
 # --------------------------------------------------------------------------
 def ssd_ref(

@@ -14,9 +14,14 @@ geometric bucket, not per distinct prompt length) and optionally chunked
 the prompt tail walks through the resident transition one token per
 tick); ``prefill_compiles`` is printed from ``engine.metrics()``.
 
+``--paged`` switches the resident KV cache to the paged pool
+(``--page-size`` tokens per page): slots hold page lists into one shared
+pool, admission checks free pages, and eviction is a page-table release —
+the metrics line gains pages_total/pages_free/page_faults.
+
 ``--strike`` arms one bit-flip against the first DMR request's replica
 slot mid-decode and verifies it is detected, attributed to that request,
-and repaired (the CI serving smoke runs this).
+and repaired (the CI serving smoke runs this, both dense and --paged).
 
 ``--static`` keeps the fixed-batch reference path: prefill a batch of
 identical-length prompts, decode in one in-graph scan (optionally with
@@ -78,6 +83,12 @@ def main():
                     help="smallest prefill compile bucket (geometric "
                          "ladder up to --max-len; 0 = exact-length "
                          "compiles)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: fixed-size pages in one shared "
+                         "pool instead of per-slot contiguous cache")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged; must divide "
+                         "--max-len)")
     # static path
     ap.add_argument("--static", action="store_true",
                     help="fixed-batch reference path (no engine)")
@@ -103,7 +114,8 @@ def engine_main(cfg, args):
 
     scfg = ServeConfig(batch=args.slots, max_len=args.max_len,
                        prefill_chunk=args.prefill_chunk,
-                       prefill_bucket_min=args.prefill_bucket_min)
+                       prefill_bucket_min=args.prefill_bucket_min,
+                       paged=args.paged, page_size=args.page_size)
     prog, adapter = lm_engine_parts(cfg, scfg, LOCAL)
     engine = miso.serve(prog, adapter)
     engine.start(jax.random.PRNGKey(args.seed))
@@ -141,10 +153,20 @@ def engine_main(cfg, args):
             engine.pump(max_ticks=1)
         if rec.status != RUNNING:
             raise SystemExit("strike victim never became resident")
-        from repro.models.lm_cells import slot_decoder_init
+        from repro.models.lm_cells import (
+            paged_serving_supported,
+            paged_slot_decoder_init,
+            slot_decoder_init,
+        )
 
-        flat, _ = jax.tree_util.tree_flatten_with_path(
-            slot_decoder_init(cfg, 2, args.max_len))
+        # the flip targets the "tokens" leaf by FLAT INDEX: flatten the
+        # same state layout the engine runs (paged trees order differently)
+        if args.paged and paged_serving_supported(cfg):
+            example = paged_slot_decoder_init(
+                cfg, 2, args.max_len, args.page_size, 1)
+        else:
+            example = slot_decoder_init(cfg, 2, args.max_len)
+        flat, _ = jax.tree_util.tree_flatten_with_path(example)
         leaf_i = next(i for i, (p, _) in enumerate(flat)
                       if any(getattr(q, "key", None) == "tokens" for q in p))
         fault = miso.FaultSpec.at(
@@ -163,6 +185,9 @@ def engine_main(cfg, args):
     print(f"prefill: {m['prefill_compiles']} compiles "
           f"(buckets={m['prefill_buckets']}, chunk={m['prefill_chunk']}) | "
           f"defrag moves={m['defrag_moves']}")
+    if m.get("paged"):
+        print(f"paged: {m['pages_free']}/{m['pages_total']} pages free "
+              f"(size={m['page_size']}) | page faults={m['page_faults']}")
     for r in reqs:
         res = engine.result(r.id)
         mark = f" policy={r.policy.level}" if r.policy.level > 1 else ""

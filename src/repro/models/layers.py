@@ -212,6 +212,19 @@ def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     }
 
 
+def gqa_paged_cache_init(cfg: ModelConfig, n_pages: int,
+                         page_size: int) -> dict:
+    """Paged KV pool for one layer: ``n_pages`` fixed-size pages shared by
+    every slot; the per-slot page table (``serving/paging.py``) maps
+    logical page index -> pool row.  No ``slot_pos`` — lane validity is
+    derived from the page table and the query position."""
+    dh, dt = cfg.head_dim, cfg.compute_dtype
+    return {
+        "k": jnp.zeros((n_pages, cfg.n_kv_heads, page_size, dh), dt),
+        "v": jnp.zeros((n_pages, cfg.n_kv_heads, page_size, dh), dt),
+    }
+
+
 def gqa_attention(
     p: Params, x: jax.Array, cfg: ModelConfig, *,
     positions: jax.Array,                 # (B,S) or (3,B,S) for mrope
@@ -219,6 +232,7 @@ def gqa_attention(
     block_k: int = 1024,
     ctx=None,                             # ShardCtx for decode_shardmap
     active: Optional[jax.Array] = None,   # (B,) serving slot mask (decode)
+    pages: Optional[jax.Array] = None,    # (B,P) page table -> paged decode
 ) -> tuple[jax.Array, Optional[dict]]:
     B, S, d = x.shape
     dh = cfg.head_dim
@@ -247,6 +261,31 @@ def gqa_attention(
         assert S == 1, "decode path handles one token at a time"
         pos = positions[0] if cfg.mrope_sections else positions  # (B,S)
         pos = pos[:, 0]                                          # (B,)
+        if pages is not None:
+            # paged decode: cache is the shared page pool (N,Hkv,ps,dh);
+            # the write lands at (row, lane) through the page table, and
+            # attention reads every mapped page via the fused kernel.
+            assert not cfg.window, "paged decode excludes windowed archs"
+            from repro.kernels.paged_decode import paged_gqa_attention
+
+            N, _, psz, _ = cache["k"].shape
+            lane = pos % psz
+            row = jnp.take_along_axis(pages, (pos // psz)[:, None], 1)[:, 0]
+            ok = row >= 0
+            if active is not None:
+                ok = ok & active
+            # OOB rows are DROPPED by the scatter: inactive slots and
+            # unmapped pages write nothing (page rows are per-slot
+            # disjoint, so no cross-slot collisions either way)
+            row_safe = jnp.where(ok, row, N)
+            k_pool = cache["k"].at[row_safe, :, lane].set(
+                k[:, :, 0].astype(cache["k"].dtype))
+            v_pool = cache["v"].at[row_safe, :, lane].set(
+                v[:, :, 0].astype(cache["v"].dtype))
+            out = paged_gqa_attention(q[:, :, 0], k_pool, v_pool,
+                                      pages, pos)
+            out = out[:, None].reshape(B, S, cfg.n_heads * dh)
+            return out @ p["wo"], {"k": k_pool, "v": v_pool}
         if (ctx is not None and getattr(ctx, "decode_shardmap", False)
                 and ctx.mesh is not None):
             from repro.distributed import decode as DD
@@ -316,6 +355,17 @@ def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     }
 
 
+def mla_paged_cache_init(cfg: ModelConfig, n_pages: int,
+                         page_size: int) -> dict:
+    """Paged latent-KV pool for one layer (see ``gqa_paged_cache_init``)."""
+    m = cfg.mla or MLAConfig()
+    dt = cfg.compute_dtype
+    return {
+        "ckv": jnp.zeros((n_pages, page_size, m.kv_lora_rank), dt),
+        "krope": jnp.zeros((n_pages, page_size, m.qk_rope_dim), dt),
+    }
+
+
 def mla_attention(
     p: Params, x: jax.Array, cfg: ModelConfig, *,
     positions: jax.Array,
@@ -323,6 +373,7 @@ def mla_attention(
     block_k: int = 1024,
     ctx=None,                             # ShardCtx for decode_shardmap
     active: Optional[jax.Array] = None,   # (B,) serving slot mask (decode)
+    pages: Optional[jax.Array] = None,    # (B,P) page table -> paged decode
 ) -> tuple[jax.Array, Optional[dict]]:
     m = cfg.mla or MLAConfig()
     B, S, d = x.shape
@@ -364,6 +415,29 @@ def mla_attention(
     # absorbed path (decode): attend in the latent space
     assert S == 1
     pos = positions[:, 0]                                   # (B,)
+    if pages is not None:
+        from repro.kernels.paged_decode import paged_mla_attention
+
+        N, psz, _ = cache["ckv"].shape
+        lane = pos % psz
+        row = jnp.take_along_axis(pages, (pos // psz)[:, None], 1)[:, 0]
+        ok = row >= 0
+        if active is not None:
+            ok = ok & active
+        row_safe = jnp.where(ok, row, N)  # OOB scatter -> dropped
+        ckv_pool = cache["ckv"].at[row_safe, lane].set(
+            ckv[:, 0].astype(cache["ckv"].dtype))
+        krope_pool = cache["krope"].at[row_safe, lane].set(
+            k_rope[:, 0].astype(cache["krope"].dtype))
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)  # (B,1,h,lora)
+        ctx_lat = paged_mla_attention(
+            q_lat[:, 0], q_rope[:, 0], ckv_pool, krope_pool, pages, pos,
+            scale=scale,
+        )                                                   # (B,h,lora) f32
+        out = jnp.einsum("bshl,lhv->bshv", ctx_lat[:, None].astype(x.dtype),
+                         w_uv)
+        out = out.reshape(B, S, h * m.v_head_dim)
+        return out @ p["wo"], {"ckv": ckv_pool, "krope": krope_pool}
     if (ctx is not None and getattr(ctx, "decode_shardmap", False)
             and ctx.mesh is not None):
         from repro.distributed import decode as DD

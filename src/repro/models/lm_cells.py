@@ -250,6 +250,17 @@ class ServeConfig:
     prefill_bucket_min: int = 16
     #: explicit bucket ladder override (sorted lengths); () = geometric.
     prefill_buckets: tuple = ()
+    #: paged KV cache (continuous batcher only): slot KV lives in
+    #: fixed-size pages of one shared pool (``serving/paging.py``) instead
+    #: of a dense per-slot ``max_len`` allocation, so admission is bounded
+    #: by free *pages*, not free dense bytes.  Recurrent and windowed
+    #: archs silently fall back to dense (``paged_serving_supported``).
+    paged: bool = False
+    #: tokens per KV page; ``max_len`` must be a multiple of it.
+    page_size: int = 16
+    #: total pages in the shared pool; 0 = batch * (max_len / page_size)
+    #: (capacity-equivalent to the dense cache).
+    page_budget: int = 0
 
 
 def prefill_bucket_ladder(scfg: "ServeConfig") -> tuple:
@@ -354,6 +365,50 @@ def slot_decoder_init(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     }
 
 
+def paged_serving_supported(cfg: ModelConfig) -> bool:
+    """Archs whose serve cache can live in pages: pure-attention text
+    models.  Recurrent state (mamba/zamba) is a fixed-size recurrence —
+    nothing to page; sliding-window caches ring-wrap (a page would be
+    rewritten mid-flight); the vision splice pins the physical prompt
+    layout.  Callers fall back to the dense cache for these."""
+    return (cfg.mixer_type != "mamba2" and not cfg.window
+            and not cfg.n_vision_tokens)
+
+
+def paged_pool_pages(scfg: ServeConfig) -> int:
+    """Total pages in the shared pool for a serve config (``page_budget``
+    override, else capacity-equivalent to the dense cache)."""
+    return scfg.page_budget or scfg.batch * (scfg.max_len // scfg.page_size)
+
+
+def paged_slot_decoder_init(cfg: ModelConfig, batch: int, max_len: int,
+                            page_size: int, n_pages: int) -> dict:
+    """Paged variant of ``slot_decoder_init``: the dense per-slot cache is
+    replaced by shared page POOLS plus a per-slot page table ``pages``
+    ((batch, max_len/page_size) int32 pool rows, -1 = unmapped).  Pool
+    leaves carry no slot axis — every slot's KV bytes live wherever its
+    page table points."""
+    if max_len % page_size:
+        raise ValueError(
+            f"max_len ({max_len}) must be a multiple of page_size "
+            f"({page_size}): the paged-decode kernel gathers whole pages")
+    shape = (batch, 1)
+    pshape = (batch, max_len)
+    if cfg.n_codebooks > 1:
+        shape = shape + (cfg.n_codebooks,)
+        pshape = pshape + (cfg.n_codebooks,)
+    return {
+        "cache": T.init_paged_cache(cfg, batch, n_pages, page_size),
+        "tokens": jnp.zeros(shape, jnp.int32),
+        "active": jnp.zeros((batch,), jnp.bool_),
+        "n_decoded": jnp.zeros((batch,), jnp.int32),
+        "pending": jnp.zeros(pshape, jnp.int32),
+        "p_head": jnp.zeros((batch,), jnp.int32),
+        "p_len": jnp.zeros((batch,), jnp.int32),
+        "pages": jnp.full((batch, max_len // page_size), -1, jnp.int32),
+    }
+
+
 def make_slot_serve_program(
     cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL,
 ) -> MisoProgram:
@@ -381,20 +436,44 @@ def make_slot_serve_program(
         name="weights", init=w_init, transition=lambda prev: prev["weights"],
     )
 
-    axes = infer_slot_axes(
-        lambda b: slot_decoder_init(cfg, b, scfg.max_len))
+    paged = scfg.paged and paged_serving_supported(cfg)
+    if paged:
+        from repro.serving.paging import infer_paged_axes, mask_slots_paged
 
-    def d_init(key):
-        return slot_decoder_init(cfg, scfg.batch, scfg.max_len)
+        n_pages = paged_pool_pages(scfg)
+        axes = infer_paged_axes(
+            lambda b: paged_slot_decoder_init(
+                cfg, b, scfg.max_len, scfg.page_size, n_pages))
+        mask_fn = mask_slots_paged
 
-    def d_transition(prev):
-        st = prev["decoder"]
+        def d_init(key):
+            return paged_slot_decoder_init(
+                cfg, scfg.batch, scfg.max_len, scfg.page_size, n_pages)
+    else:
+        axes = infer_slot_axes(
+            lambda b: slot_decoder_init(cfg, b, scfg.max_len))
+        mask_fn = mask_slots
+
+        def d_init(key):
+            return slot_decoder_init(cfg, scfg.batch, scfg.max_len)
+
+    # bounded k-token prefill walk: prefill_chunk > 1 drains up to k
+    # pending prompt tokens per resident tick (k sub-steps; non-walking
+    # slots step exactly once, in the first).  k = 1 is the PR-5
+    # one-token-per-tick drain, bit for bit.
+    k_walk = max(1, scfg.prefill_chunk if not cfg.n_vision_tokens else 0)
+
+    def sub_step(st, weights_params, first: bool):
         act = st["active"]
         # chunked prefill: slots still holding prompt tail feed the NEXT
         # PROMPT TOKEN into the step instead of their last argmax — the
         # cache builds through the ordinary decode path, one position per
-        # tick, without ever stalling the other slots
+        # sub-step, without ever stalling the other slots
         walking = act & (st["p_head"] < st["p_len"])
+        # first sub-step: everyone active steps; later sub-steps only
+        # advance the prompt walkers (decoding slots stay frozen — one
+        # emitted token per tick, same as the 1-token walk)
+        elig = act if first else walking
         idx = jnp.clip(st["p_head"], 0, scfg.max_len - 1)
         if cfg.n_codebooks > 1:
             nxt_p = jnp.take_along_axis(
@@ -405,8 +484,8 @@ def make_slot_serve_program(
             wmask = walking[:, None]
         tok_in = jnp.where(wmask, nxt_p, st["tokens"])
         logits, cache = T.decode_step(
-            cfg, prev["weights"]["params"], st["cache"], tok_in,
-            ctx=ctx, active=act,
+            cfg, weights_params, st["cache"], tok_in,
+            ctx=ctx, active=elig, pages=st.get("pages"),
         )
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
         if cfg.n_codebooks == 1:
@@ -415,15 +494,25 @@ def make_slot_serve_program(
             "cache": cache,
             "tokens": nxt,
             "active": act,
-            "n_decoded": st["n_decoded"] + (act & ~walking).astype(jnp.int32),
+            "n_decoded": st["n_decoded"]
+            + (elig & ~walking).astype(jnp.int32),
             "pending": st["pending"],
-            "p_head": st["p_head"] + walking.astype(jnp.int32),
+            "p_head": st["p_head"] + (elig & walking).astype(jnp.int32),
             "p_len": st["p_len"],
         }
-        # gate the whole writeback on the slot mask: the attention paths
-        # already mask their cache scatters, this covers every remaining
-        # leaf (mamba states, positions, tokens) in one structural select
-        return mask_slots(act, new, st, axes)
+        if paged:
+            new["pages"] = st["pages"]
+        # gate the whole writeback on the eligibility mask: the attention
+        # paths already mask their cache scatters, this covers every
+        # remaining leaf (mamba states, positions, tokens) in one
+        # structural select
+        return mask_fn(elig, new, st, axes)
+
+    def d_transition(prev):
+        st = prev["decoder"]
+        for j in range(k_walk):
+            st = sub_step(st, prev["weights"]["params"], first=(j == 0))
+        return st
 
     decoder = CellType(
         name="decoder", init=d_init, transition=d_transition,

@@ -186,7 +186,7 @@ def _shared_attn_apply(shared: Params, xin: jax.Array, cfg: ModelConfig,
 
 
 def _attention(p, x, cfg: ModelConfig, ctx: ShardCtx, positions, cache,
-               fill_cache, active=None, prompt_len=None):
+               fill_cache, active=None, prompt_len=None, pages=None):
     """Returns (out, cache_out).  cache_out is the updated cache (decode),
     the filled cache (fill_cache), or None.  ``active`` is the serving
     batcher's per-slot mask, threaded into the decode cache update.
@@ -198,7 +198,7 @@ def _attention(p, x, cfg: ModelConfig, ctx: ShardCtx, positions, cache,
     fn = L.mla_attention if cfg.attn_type == "mla" else L.gqa_attention
     if cache is not None:
         return fn(p, x, cfg, positions=positions, cache=cache, ctx=ctx,
-                  active=active)
+                  active=active, pages=pages)
     out, _ = fn(p, x, cfg, positions=positions, cache=None,
                 block_k=ctx.block_k)
     if not fill_cache:
@@ -257,7 +257,7 @@ def _attention(p, x, cfg: ModelConfig, ctx: ShardCtx, positions, cache,
 def _layer_apply(p: Params, h: jax.Array, cfg: ModelConfig, kind: str,
                  ctx: ShardCtx, positions, cache, fill_cache,
                  shared: Optional[Params], e0: Optional[jax.Array],
-                 active=None, prompt_len=None):
+                 active=None, prompt_len=None, pages=None):
     """One scan step.  Returns (h, cache_out, aux)."""
     aux = jnp.float32(0)
     if kind == "mamba":
@@ -295,7 +295,7 @@ def _layer_apply(p: Params, h: jax.Array, cfg: ModelConfig, kind: str,
     # attn_mlp / attn_moe
     a, cout = _attention(p["attn"], L.rmsnorm(h, p["ln1"], cfg.rms_eps),
                          cfg, ctx, positions, cache, fill_cache, active,
-                         prompt_len)
+                         prompt_len, pages)
     # pin the TP boundary on the bf16 block output: without the constraint
     # the partitioner is free to place the model-axis all-reduce after the
     # f32 upcast of the next rmsnorm, doubling its wire bytes (§Perf)
@@ -499,9 +499,30 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return {"segments": out, "pos": jnp.zeros((batch,), jnp.int32)}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int) -> dict:
+    """Paged serving cache: per-layer page POOLS shared by every slot
+    (page axis replaces the batch axis of the dense cache), plus the
+    usual per-slot ``pos``.  Attention-only segment plans — recurrent
+    (mamba/zamba) state is not pageable and callers fall back to
+    ``init_cache``."""
+    segs = segment_plan(cfg)
+    if any(seg.kind in ("mamba", "zamba_unit") for seg in segs):
+        raise ValueError("paged cache requires attention-only models")
+    if cfg.window:
+        raise ValueError("paged cache excludes sliding-window archs")
+    one = (L.mla_paged_cache_init(cfg, n_pages, page_size)
+           if cfg.attn_type == "mla"
+           else L.gqa_paged_cache_init(cfg, n_pages, page_size))
+    out = [jax.tree.map(lambda x: jnp.stack([x] * seg.count), one)
+           for seg in segs]
+    return {"segments": out, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
 def decode_step(
     cfg: ModelConfig, params: Params, cache: dict, tokens: jax.Array,
     *, ctx: ShardCtx = LOCAL, active: Optional[jax.Array] = None,
+    pages: Optional[jax.Array] = None,
 ):
     """One serve step: tokens (B,1[,K]) -> (logits (B,1[,K],V), new cache).
 
@@ -529,7 +550,7 @@ def decode_step(
             lp, lc = xs
             h, cout, _ = _layer_apply(
                 lp, h, cfg, seg.kind, ctx, positions, lc, False, shared, e0,
-                active,
+                active, None, pages,
             )
             return h, cout
 

@@ -8,11 +8,23 @@ Layers:
   * ``engine``   — the ServingEngine: Executor.stream + swap hook, per-
     request DMR/TMR on replica slots, per-request fault attribution,
     tokens/s + TTFT SLO metrics.
+  * ``paging``   — the paged KV cache: PageTable (fixed-size KV pages in
+    one shared pool, per-slot page lists) + the page-table-routed
+    SlotSurgery; ``ServeConfig(paged=True)`` turns it on.
   * ``lm``       — the LM adapter (slot-masked decoder cell of
     models/lm_cells.py); imported lazily so toy/generic engines don't
     pull in the transformer stack.
 """
+
 from .engine import RequestRecord, ServingEngine, SlotAdapter  # noqa: F401
+from .paging import (  # noqa: F401
+    PageTable,
+    infer_paged_axes,
+    mask_slots_paged,
+    paged_surgery,
+    paged_view,
+    pool_slot_view,
+)
 from .request import (  # noqa: F401
     CANCELLED,
     DONE,
@@ -25,7 +37,9 @@ from .request import (  # noqa: F401
 )
 from .slots import (  # noqa: F401
     SlotManager,
+    SlotSurgery,
     copy_slot,
+    default_surgery,
     infer_slot_axes,
     join_slot,
     mask_slots,
@@ -34,10 +48,32 @@ from .slots import (  # noqa: F401
 )
 
 __all__ = [
-    "CANCELLED", "DONE", "EXPIRED", "QUEUED", "REJECTED", "RUNNING",
-    "Request", "RequestQueue", "RequestRecord", "ServingEngine",
-    "SlotAdapter", "SlotManager", "copy_slot", "infer_slot_axes",
-    "join_slot", "lm_engine_parts", "mask_slots", "read_slot",
+    "CANCELLED",
+    "DONE",
+    "EXPIRED",
+    "PageTable",
+    "QUEUED",
+    "REJECTED",
+    "RUNNING",
+    "Request",
+    "RequestQueue",
+    "RequestRecord",
+    "ServingEngine",
+    "SlotAdapter",
+    "SlotManager",
+    "SlotSurgery",
+    "copy_slot",
+    "default_surgery",
+    "infer_paged_axes",
+    "infer_slot_axes",
+    "join_slot",
+    "lm_engine_parts",
+    "mask_slots",
+    "mask_slots_paged",
+    "paged_surgery",
+    "paged_view",
+    "pool_slot_view",
+    "read_slot",
     "slot_fingerprints",
 ]
 
@@ -45,5 +81,6 @@ __all__ = [
 def __getattr__(name):
     if name == "lm_engine_parts":
         from .lm import lm_engine_parts
+
         return lm_engine_parts
     raise AttributeError(name)

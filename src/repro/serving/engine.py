@@ -27,6 +27,7 @@ trajectory is bitwise-identical no matter which other slots are occupied
 and leave mid-stream without perturbing anyone — tested in
 tests/test_serving.py against static-batch decodes.
 """
+
 from __future__ import annotations
 
 import collections
@@ -35,11 +36,10 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import executor as _ex
-from repro.core.redundancy import FaultLedger, bit_mismatch_elems
+from repro.core.redundancy import FaultLedger
 
 from .request import (
     CANCELLED,
@@ -51,13 +51,7 @@ from .request import (
     Request,
     RequestQueue,
 )
-from .slots import (
-    SlotManager,
-    copy_slot,
-    join_slot,
-    read_slot,
-    slot_fingerprints,
-)
+from .slots import SlotManager, SlotSurgery, default_surgery
 
 Pytree = Any
 
@@ -91,6 +85,26 @@ class SlotAdapter:
     stats       -- optional ``() -> dict`` of adapter-side counters
                    merged into ``engine.metrics()`` (the LM adapter
                    reports ``prefill_compiles`` / ``prefill_buckets``).
+    surgery     -- optional ``slots.SlotSurgery`` overriding how slot
+                   state is joined/scrubbed/compared (the paged-KV
+                   adapter routes these through its page table); None =
+                   ``slots.default_surgery`` over the dense layout.
+    has_capacity-- optional ``(request) -> bool`` extra admission gate
+                   beyond free slots (paged: free PAGES for the
+                   request's worst case); False holds the FIFO head.
+    pre_tick    -- optional ``(states) -> states`` hook run after
+                   admission, before the tick's input buffer is
+                   snapshotted (paged: demand-map + zero the pages the
+                   transition is about to write — running it pre-snapshot
+                   keeps §IV replays bitwise-faithful).
+    walk_chunk  -- prompt-tail tokens the resident transition consumes
+                   per tick (``ServeConfig.prefill_chunk`` k-token walk);
+                   the engine's host-side ``prefill_remaining`` ledger
+                   drains at this rate.
+    contiguous_replicas -- replica slots need one adjacent run (dense
+                   layout: the spatial-placement notch).  The paged
+                   layout clears it — pages have no adjacency, so
+                   replicated admissions never defragment.
     """
 
     cell: str
@@ -101,6 +115,11 @@ class SlotAdapter:
     make_empty: Callable[[], Pytree]
     validate: Optional[Callable[[Request], Optional[str]]] = None
     stats: Optional[Callable[[], dict]] = None
+    surgery: Optional[SlotSurgery] = None
+    has_capacity: Optional[Callable[[Request], bool]] = None
+    pre_tick: Optional[Callable[[dict], dict]] = None
+    walk_chunk: int = 1
+    contiguous_replicas: bool = True
 
 
 @dataclasses.dataclass
@@ -161,10 +180,11 @@ class ServingEngine:
             raise ValueError(
                 f"backend {self.exe.name!r} has no pure_step replay; the "
                 "engine needs it for DMR tie-breaks (use a lockstep "
-                "flavor or 'host')")
+                "flavor or 'host')"
+            )
         self.queue = RequestQueue(max_depth=max_queue, time_fn=time_fn)
         self.slots = SlotManager(adapter.n_slots)
-        self.ledger = FaultLedger()   # keyed by REQUEST id, not cell name
+        self.ledger = FaultLedger()  # keyed by REQUEST id, not cell name
         self.time_fn = time_fn
         self.requests: dict[str, RequestRecord] = {}
         #: finished records are retained for result() pickup, bounded so a
@@ -186,31 +206,11 @@ class ServingEngine:
         self._defrag_moves = 0
         self._t0: Optional[float] = None
 
-        cell, axes = adapter.cell, adapter.slot_axes
-        self._jit_join = jax.jit(
-            lambda st, slot_state, slot:
-                {**st, cell: join_slot(st[cell], slot_state, slot, axes)})
-        self._jit_copy = jax.jit(
-            lambda st, src, dst:
-                {**st, cell: copy_slot(st[cell], src, dst, axes)})
-        # adopt: one slot of `other` (the §IV replay) replaces ours
-        self._jit_adopt = jax.jit(
-            lambda st, other, slot:
-                {**st, cell: join_slot(
-                    st[cell], read_slot(other[cell], slot, axes), slot,
-                    axes)})
-        self._jit_fps = jax.jit(lambda dec: slot_fingerprints(dec, axes))
-        # real damage accounting: mismatched ELEMENTS between two replica
-        # slots (same semantics as temporal lockstep's bitwise compare),
-        # not fingerprint words
-        self._jit_damage = jax.jit(
-            lambda st, a, b: bit_mismatch_elems(
-                read_slot(st[cell], a, axes), read_slot(st[cell], b, axes)))
-        self._jit_damage_vs = jax.jit(
-            lambda st, other, slot: bit_mismatch_elems(
-                read_slot(st[cell], slot, axes),
-                read_slot(other[cell], slot, axes)))
-        self._empty = adapter.make_empty()
+        # the surgery bundle: dense whole-leaf ops by default, or the
+        # adapter's own (paged: page-table-routed)
+        self._ops = adapter.surgery or default_surgery(
+            adapter.cell, adapter.slot_axes, adapter.make_empty
+        )
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, key: jax.Array) -> None:
@@ -226,12 +226,13 @@ class ServingEngine:
         with back-pressure in ``metrics()``."""
         reason = None
         if req.n_slots > self.adapter.n_slots:
-            reason = (f"policy needs {req.n_slots} slots, engine has "
-                      f"{self.adapter.n_slots}")
+            reason = (
+                f"policy needs {req.n_slots} slots, engine has "
+                f"{self.adapter.n_slots}"
+            )
         elif self.adapter.validate is not None:
             reason = self.adapter.validate(req)
-        rec = RequestRecord(req=req, status=QUEUED,
-                            submitted_at=self.time_fn())
+        rec = RequestRecord(req=req, status=QUEUED, submitted_at=self.time_fn())
         self.requests[req.id] = rec
         self._submitted += 1
         if reason is not None:
@@ -261,7 +262,7 @@ class ServingEngine:
     def _reconcile(self) -> None:
         """Pull lazily-updated queue statuses (deadline expiry happens at
         queue-head inspection) into the engine records."""
-        self.queue.peek()   # prune deadline-expired heads
+        self.queue.peek()  # prune deadline-expired heads
         for rec in list(self.requests.values()):
             if rec.status == QUEUED:
                 status = self.queue.status.get(rec.id, rec.status)
@@ -271,10 +272,12 @@ class ServingEngine:
     def result(self, rid: str) -> dict:
         self._reconcile()
         rec = self.requests[rid]
+        tokens: Any = list(rec.tokens)
+        if rec.tokens and rec.tokens[0].size == 1:
+            tokens = rec.token_ids()
         return {
             "status": rec.status,
-            "tokens": rec.token_ids() if rec.tokens and
-                      rec.tokens[0].size == 1 else list(rec.tokens),
+            "tokens": tokens,
             "n_tokens": len(rec.tokens),
             "ttft_s": rec.ttft,
             "faults": rec.faults,
@@ -297,8 +300,7 @@ class ServingEngine:
         if not self.has_work():
             return 0
         ticks = 0
-        stream = self.exe.stream(self._states, swap=self._swap,
-                                 faults=faults)
+        stream = self.exe.stream(self._states, swap=self._swap, faults=faults)
         try:
             for states, _reports in stream:
                 states = self._postprocess(self._tick_step, states)
@@ -322,7 +324,11 @@ class ServingEngine:
             states = self._override
             self._override = None
         states = self._admit(t, states)
-        self._tick_input = states   # immutable prev buffer (§IV replays)
+        if self.adapter.pre_tick is not None:
+            # paged demand growth runs BEFORE the replay snapshot, so a
+            # §IV replay of this tick sees the same page tables
+            states = self.adapter.pre_tick(states)
+        self._tick_input = states  # immutable prev buffer (§IV replays)
         self._tick_step = t
         return states
 
@@ -331,21 +337,24 @@ class ServingEngine:
         while True:
             req = self.queue.peek()
             if req is None or self.slots.free < req.n_slots:
-                break   # FIFO: no overtaking of a head that doesn't fit
-            if req.n_slots > 1 and self.slots.find_run(req.n_slots) is None:
+                break  # FIFO: no overtaking of a head that doesn't fit
+            cap = self.adapter.has_capacity
+            if cap is not None and not cap(req):
+                break  # paged: not enough free pages for its worst case
+            contig = self.adapter.contiguous_replicas and req.n_slots > 1
+            if contig and self.slots.find_run(req.n_slots) is None:
                 # capacity exists but no adjacent run: defragment instead
                 # of rejecting/stalling the replicated admission
                 states = self._defrag(states, req.n_slots)
             if not self.queue.take(req):
-                continue   # head expired underneath us: re-validate
+                continue  # head expired underneath us: re-validate
             rec = self.requests[req.id]
             out = self.adapter.prefill(req, states)
             slot_state, first = out[0], out[1]
             pending = out[2] if len(out) > 2 else 0
-            slots = self.slots.alloc(req.id, req.n_slots,
-                                     contiguous=req.n_slots > 1)
+            slots = self.slots.alloc(req.id, req.n_slots, contiguous=contig)
             for s in slots:
-                states = self._jit_join(states, slot_state, jnp.int32(s))
+                states = self._ops.join(states, slot_state, s, req=req)
             now = self.time_fn()
             rec.slots = slots
             rec.status = RUNNING
@@ -355,11 +364,9 @@ class ServingEngine:
                 # the prefill's greedy continuation IS the first emitted
                 # token; with a pending tail the first token arrives when
                 # the in-slot walk drains (_postprocess)
-                self._emit(rec,
-                           np.asarray(jax.device_get(first)).reshape(-1),
-                           now)
+                self._emit(rec, np.asarray(jax.device_get(first)).reshape(-1), now)
             status = self._should_finish(rec, now)
-            if status is not None:   # e.g. max_new_tokens == 1
+            if status is not None:  # e.g. max_new_tokens == 1
                 states = self._evict(states, rec, status)
         return states
 
@@ -367,32 +374,35 @@ class ServingEngine:
         """Relocate running requests' slots (bitwise copy + scrub) until
         an ``n``-slot adjacent free run exists."""
         for src, dst in self.slots.defrag_plan(n):
-            states = self._jit_copy(states, jnp.int32(src), jnp.int32(dst))
-            states = self._jit_join(states, self._empty, jnp.int32(src))
-            rid = self.slots.relocate(src, dst)    # manager's bookkeeping
+            states = self._ops.copy(states, src, dst)
+            states = self._ops.scrub(states, src)
+            rid = self.slots.relocate(src, dst)  # manager's bookkeeping
             rec = self.requests.get(rid)
-            if rec is not None:                    # engine's record copy
+            if rec is not None:  # engine's record copy
                 rec.slots[rec.slots.index(src)] = dst
             self._defrag_moves += 1
         return states
 
     # -- per-tick postprocessing: repair -> harvest -> evict ---------------
     def _postprocess(self, t: int, states: dict) -> dict:
-        running = [r for r in self.requests.values()
-                   if r.status == RUNNING]
+        running = [r for r in self.requests.values() if r.status == RUNNING]
         replicated = [r for r in running if r.req.policy.level > 1]
         if replicated:
             states = self._check_replicas(t, states, replicated)
         if running:
-            toks = np.asarray(jax.device_get(
-                self.adapter.read_tokens(states[self.adapter.cell])))
+            toks = np.asarray(
+                jax.device_get(self.adapter.read_tokens(states[self.adapter.cell]))
+            )
             now = self.time_fn()
             for rec in running:
                 if rec.status != RUNNING:
-                    continue   # evicted during repair (should not happen)
+                    continue  # evicted during repair (should not happen)
                 if rec.prefill_remaining > 0:
-                    # this tick consumed one pending prompt token
-                    rec.prefill_remaining -= 1
+                    # this tick consumed up to walk_chunk pending prompt
+                    # tokens (the in-transition k-token walk)
+                    rec.prefill_remaining -= min(
+                        self.adapter.walk_chunk, rec.prefill_remaining
+                    )
                     if rec.prefill_remaining > 0:
                         # still walking: nothing to emit, but a deadline
                         # can expire mid-walk
@@ -408,62 +418,60 @@ class ServingEngine:
                     states = self._evict(states, rec, status)
         return states
 
-    def _check_replicas(self, t: int, states: dict,
-                        recs: list[RequestRecord]) -> dict:
+    def _check_replicas(self, t: int, states: dict, recs: list[RequestRecord]) -> dict:
         """Compare each replicated request's replica-slot fingerprints;
         attribute mismatches to the owning request and repair."""
-        fps = np.asarray(jax.device_get(
-            self._jit_fps(states[self.adapter.cell])))
-        replay = None   # lazy: one §IV replay serves every event this tick
+        fps = np.asarray(
+            jax.device_get(self._ops.fingerprints(states[self.adapter.cell]))
+        )
+        replay = None  # lazy: one §IV replay serves every event this tick
         for rec in recs:
             s = rec.slots
-            eq = [np.array_equal(fps[s[0]], fps[s[i]])
-                  for i in range(1, len(s))]
-            if all(eq) and (len(s) < 3
-                            or np.array_equal(fps[s[1]], fps[s[2]])):
+            eq = [np.array_equal(fps[s[0]], fps[s[i]]) for i in range(1, len(s))]
+            if all(eq) and (len(s) < 3 or np.array_equal(fps[s[1]], fps[s[2]])):
                 continue
             level = rec.req.policy.level
             if level == 3:
-                pairs = [(0, 1, np.array_equal(fps[s[0]], fps[s[1]])),
-                         (0, 2, np.array_equal(fps[s[0]], fps[s[2]])),
-                         (1, 2, np.array_equal(fps[s[1]], fps[s[2]]))]
+                pairs = [
+                    (0, 1, np.array_equal(fps[s[0]], fps[s[1]])),
+                    (0, 2, np.array_equal(fps[s[0]], fps[s[2]])),
+                    (1, 2, np.array_equal(fps[s[1]], fps[s[2]])),
+                ]
                 agree = [(i, j) for i, j, ok in pairs if ok]
                 if agree:
                     i, j = agree[0]
                     bad = ({0, 1, 2} - {i, j}).pop()
                     # real damage: elements of the struck replica slot
                     # differing from a majority slot (pre-repair)
-                    dmg = float(jax.device_get(self._jit_damage(
-                        states, jnp.int32(s[i]), jnp.int32(s[bad]))))
-                    states = self._jit_copy(states, jnp.int32(s[i]),
-                                            jnp.int32(s[bad]))
+                    dmg = self._ops.damage(states, s[i], s[bad])
+                    states = self._ops.copy(states, s[i], s[bad])
                     self._attribute(rec, t, [bad], level, dmg)
                     continue
-                bad = [0, 1, 2]   # triple divergence: fall through to replay
+                bad = [0, 1, 2]  # triple divergence: fall through to replay
             else:
-                bad = None        # DMR: symmetric — the replay decides
+                bad = None  # DMR: symmetric — the replay decides
             if replay is None:
                 # paper §IV: "a third equal transition should be executed
                 # to decide between the two possible outcomes" — replay
                 # the tick (no armed fault) from the immutable pre-tick
                 # buffer; pure_step has no ledger/counter side effects
                 replay, _ = self.exe.pure_step(self._tick_input, t)
-                rfps = np.asarray(jax.device_get(
-                    self._jit_fps(replay[self.adapter.cell])))
+                rfps = np.asarray(
+                    jax.device_get(self._ops.fingerprints(replay[self.adapter.cell]))
+                )
             if bad is None:
-                bad = [i for i, sl in enumerate(s)
-                       if not np.array_equal(fps[sl], rfps[sl])]
-            dmg = sum(
-                float(jax.device_get(self._jit_damage_vs(
-                    states, replay, jnp.int32(s[b]))))
-                for b in bad)
+                bad = [
+                    i for i, sl in enumerate(s) if not np.array_equal(fps[sl], rfps[sl])
+                ]
+            dmg = sum(self._ops.damage_vs(states, replay, s[b]) for b in bad)
             for sl in s:
-                states = self._jit_adopt(states, replay, jnp.int32(sl))
+                states = self._ops.adopt(states, replay, sl)
             self._attribute(rec, t, bad, level, dmg)
         return states
 
-    def _attribute(self, rec: RequestRecord, t: int, bad: list[int],
-                   level: int, damage: float) -> None:
+    def _attribute(
+        self, rec: RequestRecord, t: int, bad: list[int], level: int, damage: float
+    ) -> None:
         """One detected strike, charged to the owning request in the
         engine ledger (per-request fault accounting; repeated offenders
         surface in ``permanent_fault_suspects`` keyed by request).
@@ -477,22 +485,21 @@ class ServingEngine:
         per = [0.0] * level
         for b in bad:
             per[b] = 1.0
-        self.ledger.update(t, {rec.id: {
+        entry = {
             "events": 1.0,
             "mismatch_elems": max(damage, 1.0),
             "per_replica": per,
-        }})
+        }
+        self.ledger.update(t, {rec.id: entry})
 
     # -- emit / finish / evict --------------------------------------------
-    def _emit(self, rec: RequestRecord, token: np.ndarray,
-              now: float) -> None:
+    def _emit(self, rec: RequestRecord, token: np.ndarray, now: float) -> None:
         rec.tokens.append(token)
         self._tokens_out += 1
         if rec.ttft is None:
             rec.ttft = now - rec.submitted_at
 
-    def _should_finish(self, rec: RequestRecord,
-                       now: float) -> Optional[str]:
+    def _should_finish(self, rec: RequestRecord, now: float) -> Optional[str]:
         if rec.cancel_requested:
             return CANCELLED
         # DONE checks come BEFORE the deadline: a request whose final
@@ -501,9 +508,9 @@ class ServingEngine:
         # the deadline passed within the same tick
         if len(rec.tokens) >= rec.req.max_new_tokens:
             return DONE
-        if (rec.req.stop_token is not None and rec.tokens
-                and int(rec.tokens[-1].reshape(-1)[0]) == rec.req.stop_token):
-            return DONE
+        if rec.req.stop_token is not None and rec.tokens:
+            if int(rec.tokens[-1].reshape(-1)[0]) == rec.req.stop_token:
+                return DONE
         if rec.req.deadline is not None and now >= rec.req.deadline:
             return EXPIRED
         return None
@@ -512,7 +519,7 @@ class ServingEngine:
         """Leave: scrub the request's slots back to empty (inactive mask,
         zeroed cache) and return them to the free pool."""
         for s in self.slots.release(rec.id):
-            states = self._jit_join(states, self._empty, jnp.int32(s))
+            states = self._ops.scrub(states, s)
         self._finish_record(rec, status)
         return states
 

@@ -25,6 +25,7 @@ the whole prompt.  ``prefill_chunk=0`` is the degenerate one-chunk case
 The engine surfaces ``prefill_compiles`` / ``prefill_buckets`` in
 ``metrics()`` via the adapter's ``stats`` hook.
 """
+
 from __future__ import annotations
 
 from typing import Optional
@@ -38,6 +39,9 @@ from repro.models.config import ModelConfig
 from repro.models.lm_cells import (
     ServeConfig,
     make_slot_serve_program,
+    paged_pool_pages,
+    paged_serving_supported,
+    paged_slot_decoder_init,
     prefill_bucket_ladder,
     prefill_slot_state,
     slot_decoder_init,
@@ -48,13 +52,17 @@ from .request import Request
 from .slots import infer_slot_axes
 
 
-def lm_engine_parts(
-    cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL,
-):
+def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
     """(program, adapter) for ``miso.serve``: the resident slot-masked LM
     serve program plus the glue the engine needs to run it."""
     prog = make_slot_serve_program(cfg, scfg, ctx)
-    axes = infer_slot_axes(lambda b: slot_decoder_init(cfg, b, scfg.max_len))
+    # paged KV: same gate the program builder uses — unsupported archs
+    # silently keep the dense cache (mirrors the bucket carve-outs below)
+    paged = scfg.paged and paged_serving_supported(cfg)
+    if paged:
+        axes = None  # paged axes are inferred below, with the page pool
+    else:
+        axes = infer_slot_axes(lambda b: slot_decoder_init(cfg, b, scfg.max_len))
 
     # bucket padding is maskable only for full-attention caches:
     # recurrent (mamba) segments fold padding into their state; the
@@ -62,8 +70,9 @@ def lm_engine_parts(
     # sliding-window fill keeps the trailing W positions of the PADDED
     # sequence, evicting real prompt KV the prompt_len scrub cannot
     # restore — all fall back to exact-length prefill compiles
-    bucketable = (cfg.mixer_type != "mamba2" and not cfg.n_vision_tokens
-                  and not cfg.window)
+    bucketable = (
+        cfg.mixer_type != "mamba2" and not cfg.n_vision_tokens and not cfg.window
+    )
     chunkable = not cfg.n_vision_tokens
     ladder = prefill_bucket_ladder(scfg) if bucketable else ()
     chunk = scfg.prefill_chunk if chunkable else 0
@@ -77,18 +86,25 @@ def lm_engine_parts(
     # so one compile covers every prompt length that rounds up to it.
     # On the exact-length fallback the head is never padded, so
     # prompt_len masking is unnecessary (and recurrent archs reject it)
-    jit_prefill = jax.jit(
-        lambda params, head, plen, pend, npend: prefill_slot_state(
-            cfg, scfg, params, head, ctx=ctx,
+    def _prefill_impl(params, head, plen, pend, npend):
+        return prefill_slot_state(
+            cfg,
+            scfg,
+            params,
+            head,
+            ctx=ctx,
             prompt_len=plen if bucketable else None,
-            pending=pend, n_pending=npend))
+            pending=pend,
+            n_pending=npend,
+        )
+
+    jit_prefill = jax.jit(_prefill_impl)
     buckets_used: set = set()
 
     tail_dims = (cfg.n_codebooks,) if cfg.n_codebooks > 1 else ()
 
     def prefill(req: Request, states: dict):
-        prompt = np.asarray(req.prompt, np.int32).reshape(
-            (-1,) + tail_dims)
+        prompt = np.asarray(req.prompt, np.int32).reshape((-1,) + tail_dims)
         plen = int(prompt.shape[0])
         if chunk <= 0 or plen <= chunk:
             c0 = plen
@@ -107,9 +123,10 @@ def lm_engine_parts(
         pend = np.zeros((scfg.max_len,) + tail_dims, np.int32)
         n_pending = plen - c0
         pend[:n_pending] = prompt[c0:]
+        params = states["weights"]["params"]
         slot_state, first = jit_prefill(
-            states["weights"]["params"], head, jnp.int32(c0), pend,
-            jnp.int32(n_pending))
+            params, head, jnp.int32(c0), pend, jnp.int32(n_pending)
+        )
         buckets_used.add(bucket)
         if n_pending:
             # the head continuation is a truncated-prompt token: the real
@@ -121,18 +138,70 @@ def lm_engine_parts(
     def validate(req: Request) -> Optional[str]:
         plen = int(np.asarray(req.prompt).shape[0])
         if plen + req.max_new_tokens > scfg.max_len and not cfg.window:
-            return (f"prompt {plen} + budget {req.max_new_tokens} exceeds "
-                    f"cache capacity {scfg.max_len}")
+            return (
+                f"prompt {plen} + budget {req.max_new_tokens} exceeds "
+                f"cache capacity {scfg.max_len}"
+            )
         # no pending-capacity check: prefill() grows the head chunk so
         # the uncovered tail never exceeds the max_len pending segment
         return None
 
+    # paged-KV assembly: page table + surgery + demand-growth pre-tick
+    table = None
+    surgery = None
+    pre_tick = None
+    has_capacity = None
+    if paged:
+        from .paging import (
+            PageTable,
+            infer_paged_axes,
+            make_pre_tick,
+            paged_surgery,
+        )
+
+        psize = scfg.page_size
+        n_pages = paged_pool_pages(scfg)
+        table = PageTable(n_pages, psize, scfg.max_len // psize)
+        axes = infer_paged_axes(
+            lambda b: paged_slot_decoder_init(cfg, b, scfg.max_len, psize, n_pages)
+        )
+
+        def reserve_fn(req: Request) -> int:
+            # worst-case pages of ONE replica slot: the request can write
+            # positions [0, plen + max_new) at most (capped by the cache)
+            return table.pages_for(
+                min(req.prompt_len + req.max_new_tokens, scfg.max_len)
+            )
+
+        # the scrub template only reads non-pool leaves: a 1-page pool
+        # keeps it tiny
+        scrub_tmpl = paged_slot_decoder_init(cfg, 1, scfg.max_len, psize, 1)
+        surgery = paged_surgery(
+            table, "decoder", axes, scrub_tmpl, reserve_fn=reserve_fn
+        )
+        pre_tick = make_pre_tick(table, "decoder", scfg.batch, walk_chunk=max(1, chunk))
+
+        def has_capacity(req: Request) -> bool:
+            return table.can_admit(req.n_slots * reserve_fn(req))
+
     def stats() -> dict:
-        return {
+        out = {
             "prefill_compiles": len(buckets_used),
             "prefill_buckets": list(ladder) if ladder else None,
             "prefill_chunk": chunk,
+            "paged": paged,
         }
+        if table is not None:
+            out["pages_total"] = table.n_pages
+            out["pages_free"] = table.free_pages
+            out["page_faults"] = table.page_faults
+            out["page_size"] = table.page_size
+        return out
+
+    def make_empty():
+        if paged:
+            return paged_slot_decoder_init(cfg, 1, scfg.max_len, scfg.page_size, 1)
+        return slot_decoder_init(cfg, 1, scfg.max_len)
 
     adapter = SlotAdapter(
         cell="decoder",
@@ -140,8 +209,13 @@ def lm_engine_parts(
         slot_axes=axes,
         prefill=prefill,
         read_tokens=lambda dec: dec["tokens"],
-        make_empty=lambda: slot_decoder_init(cfg, 1, scfg.max_len),
+        make_empty=make_empty,
         validate=validate,
         stats=stats,
+        surgery=surgery,
+        has_capacity=has_capacity,
+        pre_tick=pre_tick,
+        walk_chunk=max(1, chunk),
+        contiguous_replicas=not paged,
     )
     return prog, adapter

@@ -11,6 +11,7 @@ anyone else's latency or bytes.
 request whose deadline passes while queued is never started), and
 cancellation of queued work.
 """
+
 from __future__ import annotations
 
 import collections
@@ -66,19 +67,27 @@ class Request:
     def n_slots(self) -> int:
         return self.policy.level
 
+    @property
+    def prompt_len(self) -> int:
+        """Leading-axis length of the prompt payload (LM: token count).
+        The paged-KV admission path sizes its worst-case page reservation
+        from this plus ``max_new_tokens``."""
+        return len(self.prompt)
+
 
 class RequestQueue:
     """Bounded FIFO admission queue with deadlines and cancellation."""
 
-    def __init__(self, max_depth: int = 64,
-                 time_fn: Callable[[], float] = time.monotonic):
+    def __init__(
+        self, max_depth: int = 64, time_fn: Callable[[], float] = time.monotonic
+    ):
         self.max_depth = max_depth
         self.time_fn = time_fn
         self._q: collections.deque[Request] = collections.deque()
         self.status: dict[str, str] = {}
         self.rejected = 0
         self.expired = 0
-        self._deadlines = 0   # deadline-bearing entries currently queued
+        self._deadlines = 0  # deadline-bearing entries currently queued
 
     @property
     def depth(self) -> int:

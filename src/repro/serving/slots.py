@@ -16,6 +16,7 @@ has the two halves of that:
 Everything here is model-agnostic: the LM adapter and the toy test
 programs use the same helpers.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -24,7 +25,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.redundancy import fingerprint
+from repro.core.redundancy import bit_mismatch_elems, fingerprint
 
 Pytree = Any
 
@@ -32,8 +33,9 @@ Pytree = Any
 # --------------------------------------------------------------------------
 # slot-axis inference
 # --------------------------------------------------------------------------
-def infer_slot_axes(make_state: Callable[[int], Pytree],
-                    w1: int = 2, w2: int = 3) -> Pytree:
+def infer_slot_axes(
+    make_state: Callable[[int], Pytree], w1: int = 2, w2: int = 3
+) -> Pytree:
     """Per-leaf slot (batch) axis of a slotted cell state, found
     structurally: evaluate the state's shape at two widths and locate the
     single axis that scales with the width.  Shape-only (``eval_shape``),
@@ -44,13 +46,13 @@ def infer_slot_axes(make_state: Callable[[int], Pytree],
     s2 = jax.eval_shape(lambda: make_state(w2))
 
     def ax(a, b):
-        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
-                 if x != y]
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
         if len(diffs) != 1:
             raise ValueError(
                 f"leaf {a.shape}/{b.shape} has {len(diffs)} width-dependent "
                 "axes; a slotted cell state needs exactly one slot axis "
-                "per leaf")
+                "per leaf"
+            )
         return diffs[0]
 
     return jax.tree.map(ax, s1, s2)
@@ -65,34 +67,36 @@ def _bcast(mask: jax.Array, ndim: int, ax: int) -> jax.Array:
 # --------------------------------------------------------------------------
 # pure slot surgery (jit these with ``axes`` closed over)
 # --------------------------------------------------------------------------
-def mask_slots(active: jax.Array, new: Pytree, old: Pytree,
-               axes: Pytree) -> Pytree:
+def mask_slots(active: jax.Array, new: Pytree, old: Pytree, axes: Pytree) -> Pytree:
     """Per-slot select: active slots take ``new``, inactive keep ``old``
     bit-for-bit.  The writeback gate of the slot-masked decoder."""
     return jax.tree.map(
-        lambda n, o, ax: jnp.where(_bcast(active, n.ndim, ax), n, o),
-        new, old, axes)
+        lambda n, o, ax: jnp.where(_bcast(active, n.ndim, ax), n, o), new, old, axes
+    )
 
 
-def join_slot(state: Pytree, slot_state: Pytree, slot: jax.Array,
-              axes: Pytree) -> Pytree:
+def join_slot(
+    state: Pytree, slot_state: Pytree, slot: jax.Array, axes: Pytree
+) -> Pytree:
     """Scatter a width-1 slot state into batch slot ``slot`` (traced index
     is fine — one compile covers every slot)."""
-    return jax.tree.map(
-        lambda dst, src, ax: jax.lax.dynamic_update_slice_in_dim(
-            dst, src.astype(dst.dtype), slot, axis=ax),
-        state, slot_state, axes)
+
+    def put(dst, src, ax):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=ax
+        )
+
+    return jax.tree.map(put, state, slot_state, axes)
 
 
 def read_slot(state: Pytree, slot: jax.Array, axes: Pytree) -> Pytree:
     """The width-1 view of batch slot ``slot`` (inverse of ``join_slot``)."""
     return jax.tree.map(
-        lambda x, ax: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax),
-        state, axes)
+        lambda x, ax: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax), state, axes
+    )
 
 
-def copy_slot(state: Pytree, src: jax.Array, dst: jax.Array,
-              axes: Pytree) -> Pytree:
+def copy_slot(state: Pytree, src: jax.Array, dst: jax.Array, axes: Pytree) -> Pytree:
     """Copy slot ``src`` over slot ``dst`` — TMR repair: re-synchronize a
     minority replica slot from a majority one (exact, bitwise)."""
     return join_slot(state, read_slot(state, src, axes), dst, axes)
@@ -106,6 +110,91 @@ def slot_fingerprints(state: Pytree, axes: Pytree) -> jax.Array:
     request granularity, at O(B * 16 bytes) host traffic."""
     moved = jax.tree.map(lambda x, ax: jnp.moveaxis(x, ax, 0), state, axes)
     return jax.vmap(fingerprint)(moved)
+
+
+# --------------------------------------------------------------------------
+# the surgery protocol: how the engine cuts state in and out of slots
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SlotSurgery:
+    """The engine's slot-state operations, bundled so a state layout can
+    swap in its own implementations (``serving/paging.py`` routes these
+    through a page table; ``default_surgery`` is the dense whole-leaf
+    layout the helpers above implement directly).
+
+    All slot arguments are host ints; ``damage``/``damage_vs`` return
+    host floats (mismatched elements, temporal-lockstep units).
+
+      join(states, slot_state, slot, req=None)  scatter a width-1 state in
+      scrub(states, slot)                       evict: slot back to empty
+      copy(states, src, dst)                    bitwise slot copy (repair)
+      adopt(states, other, slot)                take ``other``'s slot view
+      fingerprints(cell_state) -> (B, 4) u32    per-slot 128-bit fps
+      damage(states, a, b) -> float             mismatch between two slots
+      damage_vs(states, other, slot) -> float   mismatch vs another state
+    """
+
+    join: Callable[..., dict]
+    scrub: Callable[[dict, int], dict]
+    copy: Callable[[dict, int, int], dict]
+    adopt: Callable[[dict, dict, int], dict]
+    fingerprints: Callable[[Pytree], jax.Array]
+    damage: Callable[[dict, int, int], float]
+    damage_vs: Callable[[dict, dict, int], float]
+
+
+def default_surgery(
+    cell: str, axes: Pytree, make_empty: Callable[[], Pytree]
+) -> SlotSurgery:
+    """Dense-layout surgery: every leaf is whole-per-slot, so join/copy/
+    adopt are the pure helpers above, jitted once with ``axes`` closed
+    over (traced slot indices — one compile covers every slot)."""
+    _join = jax.jit(
+        lambda st, ss, slot: {**st, cell: join_slot(st[cell], ss, slot, axes)}
+    )
+    _copy = jax.jit(
+        lambda st, src, dst: {**st, cell: copy_slot(st[cell], src, dst, axes)}
+    )
+
+    def _adopt_impl(st, other, slot):
+        taken = read_slot(other[cell], slot, axes)
+        return {**st, cell: join_slot(st[cell], taken, slot, axes)}
+
+    _adopt = jax.jit(_adopt_impl)
+    _fps = jax.jit(lambda dec: slot_fingerprints(dec, axes))
+
+    # real damage accounting: mismatched ELEMENTS between two replica
+    # slots (same semantics as temporal lockstep's bitwise compare), not
+    # fingerprint words
+    def _damage_impl(st, a, b):
+        return bit_mismatch_elems(
+            read_slot(st[cell], a, axes), read_slot(st[cell], b, axes)
+        )
+
+    def _damage_vs_impl(st, other, slot):
+        return bit_mismatch_elems(
+            read_slot(st[cell], slot, axes), read_slot(other[cell], slot, axes)
+        )
+
+    _damage = jax.jit(_damage_impl)
+    _damage_vs = jax.jit(_damage_vs_impl)
+
+    def _damage_host(st, a, b):
+        return float(jax.device_get(_damage(st, jnp.int32(a), jnp.int32(b))))
+
+    def _damage_vs_host(st, other, slot):
+        return float(jax.device_get(_damage_vs(st, other, jnp.int32(slot))))
+
+    empty = make_empty()
+    return SlotSurgery(
+        join=lambda st, ss, slot, req=None: _join(st, ss, jnp.int32(slot)),
+        scrub=lambda st, slot: _join(st, empty, jnp.int32(slot)),
+        copy=lambda st, src, dst: _copy(st, jnp.int32(src), jnp.int32(dst)),
+        adopt=lambda st, other, slot: _adopt(st, other, jnp.int32(slot)),
+        fingerprints=_fps,
+        damage=_damage_host,
+        damage_vs=_damage_vs_host,
+    )
 
 
 # --------------------------------------------------------------------------
@@ -154,8 +243,7 @@ class SlotManager:
     def owner(self, slot: int) -> Optional[str]:
         return self._owner.get(slot)
 
-    def alloc(self, rid: str, n: int,
-              contiguous: bool = False) -> Optional[list[int]]:
+    def alloc(self, rid: str, n: int, contiguous: bool = False) -> Optional[list[int]]:
         """n free slots for request ``rid``; None if the batch can't fit
         it right now.  ``contiguous=True`` (replicated requests) requires
         one adjacent run of n slots — run ``defrag_plan``/``relocate``
@@ -176,7 +264,7 @@ class SlotManager:
         self._slots_of[rid] = got
         for s in got:
             self._owner[s] = rid
-        return list(got)   # caller-owned copy: relocate() mutates ours
+        return list(got)  # caller-owned copy: relocate() mutates ours
 
     def find_run(self, n: int) -> Optional[int]:
         """Start index of the leftmost run of ``n`` adjacent free slots."""
@@ -206,8 +294,7 @@ class SlotManager:
 
         def cost(start):
             occ = [s for s in range(start, start + n) if s not in free]
-            repl = sum(1 for s in occ
-                       if len(self._slots_of[self._owner[s]]) > 1)
+            repl = sum(1 for s in occ if len(self._slots_of[self._owner[s]]) > 1)
             return (repl, len(occ)), occ
 
         best_cost, best_start, best_occ = (n + 1, n + 1), 0, list(range(n))
@@ -215,8 +302,7 @@ class SlotManager:
             c, occ = cost(start)
             if c < best_cost:
                 best_cost, best_start, best_occ = c, start, occ
-        dsts = [s for s in sorted(free)
-                if s < best_start or s >= best_start + n]
+        dsts = [s for s in sorted(free) if s < best_start or s >= best_start + n]
         return list(zip(best_occ, dsts))
 
     def relocate(self, src: int, dst: int) -> str:
