@@ -22,6 +22,10 @@ This walkthrough compiles one tiny program four ways:
      execution repairs it,
   4. TMR on the lockstep back-end: corrected in-graph by majority vote.
 
+Serving (continuous batching, per-request dependability, paged KV,
+speculative decoding) has its own walkthrough:
+examples/serve_walkthrough.py.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
       PYTHONPATH=src python examples/quickstart.py --backend lockstep_pallas
       PYTHONPATH=src python examples/quickstart.py --placement spatial
@@ -48,17 +52,24 @@ args = argparse.ArgumentParser()
 args.add_argument("--backend", default="lockstep",
                   choices=("lockstep", "lockstep_pallas"),
                   help="lock-step flavor (both are bitwise-identical)")
-args.add_argument("--engine", action="store_true",
-                  help="also run section 5: the continuous-batching "
-                       "serving engine (miso.serve)")
 args.add_argument("--placement", default="temporal",
                   choices=("temporal", "spatial"),
                   help="replica placement for section 4: temporal (same "
                        "devices) or spatial (one replica per pod)")
 _ns = args.parse_args()
 BACKEND = _ns.backend
-ENGINE = _ns.engine
 PLACEMENT = _ns.placement
+
+print("""sections:
+  1. cells + program     a heat rod (SIMD), a probe (MIMD), an
+                         independent lfsr
+  2. lockstep            one compile call, one in-graph scan
+  3. backend="auto"      resolves to the barrier-free wavefront schedule
+  4. DMR / TMR           an injected bit flip, detected and repaired
+  4b. spatial placement  (--placement spatial) one replica per pod
+  5. serving             -> examples/serve_walkthrough.py (continuous
+                         batching, paged KV, speculative decoding)
+""")
 if PLACEMENT == "spatial":
     # spatial replicas need one device per pod; force a 2-device host
     # platform BEFORE jax initializes (real deployments have real pods).
@@ -210,125 +221,6 @@ print("\nThe same program scales to the 512-chip mesh unchanged — see "
       "miso.register_backend without touching this file (the Pallas-fused "
       "lock-step plugged in exactly that way).")
 
-# ---------------------------------------------------------------------------
-# 5. (--engine) Serving: miso.serve() multiplexes independent requests onto
-#    ONE resident slot-masked decoder via Executor.stream — continuous
-#    batching with per-REQUEST dependability (a request may ask for DMR/TMR
-#    and pays for it in replica slots; nobody else pays anything).
-#
-#    The LM adapter (repro.serving.lm.lm_engine_parts) additionally buckets
-#    and chunks PREFILL via ServeConfig flags:
-#      prefill_bucket_min=16  -- prompts pad to a geometric compile ladder
-#                                (16/32/.../max_len): jit_prefill compiles
-#                                once per BUCKET, not per distinct length
-#                                (engine.metrics()["prefill_compiles"]);
-#      prefill_chunk=8        -- the out-of-band prefill forward is bounded
-#                                to 8 tokens; a long prompt's tail joins the
-#                                resident batch immediately and is walked
-#                                up to 8 tokens per tick INSIDE the
-#                                slot-masked transition, so admission never
-#                                stalls the running requests' ticks (flat
-#                                short-request TTFT under mixed-length load);
-#      paged=True, page_size=16 -- paged KV cache (section 5b below).
-#    See examples/serve_lm.py and benchmarks/run.py::bench_serving.
-# ---------------------------------------------------------------------------
-if ENGINE:
-    from repro.serving import (
-        Request,
-        SlotAdapter,
-        infer_slot_axes,
-        mask_slots,
-    )
-
-    def slot_init(b):
-        return {"x": jnp.zeros((b,), jnp.float32),
-                "tokens": jnp.zeros((b, 1), jnp.int32),
-                "active": jnp.zeros((b,), jnp.bool_),
-                "pos": jnp.zeros((b,), jnp.int32)}
-
-    axes = infer_slot_axes(slot_init)
-
-    def slot_transition(prev):
-        st = prev["dec"]
-        x = st["x"] * prev["w"]["m"] + st["pos"].astype(jnp.float32)
-        new = {"x": x,
-               "tokens": (jnp.abs(x) * 64).astype(jnp.int32)[:, None] % 997,
-               "active": st["active"], "pos": st["pos"] + 1}
-        # the writeback gate: inactive slots are bit-frozen, so requests
-        # joining/leaving other slots can never perturb this one
-        return mask_slots(st["active"], new, st, axes)
-
-    sprog = miso.MisoProgram()
-    sprog.add(miso.CellType("w", lambda k: {"m": jnp.float32(1.125)},
-                            lambda prev: prev["w"]))
-    sprog.add(miso.CellType("dec", lambda k: slot_init(6), slot_transition,
-                            reads=("w",), instances=6))
-
-    def prefill(req, states):
-        x0 = jnp.sum(jnp.asarray(req.prompt, jnp.float32)) * 0.125
-        tok0 = (jnp.abs(x0) * 64).astype(jnp.int32)[None, None] % 997
-        return {"x": x0[None],
-                "tokens": tok0,
-                "active": jnp.ones((1,), bool),
-                "pos": jnp.full((1,), len(req.prompt), jnp.int32)}, tok0
-
-    engine = miso.serve(sprog, SlotAdapter(
-        cell="dec", n_slots=6, slot_axes=axes, prefill=prefill,
-        read_tokens=lambda d: d["tokens"],
-        make_empty=lambda: slot_init(1)))
-    engine.start(jax.random.PRNGKey(0))
-    plain = Request(prompt=[3.0, 1.0], max_new_tokens=6)
-    guarded = Request(prompt=[4.0, 1.0], max_new_tokens=6,
-                      policy=miso.RedundancyPolicy(level=2))
-    engine.submit(plain)
-    engine.pump(max_ticks=2)      # plain is mid-decode when guarded joins
-    engine.submit(guarded)
-    engine.pump()
-    em = engine.metrics()
-    print(f"\nengine     : {em['done']}/{em['submitted']} requests done, "
-          f"{em['tokens_out']} tokens, ttft p50={em['ttft_p50_s']:.4f}s; "
-          f"per-request policies cost only their owner "
-          f"(plain={engine.result(plain.id)['slots']} slot, "
-          f"dmr={engine.result(guarded.id)['slots']} slots)")
-
-    # -----------------------------------------------------------------------
-    # 5b. Paged KV cache (the real LM adapter): ServeConfig(paged=True)
-    #     swaps the dense per-slot max_len cache for ONE shared pool of
-    #     fixed-size pages (repro/serving/paging.py).  Admission reserves a
-    #     worst-case page count, decode demand-maps pages just ahead of the
-    #     write head (page_faults), eviction is a pure page-table release —
-    #     and attention reads K/V through the page table with the fused
-    #     Pallas kernels of kernels/paged_decode.py.  Tokens are BITWISE
-    #     identical to the dense cache (none/DMR/TMR; tests/test_paging.py),
-    #     while a fixed cache-byte budget holds several times the resident
-    #     requests (benchmarks/run.py "fixed_budget" case).
-    # -----------------------------------------------------------------------
-    import dataclasses as dc
-
-    import numpy as np
-
-    from repro.configs import get_reduced
-    from repro.models.lm_cells import ServeConfig
-    from repro.serving.lm import lm_engine_parts
-
-    cfg = get_reduced("internlm2-1.8b")
-    cfg = dc.replace(cfg, d_model=32, n_layers=2, d_ff=64, n_heads=2,
-                     n_kv_heads=1, vocab_size=128)
-    lm_prog, lm_adapter = lm_engine_parts(
-        cfg, ServeConfig(batch=4, max_len=32, paged=True, page_size=8))
-    lm = miso.serve(lm_prog, lm_adapter)
-    lm.start(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    lm_reqs = [
-        Request(prompt=rng.integers(0, cfg.vocab_size, size=4)
-                .astype(np.int32), max_new_tokens=4,
-                policy=miso.RedundancyPolicy(level=lv))
-        for lv in (1, 2)          # the DMR request's replicas share the pool
-    ]
-    for r in lm_reqs:
-        lm.submit(r)
-    lm.pump()
-    pm = lm.metrics()
-    print(f"paged LM   : {pm['done']}/{pm['submitted']} requests done, "
-          f"pages {pm['pages_free']}/{pm['pages_total']} free after drain "
-          f"(page_size={pm['page_size']}, page_faults={pm['page_faults']})")
+print("\nNext: examples/serve_walkthrough.py — the same cells, served: "
+      "continuous batching with per-request DMR/TMR, paged KV, and "
+      "speculative decoding.")

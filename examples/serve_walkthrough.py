@@ -1,0 +1,232 @@
+"""Serving walkthrough: the continuous batcher, end to end.
+
+``miso.serve()`` multiplexes independent requests onto ONE resident
+slot-masked decoder program driven through ``Executor.stream`` —
+continuous batching with per-REQUEST dependability (a request may ask
+for DMR/TMR and pays for it in replica slots; nobody else pays
+anything).  Full lifecycle documentation: docs/serving.md.
+
+Three sections, each runnable on a laptop CPU:
+
+  1. adapter mechanics — a minimal slotted program (not an LM) wired to
+     the engine through a SlotAdapter: the isolation invariant, slot
+     join/leave, per-request policies.
+  2. the LM engine — ``repro.serving.lm.lm_engine_parts`` with bucketed
+     + chunked prefill and the paged KV pool (ServeConfig(paged=True)).
+  3. speculative decoding — ``SpecConfig``: k tokens per tick through
+     the verify walk, bitwise-identical to plain greedy decode.
+
+Run:  PYTHONPATH=src python examples/serve_walkthrough.py
+      PYTHONPATH=src python examples/serve_walkthrough.py --smoke
+"""
+import argparse
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api as miso
+from repro.configs import get_reduced
+from repro.serving import (
+    Request,
+    SlotAdapter,
+    infer_slot_axes,
+    mask_slots,
+)
+from repro.serving.lm import lm_engine_parts
+
+ap = argparse.ArgumentParser()
+ap.add_argument(
+    "--smoke",
+    action="store_true",
+    help="shrink token budgets so the walkthrough finishes in CI time",
+)
+ns = ap.parse_args()
+DECODE = 4 if ns.smoke else 8
+
+# ---------------------------------------------------------------------------
+# 1. Adapter mechanics: ANY slot-masked cell program can be served.  The
+#    SlotAdapter tells the engine which cell holds per-slot state, how to
+#    prefill one slot out-of-band, and how to read freshly decoded tokens.
+# ---------------------------------------------------------------------------
+
+
+def slot_init(b):
+    return {
+        "x": jnp.zeros((b,), jnp.float32),
+        "tokens": jnp.zeros((b, 1), jnp.int32),
+        "active": jnp.zeros((b,), jnp.bool_),
+        "pos": jnp.zeros((b,), jnp.int32),
+    }
+
+
+axes = infer_slot_axes(slot_init)
+
+
+def slot_transition(prev):
+    st = prev["dec"]
+    x = st["x"] * prev["w"]["m"] + st["pos"].astype(jnp.float32)
+    new = {
+        "x": x,
+        "tokens": (jnp.abs(x) * 64).astype(jnp.int32)[:, None] % 997,
+        "active": st["active"],
+        "pos": st["pos"] + 1,
+    }
+    # the writeback gate: inactive slots are bit-frozen, so requests
+    # joining/leaving other slots can never perturb this one
+    return mask_slots(st["active"], new, st, axes)
+
+
+sprog = miso.MisoProgram()
+sprog.add(
+    miso.CellType("w", lambda k: {"m": jnp.float32(1.125)}, lambda prev: prev["w"])
+)
+sprog.add(
+    miso.CellType(
+        "dec", lambda k: slot_init(6), slot_transition, reads=("w",), instances=6
+    )
+)
+
+
+def prefill(req, states):
+    x0 = jnp.sum(jnp.asarray(req.prompt, jnp.float32)) * 0.125
+    tok0 = (jnp.abs(x0) * 64).astype(jnp.int32)[None, None] % 997
+    return {
+        "x": x0[None],
+        "tokens": tok0,
+        "active": jnp.ones((1,), bool),
+        "pos": jnp.full((1,), len(req.prompt), jnp.int32),
+    }, tok0
+
+
+engine = miso.serve(
+    sprog,
+    SlotAdapter(
+        cell="dec",
+        n_slots=6,
+        slot_axes=axes,
+        prefill=prefill,
+        read_tokens=lambda d: d["tokens"],
+        make_empty=lambda: slot_init(1),
+    ),
+)
+engine.start(jax.random.PRNGKey(0))
+plain = Request(prompt=[3.0, 1.0], max_new_tokens=6)
+guarded = Request(
+    prompt=[4.0, 1.0],
+    max_new_tokens=6,
+    policy=miso.RedundancyPolicy(level=2),
+)
+engine.submit(plain)
+engine.pump(max_ticks=2)  # plain is mid-decode when guarded joins
+engine.submit(guarded)
+engine.pump()
+em = engine.metrics()
+print(
+    f"adapter    : {em['done']}/{em['submitted']} requests done, "
+    f"{em['tokens_out']} tokens, ttft p50={em['ttft_p50_s']:.4f}s; "
+    f"per-request policies cost only their owner "
+    f"(plain={engine.result(plain.id)['slots']} slot, "
+    f"dmr={engine.result(guarded.id)['slots']} slots)"
+)
+
+# ---------------------------------------------------------------------------
+# 2. The LM engine: lm_engine_parts packages a real transformer as the
+#    resident decoder.  ServeConfig flags used here:
+#      prefill_bucket_min=8   -- prompts pad to a geometric compile ladder
+#                                (8/16/.../max_len): jit_prefill compiles
+#                                once per BUCKET, not per distinct length;
+#      prefill_chunk=4        -- the out-of-band prefill forward is bounded
+#                                to 4 tokens; a long prompt's tail walks up
+#                                to 4 tokens per tick INSIDE the resident
+#                                transition, so admission never stalls the
+#                                running requests;
+#      paged=True, page_size=8 -- the dense per-slot max_len cache becomes
+#                                ONE shared pool of fixed-size KV pages:
+#                                admission reserves a worst-case page
+#                                count, decode demand-maps ahead of the
+#                                write head (page_faults), eviction is a
+#                                page-table release.  Tokens are BITWISE
+#                                identical to the dense cache
+#                                (tests/test_paging.py).
+# ---------------------------------------------------------------------------
+cfg = get_reduced("internlm2-1.8b")
+cfg = dc.replace(
+    cfg, d_model=32, n_layers=2, d_ff=64, n_heads=2, n_kv_heads=1, vocab_size=128
+)
+scfg = miso.ServeConfig(
+    batch=4, max_len=32, prefill_bucket_min=8, prefill_chunk=4, paged=True, page_size=8
+)
+lm_prog, lm_adapter = lm_engine_parts(cfg, scfg)
+lm = miso.serve(lm_prog, lm_adapter)
+lm.start(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+mk = lambda n: rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+lm_reqs = [
+    Request(
+        prompt=mk(4),
+        max_new_tokens=DECODE,
+        policy=miso.RedundancyPolicy(level=lv),
+    )
+    for lv in (1, 2)  # the DMR request's replicas share the pool
+]
+for r in lm_reqs:
+    lm.submit(r)
+lm.pump()
+pm = lm.metrics()
+print(
+    f"paged LM   : {pm['done']}/{pm['submitted']} requests done, "
+    f"prefill compiles={pm['prefill_compiles']} "
+    f"(chunk={pm['prefill_chunk']}), "
+    f"pages {pm['pages_free']}/{pm['pages_total']} free after drain "
+    f"(page_size={pm['page_size']}, page_faults={pm['page_faults']})"
+)
+
+# ---------------------------------------------------------------------------
+# 3. Speculative decoding: an engine built with ServeConfig(spec=...) keeps
+#    a resident draft; a request that ASKS for speculation
+#    (Request(spec=SpecConfig(draft_len=k))) decodes through the verify
+#    walk — up to k+1 tokens commit per tick, and a rejection rolls the
+#    cache back by a position reset.  With the default self-drafting
+#    config the proposals are provably the target's own argmaxes, so no
+#    second model runs and every proposal accepts; the output is required
+#    to be BITWISE identical to plain greedy decode (tests/test_spec.py),
+#    so speculation is a pure throughput knob.  docs/serving.md#speculative-
+#    decoding has the walk diagram and the rollback-soundness argument.
+# ---------------------------------------------------------------------------
+spec_scfg = miso.ServeConfig(batch=4, max_len=32, spec=miso.SpecConfig(draft_len=4))
+sp_prog, sp_adapter = lm_engine_parts(cfg, spec_scfg)
+sp = miso.serve(sp_prog, sp_adapter)
+sp.start(jax.random.PRNGKey(0))
+prompt = mk(4)
+want = 2 * DECODE + 1
+spec_req = Request(
+    prompt=prompt, max_new_tokens=want, spec=miso.SpecConfig(draft_len=4)
+)
+sp.submit(spec_req)
+sp.pump()
+sm = sp.metrics()
+
+# the same request through a PLAIN engine — the parity oracle
+ref_prog, ref_adapter = lm_engine_parts(cfg, miso.ServeConfig(batch=4, max_len=32))
+ref = miso.serve(ref_prog, ref_adapter)
+ref.start(jax.random.PRNGKey(0))
+ref_req = Request(prompt=prompt, max_new_tokens=want)
+ref.submit(ref_req)
+ref.pump()
+
+spec_toks = sp.result(spec_req.id)["tokens"]
+ref_toks = ref.result(ref_req.id)["tokens"]
+assert spec_toks == ref_toks, "speculation must not change tokens"
+print(
+    f"speculation: {len(spec_toks)} tokens in {sm['spec_ticks']} verify "
+    f"ticks ({sm['spec_tokens_per_tick']:.1f} tokens/tick, ceiling "
+    f"draft_len+1=5) — bitwise equal to plain greedy decode"
+)
+
+print(
+    "\nNext: examples/serve_lm.py (--strike: per-request fault "
+    "attribution), benchmarks/run.py --only serving (the saturated/"
+    "mixed-length/fixed-budget/speculation cases), docs/serving.md."
+)

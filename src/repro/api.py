@@ -1,4 +1,4 @@
-"""MISO package front door: ``miso.compile()`` and the Executor protocol.
+"""MISO package front door: ``miso.compile()`` and ``miso.serve()``.
 
     from repro import api as miso          # or: import repro as miso
 
@@ -19,177 +19,44 @@ The Executor protocol
 Every back-end returned by ``compile()`` implements:
 
 ``init(key) -> states``
-    Initialize all cell states from a PRNG key.  Replicated cells get
-    their leading replica axis here; when ``compile(..., sharding=...)``
-    was given, leaves are placed under those shardings.
+    Initialize all cell states from a PRNG key (replica axes, shardings).
 
 ``step(states, *, step_idx=None, fault=None) -> (states', reports)``
-    One transition of the whole program (``compare_every`` transitions on
-    the lockstep back-end).  ``step_idx`` defaults to an internal counter;
-    ``fault`` is an optional armed ``FaultSpec``.
+    One transition of the whole program; ``fault`` arms a ``FaultSpec``.
 
-``run(states, n_steps, *, start_step=None, faults=None, collect=None)
--> RunResult``
-    Execute n_steps transitions.  Returns ``RunResult(states, reports,
-    collected)``: the final state, per-cell redundancy reports summed over
-    the run, and (if ``collect`` was given) the per-step stack of
-    ``collect(states)``.
+``run(states, n_steps, *, faults=None, collect=None) -> RunResult``
+    n_steps transitions -> final states, summed per-cell fault reports,
+    and optionally the per-step stack of ``collect(states)``.
 
 ``run_campaign(states, n_steps, faults, ...) -> RunResult``
-    A multi-fault campaign: the same trajectory once per armed
-    ``FaultSpec``, every output gaining a leading campaign axis of size
-    ``len(faults)``.  The lock-step back-ends stack the FaultSpecs and
-    sweep the whole campaign in ONE vmap'd in-graph dispatch; no ledger
-    entries and no step-counter advance (campaigns are analysis).
+    The same trajectory once per armed ``FaultSpec``, swept in ONE
+    vmap'd dispatch; every output gains a leading campaign axis.
 
 ``stream(states, n_steps=None, ...) -> generator of (states, reports)``
-    The serving loop: yields after every transition; ``n_steps=None``
-    streams until the caller breaks.
+    The serving loop: yields after every transition.
+
+``pure_step(states, ...) -> states'``
+    Side-effect-free replay of one transition from its immutable input
+    buffer — the paper's §IV "third execution" recovery primitive.
 
 ``metrics() -> dict``
-    FaultLedger / compare statistics: ``fault_totals`` (per-cell event and
-    mismatch counters), ``flagged`` / ``suspects`` (permanent-fault
-    localization), ``recoveries`` (host tie-breaks), plus backend-specific
-    entries (the wavefront back-end reports ``units`` and ``max_lead``).
+    FaultLedger / compare statistics plus backend-specific entries.
 
-Back-ends and the registry
---------------------------
-``compile(program, backend=...)`` resolves the name in the back-end
-registry (``repro.core.executor.BACKENDS``):
+Where everything lives
+----------------------
+The layer map (cells -> executor registry -> back-ends -> serving) with
+per-backend schedules: ``docs/architecture.md``.  The serving engine's
+request lifecycle (queue, admission, bucketed/chunked prefill, replica
+slots, paged KV, speculative decoding): ``docs/serving.md``.  The fault
+model, compare modes/cadence, and spatial vs temporal replication:
+``docs/dependability.md``.  Benchmark artifacts: ``docs/benchmarks.md``.
 
-  * ``"lockstep"``  — fused jit step + in-graph ``lax.scan`` run; the
-    production schedule for training and decoding.  Honors
-    ``compare_every`` (replica-compare amortization) and ``donate``.
-  * ``"lockstep_pallas"`` — the same schedule with each replicated cell's
-    dependability epilogue fused into ONE Pallas kernel per step: DMR =
-    word compare + both replica fingerprints in a single pass, TMR =
-    majority vote + per-replica mismatch counts + voted fingerprint in a
-    single pass (``core/backend_pallas.py``).  Bitwise-identical states
-    and fault reports to ``lockstep`` (one caveat: mismatch counters are
-    u32-word-granular, equal to element counts for 32-bit dtypes but
-    coarser for packed sub-word dtypes — detection/``events`` semantics
-    are identical; see ``core/backend_pallas.py``).  Options: ``interpret``
-    (default
-    auto: real kernels on TPU, interpret mode elsewhere — so CPU CI
-    exercises the path), ``block``.
-  * ``"spatial_lockstep"`` — the lock-step schedule with
-    ``placement="spatial"`` replicas laid ONE PER POD across the mesh's
-    ``pod`` axis (``compile(..., mesh=...)`` required; the paper's
-    "different processors and memories" made real).  Detect/vote are
-    cross-pod collectives: DMR-hash compares 128-bit fingerprints with an
-    all_gather-free 16-byte psum (O(1) wire traffic instead of O(state));
-    DMR-bitwise is the paper-faithful full exchange; TMR-hash adopts the
-    majority replica only on an actual mismatch (48-byte steady state);
-    TMR-bitwise gathers and majority-votes the word streams.  States and
-    fault reports are bitwise-identical to temporal ``lockstep``
-    (tests/test_spatial.py).  Options: ``pod_axis`` (default "pod").
-  * ``"host"``      — per-step host loop with the paper's §IV recovery:
-    DMR tie-breaking, FaultLedger accounting, async checkpoint callbacks.
-    Options: ``ledger``, ``checkpoint_cb``, ``checkpoint_every``, ``jit``.
-  * ``"wavefront"`` — §III barrier-free schedule over the SCC condensation
-    of the read graph; units free-run up to ``window`` steps ahead.
-  * ``"auto"``      — wavefront when the dependency graph has more than one
-    independent unit, otherwise the lock-step flavor for the accelerator:
-    ``lockstep_pallas`` on TPU, ``lockstep`` elsewhere.  A program that
-    requests spatial placement AND a mesh whose ``pod`` axis can hold one
-    replica per pod resolve to ``spatial_lockstep`` (the only schedule
-    that honors the placement).  The back-end observes the parallel
-    nature of the program, the hardware, and the dependability policy.
-
-New back-ends register with ``@register_backend("name")`` on an
-``Executor`` subclass and become reachable from every existing call site
-without modification (exactly how ``lockstep_pallas`` plugs in).
-
-The old entry points (``compile_step``/``run_scan``/``HostRunner``/
-``WavefrontRunner``) remain available for one release as deprecation
-shims in ``repro.core.schedule``.
-
-Serving: ``miso.serve()`` and the continuous batcher
-----------------------------------------------------
-``serve(program, adapter, ...)`` wraps a compiled executor in a
-``ServingEngine`` (``repro.serving``): one *resident* slot-masked decoder
-program is driven through ``Executor.stream``, and many independent
-requests are multiplexed onto its fixed batch dimension.
-
-Engine lifecycle::
-
-    from repro.serving import Request
-    from repro.serving.lm import lm_engine_parts
-
-    prog, adapter = lm_engine_parts(cfg, ServeConfig(batch=8, max_len=128))
-    engine = miso.serve(prog, adapter)
-    engine.start(jax.random.PRNGKey(0))       # weights + empty slots
-    engine.submit(Request(prompt, max_new_tokens=32))
-    engine.submit(Request(p2, policy=miso.RedundancyPolicy(level=2)))
-    engine.pump()                             # tick until drained
-    engine.result("r0")                       # tokens, status, TTFT, faults
-    engine.metrics()                          # tokens/s, TTFT p50/p99, ledger
-
-Between stream ticks the engine's swap hook (``stream(..., swap=...)``)
-scatters freshly prefilled prompt caches into free slots and scrubs
-finished ones; the resident states never leave the device.  The isolation
-invariant making this sound: an active slot's trajectory is
-bitwise-identical no matter which other slots are occupied (slot-masked
-transition + row-independent batch math) — tested in
-tests/test_serving.py.
-
-Prefill (LM adapter) is *bucketed* and *chunked* — both off the hot
-path's recompile and stall cliffs, both ``ServeConfig`` flags:
-
-  * ``prefill_bucket_min`` — prompts are right-padded to a geometric
-    compile ladder (min, 2*min, ..., max_len); ``jit_prefill`` compiles
-    once per BUCKET instead of once per distinct prompt length, and the
-    padded positions are masked out of the filled cache
-    (``transformer.forward(prompt_len=...)``), so a bucketed prefill is
-    indistinguishable from an exact-length one.  ``metrics()`` reports
-    ``prefill_compiles`` / ``prefill_buckets``.  Recurrent (mamba)
-    archs fall back to exact-length compiles automatically.
-  * ``prefill_chunk`` — admission itself becomes a sequence of MISO
-    transitions: the out-of-band forward covers at most ``chunk`` prompt
-    tokens, the tail rides into the slot's ``pending`` segment and is
-    consumed up to ``chunk`` tokens per tick INSIDE the resident
-    slot-masked transition (the walking slot sub-steps k times while its
-    neighbors step once).  A long prompt joins immediately, never stalls the
-    running batch for more than one bounded chunk forward, and short
-    requests' TTFT stays flat under mixed-length load.  Chunked and
-    whole-prompt prefill emit bitwise-identical tokens (tested across
-    bucket boundaries for none/DMR/TMR); ``prefill_chunk=0`` is the
-    degenerate one-chunk (whole-prompt) case.
-
-Replicated (DMR/TMR) requests occupy a CONTIGUOUS run of replica slots;
-when churn fragments the free list the engine defragments instead of
-stalling — a running request's slot is relocated via the bitwise
-``copy_slot`` + scrub machinery (``metrics()["defrag_moves"]``),
-invisible to its owner by the slot-position invariance.
-
-Paged KV cache (``ServeConfig(paged=True, page_size=...)``): the dense
-per-slot ``max_len`` cache is replaced by ONE shared pool of fixed-size
-KV pages per layer (``repro.serving.paging``).  Each slot owns a page
-table; admission reserves its worst-case page count (``can_admit``), a
-pre-tick hook demand-maps pages just ahead of the write head
-(``metrics()["page_faults"]``), and eviction is a pure page-table
-release — the contiguous-run/defrag machinery disappears for paged
-requests, so a fixed cache-byte budget holds several times the resident
-requests (benchmarks/run.py ``fixed_budget``).  Decode attention runs
-the fused gather+attention Pallas kernels of ``kernels/paged_decode``
-(GQA and absorbed-MLA; ``interpret=None`` auto-resolves so CPU CI
-exercises the same kernel).  Paged decode is BITWISE-identical to dense
-— tokens and FaultLedger reports, for none/DMR/TMR, through slot churn
-and page reuse (tests/test_paging.py): replica fingerprints and repair
-operate on the gathered dense-layout view, so per-request redundancy is
-unchanged even though replica slots share the pool.  Recurrent archs
-(mamba/zamba) fall back to the dense cache automatically.
-
-Per-request policy semantics: a request's ``RedundancyPolicy`` maps onto
-*replica slots* of the same resident batch (replication is mechanically
-identical to data parallelism — core/redundancy.py — here applied at
-request granularity).  level=2 (DMR) occupies 2 slots: a fingerprint
-mismatch between them is detected, attributed to the owning request in
-the engine's FaultLedger, and repaired by the paper's §IV third execution
-(``Executor.pure_step`` replays the tick from the immutable pre-tick
-buffer).  level=3 (TMR) occupies 3: the minority slot is localized and
-re-synchronized from a majority slot.  level=1 pays nothing — and a
-strike on it goes undetected, the paper's motivating failure mode.
+Back-ends resolve by name in ``repro.core.executor.BACKENDS``
+(``lockstep``, ``lockstep_pallas``, ``spatial_lockstep``, ``host``,
+``wavefront``, ``auto``); new ones plug in with
+``@register_backend("name")``.  The old entry points
+(``compile_step``/``run_scan``/``HostRunner``/``WavefrontRunner``)
+remain as deprecation shims in ``repro.core.schedule``.
 """
 from repro.core.cell import (  # noqa: F401
     CellType,
@@ -210,6 +77,7 @@ from repro.core.graph import DependencyGraph  # noqa: F401
 from repro.core.ir import compile_source  # noqa: F401
 from repro.core.program import MisoProgram  # noqa: F401
 from repro.core.redundancy import FaultLedger  # noqa: F401
+from repro.models.lm_cells import ServeConfig, SpecConfig  # noqa: F401
 
 
 def serve(program, adapter, **engine_opts):
@@ -226,9 +94,8 @@ def serve(program, adapter, **engine_opts):
                    option (``compare_every``, ``checkpoint_cb``/
                    ``checkpoint_every`` to snapshot resident state, ...).
 
-    Returns the engine (call ``.start(key)`` before submitting).  See the
-    module docstring's serving section for lifecycle and per-request
-    policy semantics."""
+    Returns the engine (call ``.start(key)`` before submitting).  Request
+    lifecycle and per-request policy semantics: ``docs/serving.md``."""
     from repro.serving.engine import ServingEngine
 
     return ServingEngine(program, adapter, **engine_opts)
@@ -246,6 +113,8 @@ __all__ = [
     "NO_REDUNDANCY",
     "RedundancyPolicy",
     "RunResult",
+    "ServeConfig",
+    "SpecConfig",
     "available_backends",
     "compile",
     "compile_source",

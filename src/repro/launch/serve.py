@@ -19,9 +19,17 @@ tick); ``prefill_compiles`` is printed from ``engine.metrics()``.
 pool, admission checks free pages, and eviction is a page-table release —
 the metrics line gains pages_total/pages_free/page_faults.
 
+``--spec-k K`` turns on speculative decoding: every request asks for a
+draft length of K, decode runs the verify walk (up to K+1 tokens commit
+per tick — docs/serving.md), and the metrics line gains the
+spec_ticks/spec_tokens_per_tick counters.  ``--spec-arch`` names a
+reduced config for a real divergent draft (default: self-drafting).
+
 ``--strike`` arms one bit-flip against the first DMR request's replica
 slot mid-decode and verifies it is detected, attributed to that request,
 and repaired (the CI serving smoke runs this, both dense and --paged).
+Combined with --spec-k, give --decode headroom (> 2*(K+1)) so the
+victim is still resident when the flip lands.
 
 ``--static`` keeps the fixed-batch reference path: prefill a batch of
 identical-length prompts, decode in one in-graph scan (optionally with
@@ -89,6 +97,13 @@ def main():
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (--paged; must divide "
                          "--max-len)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft length k (tokens "
+                         "proposed per tick; every request asks for it; "
+                         "0 = plain decode)")
+    ap.add_argument("--spec-arch", default="",
+                    help="draft architecture for --spec-k (reduced "
+                         "config name; empty = self-drafting)")
     # static path
     ap.add_argument("--static", action="store_true",
                     help="fixed-batch reference path (no engine)")
@@ -112,10 +127,16 @@ def engine_main(cfg, args):
     from repro.serving import DONE, RUNNING, Request
     from repro.serving.lm import lm_engine_parts
 
+    spec = None
+    if args.spec_k:
+        from repro.models.lm_cells import SpecConfig
+
+        spec = SpecConfig(draft_len=args.spec_k, draft_arch=args.spec_arch)
     scfg = ServeConfig(batch=args.slots, max_len=args.max_len,
                        prefill_chunk=args.prefill_chunk,
                        prefill_bucket_min=args.prefill_bucket_min,
-                       paged=args.paged, page_size=args.page_size)
+                       paged=args.paged, page_size=args.page_size,
+                       spec=spec)
     prog, adapter = lm_engine_parts(cfg, scfg, LOCAL)
     engine = miso.serve(prog, adapter)
     engine.start(jax.random.PRNGKey(args.seed))
@@ -127,7 +148,8 @@ def engine_main(cfg, args):
         plen = int(rng.integers(2, max(3, args.prompt_len + 1)))
         prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new_tokens=args.decode,
-                            policy=POLICIES[mix[i % len(mix)]]))
+                            policy=POLICIES[mix[i % len(mix)]],
+                            spec=spec))
 
     # staggered submission: half now, half after a few ticks, so requests
     # genuinely join/leave the resident batch mid-stream
@@ -144,11 +166,16 @@ def engine_main(cfg, args):
         if victim is None:
             raise SystemExit("--strike needs a dmr request in --mix")
         # tick until the victim is resident with decode budget left, then
-        # arm a flip against its SECOND replica slot on the next tick
+        # arm a flip against its SECOND replica slot.  The flip fires one
+        # tick after the arming tick, and a speculative tick commits up to
+        # spec_k+1 tokens, so the victim needs that much budget headroom
+        # to still be resident when the strike lands (--spec-k --strike
+        # therefore wants --decode comfortably above 2*(spec_k+1)).
+        margin = args.spec_k + 2
         rec = engine.requests[victim.id]
         for _ in range(10 * args.decode):
             if (rec.status == RUNNING
-                    and len(rec.tokens) + 2 <= victim.max_new_tokens):
+                    and len(rec.tokens) + margin <= victim.max_new_tokens):
                 break
             engine.pump(max_ticks=1)
         if rec.status != RUNNING:
@@ -156,16 +183,22 @@ def engine_main(cfg, args):
         from repro.models.lm_cells import (
             paged_serving_supported,
             paged_slot_decoder_init,
+            resolve_draft_config,
             slot_decoder_init,
+            spec_serving_supported,
         )
 
         # the flip targets the "tokens" leaf by FLAT INDEX: flatten the
-        # same state layout the engine runs (paged trees order differently)
+        # same state layout the engine runs (paged trees order differently,
+        # and a spec engine's decoder carries extra speculation leaves)
+        dcfg, dlen = None, 0
+        if spec is not None and spec_serving_supported(cfg):
+            dcfg, dlen = resolve_draft_config(cfg, spec), spec.draft_len
         if args.paged and paged_serving_supported(cfg):
             example = paged_slot_decoder_init(
-                cfg, 2, args.max_len, args.page_size, 1)
+                cfg, 2, args.max_len, args.page_size, 1, dcfg, dlen)
         else:
-            example = slot_decoder_init(cfg, 2, args.max_len)
+            example = slot_decoder_init(cfg, 2, args.max_len, dcfg, dlen)
         flat, _ = jax.tree_util.tree_flatten_with_path(example)
         leaf_i = next(i for i, (p, _) in enumerate(flat)
                       if any(getattr(q, "key", None) == "tokens" for q in p))
@@ -188,6 +221,12 @@ def engine_main(cfg, args):
     if m.get("paged"):
         print(f"paged: {m['pages_free']}/{m['pages_total']} pages free "
               f"(size={m['page_size']}) | page faults={m['page_faults']}")
+    if args.spec_k:
+        print(f"spec: k={args.spec_k} "
+              f"draft={args.spec_arch or 'self'} | "
+              f"{m['spec_tokens']} tokens over {m['spec_ticks']} verify "
+              f"ticks ({m.get('spec_tokens_per_tick', 0):.2f}/tick, "
+              f"min commit={m.get('spec_min_commit')})")
     for r in reqs:
         res = engine.result(r.id)
         mark = f" policy={r.policy.level}" if r.policy.level > 1 else ""

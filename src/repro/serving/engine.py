@@ -101,6 +101,16 @@ class SlotAdapter:
                    per tick (``ServeConfig.prefill_chunk`` k-token walk);
                    the engine's host-side ``prefill_remaining`` ledger
                    drains at this rate.
+    read_spec   -- optional ``(cell_state) -> (spec_out, spec_n)``:
+                   speculative decoding's multi-token harvest.
+                   ``spec_out`` is (B, K+1) committed tokens in emission
+                   order, ``spec_n`` (B,) the committed count — > 0 for
+                   a slot that ran a verify pass this tick (1 means the
+                   first draft token was rejected), 0 for a slot that
+                   plain-decoded (harvest falls back to one
+                   ``read_tokens`` token).  Emission is per-token, so
+                   stop/budget/deadline fire mid-commit exactly where
+                   non-speculative decode would have stopped.
     contiguous_replicas -- replica slots need one adjacent run (dense
                    layout: the spatial-placement notch).  The paged
                    layout clears it — pages have no adjacency, so
@@ -120,6 +130,7 @@ class SlotAdapter:
     pre_tick: Optional[Callable[[dict], dict]] = None
     walk_chunk: int = 1
     contiguous_replicas: bool = True
+    read_spec: Optional[Callable[[Pytree], tuple]] = None
 
 
 @dataclasses.dataclass
@@ -204,6 +215,12 @@ class ServingEngine:
         self._submitted = 0
         self._rejected_invalid = 0
         self._defrag_moves = 0
+        #: speculative decoding: verify passes seen / tokens they
+        #: committed / smallest single-pass commit (1 = some tick
+        #: rejected the very first draft token)
+        self._spec_ticks = 0
+        self._spec_tokens = 0
+        self._spec_min_commit: Optional[int] = None
         self._t0: Optional[float] = None
 
         # the surgery bundle: dense whole-leaf ops by default, or the
@@ -393,6 +410,14 @@ class ServingEngine:
             toks = np.asarray(
                 jax.device_get(self.adapter.read_tokens(states[self.adapter.cell]))
             )
+            sout = sn = None
+            if self.adapter.read_spec is not None:
+                sout, sn = (
+                    np.asarray(x)
+                    for x in jax.device_get(
+                        self.adapter.read_spec(states[self.adapter.cell])
+                    )
+                )
             now = self.time_fn()
             for rec in running:
                 if rec.status != RUNNING:
@@ -412,8 +437,31 @@ class ServingEngine:
                         continue
                     # the tick consuming the LAST prompt token produced
                     # the first real continuation token -> harvest it
-                self._emit(rec, toks[rec.slots[0]].reshape(-1), now)
-                status = self._should_finish(rec, now)
+                slot = rec.slots[0]
+                n_commit = int(sn[slot]) if sn is not None else 0
+                if n_commit > 0:
+                    # speculative commit: the tick verified a draft and
+                    # committed n tokens; emit them ONE AT A TIME so
+                    # stop/budget/deadline trip on exactly the token
+                    # they would have under plain decode (eviction
+                    # mid-commit just truncates the surplus — the extra
+                    # cache entries leave with the slot)
+                    self._spec_ticks += 1
+                    self._spec_tokens += n_commit
+                    self._spec_min_commit = (
+                        n_commit
+                        if self._spec_min_commit is None
+                        else min(self._spec_min_commit, n_commit)
+                    )
+                    status = None
+                    for i in range(n_commit):
+                        self._emit(rec, sout[slot, i : i + 1], now)
+                        status = self._should_finish(rec, now)
+                        if status is not None:
+                            break
+                else:
+                    self._emit(rec, toks[slot].reshape(-1), now)
+                    status = self._should_finish(rec, now)
                 if status is not None:
                     states = self._evict(states, rec, status)
         return states
@@ -585,6 +633,13 @@ class ServingEngine:
             "fault_totals": self.ledger.totals,
             "suspects": self.ledger.permanent_fault_suspects(),
         }
+        if self.adapter.read_spec is not None:
+            m["spec_ticks"] = self._spec_ticks
+            m["spec_tokens"] = self._spec_tokens
+            m["spec_min_commit"] = self._spec_min_commit
+            m["spec_tokens_per_tick"] = (
+                self._spec_tokens / self._spec_ticks if self._spec_ticks else 0.0
+            )
         if ttfts:
             m["ttft_p50_s"] = float(np.percentile(ttfts, 50))
             m["ttft_p99_s"] = float(np.percentile(ttfts, 99))

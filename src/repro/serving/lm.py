@@ -44,7 +44,9 @@ from repro.models.lm_cells import (
     paged_slot_decoder_init,
     prefill_bucket_ladder,
     prefill_slot_state,
+    resolve_draft_config,
     slot_decoder_init,
+    spec_serving_supported,
 )
 
 from .engine import SlotAdapter
@@ -59,10 +61,19 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
     # paged KV: same gate the program builder uses — unsupported archs
     # silently keep the dense cache (mirrors the bucket carve-outs below)
     paged = scfg.paged and paged_serving_supported(cfg)
+    # speculative decoding: same silent-fallback pattern — archs that
+    # cannot roll the cache position back keep plain decode, and any
+    # per-request spec ask is then ignored (docs/serving.md)
+    spec = scfg.spec if (scfg.spec is not None
+                         and spec_serving_supported(cfg)) else None
+    dcfg = resolve_draft_config(cfg, spec) if spec else None
+    spec_len = spec.draft_len if spec else 0
     if paged:
         axes = None  # paged axes are inferred below, with the page pool
     else:
-        axes = infer_slot_axes(lambda b: slot_decoder_init(cfg, b, scfg.max_len))
+        axes = infer_slot_axes(
+            lambda b: slot_decoder_init(cfg, b, scfg.max_len, dcfg, spec_len)
+        )
 
     # bucket padding is maskable only for full-attention caches:
     # recurrent (mamba) segments fold padding into their state; the
@@ -86,7 +97,7 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
     # so one compile covers every prompt length that rounds up to it.
     # On the exact-length fallback the head is never padded, so
     # prompt_len masking is unnecessary (and recurrent archs reject it)
-    def _prefill_impl(params, head, plen, pend, npend):
+    def _prefill_impl(params, dparams, head, plen, pend, npend, spec_k, budget):
         return prefill_slot_state(
             cfg,
             scfg,
@@ -96,6 +107,10 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
             prompt_len=plen if bucketable else None,
             pending=pend,
             n_pending=npend,
+            draft_cfg=dcfg,
+            draft_params=dparams,
+            spec_k=spec_k if spec else None,
+            budget=budget if spec else None,
         )
 
     jit_prefill = jax.jit(_prefill_impl)
@@ -124,8 +139,19 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
         n_pending = plen - c0
         pend[:n_pending] = prompt[c0:]
         params = states["weights"]["params"]
+        dparams = states["weights"]["draft"] if dcfg is not None else None
+        # per-request draft length: the request's ask clamped to the
+        # resident draft's verify-walk width (0 = plain decode)
+        spec_k = min(req.spec.draft_len, spec_len) if (spec and req.spec) else 0
         slot_state, first = jit_prefill(
-            params, head, jnp.int32(c0), pend, jnp.int32(n_pending)
+            params,
+            dparams,
+            head,
+            jnp.int32(c0),
+            pend,
+            jnp.int32(n_pending),
+            jnp.int32(spec_k),
+            jnp.int32(req.max_new_tokens),
         )
         buckets_used.add(bucket)
         if n_pending:
@@ -142,6 +168,17 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
                 f"prompt {plen} + budget {req.max_new_tokens} exceeds "
                 f"cache capacity {scfg.max_len}"
             )
+        if req.spec is not None and spec is not None:
+            # one resident draft serves the whole engine: a request may
+            # pick its draft LENGTH, not a different draft model
+            if req.spec.draft_arch and req.spec.draft_arch != spec.draft_arch:
+                return (
+                    f"request draft_arch {req.spec.draft_arch!r} does not "
+                    f"match the engine's resident draft "
+                    f"{spec.draft_arch or 'self'!r}"
+                )
+        # a spec ask on a non-speculating engine degrades to plain
+        # decode (same silent fallback as paged/bucketing carve-outs);
         # no pending-capacity check: prefill() grows the head chunk so
         # the uncovered tail never exceeds the max_len pending segment
         return None
@@ -163,7 +200,9 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
         n_pages = paged_pool_pages(scfg)
         table = PageTable(n_pages, psize, scfg.max_len // psize)
         axes = infer_paged_axes(
-            lambda b: paged_slot_decoder_init(cfg, b, scfg.max_len, psize, n_pages)
+            lambda b: paged_slot_decoder_init(
+                cfg, b, scfg.max_len, psize, n_pages, dcfg, spec_len
+            )
         )
 
         def reserve_fn(req: Request) -> int:
@@ -175,11 +214,19 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
 
         # the scrub template only reads non-pool leaves: a 1-page pool
         # keeps it tiny
-        scrub_tmpl = paged_slot_decoder_init(cfg, 1, scfg.max_len, psize, 1)
+        scrub_tmpl = paged_slot_decoder_init(
+            cfg, 1, scfg.max_len, psize, 1, dcfg, spec_len
+        )
         surgery = paged_surgery(
             table, "decoder", axes, scrub_tmpl, reserve_fn=reserve_fn
         )
-        pre_tick = make_pre_tick(table, "decoder", scfg.batch, walk_chunk=max(1, chunk))
+        pre_tick = make_pre_tick(
+            table,
+            "decoder",
+            scfg.batch,
+            walk_chunk=max(1, chunk),
+            draft_len=spec_len,
+        )
 
         def has_capacity(req: Request) -> bool:
             return table.can_admit(req.n_slots * reserve_fn(req))
@@ -190,7 +237,10 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
             "prefill_buckets": list(ladder) if ladder else None,
             "prefill_chunk": chunk,
             "paged": paged,
+            "spec_draft_len": spec_len,
         }
+        if spec is not None:
+            out["spec_draft_arch"] = spec.draft_arch or "self"
         if table is not None:
             out["pages_total"] = table.n_pages
             out["pages_free"] = table.free_pages
@@ -200,8 +250,10 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
 
     def make_empty():
         if paged:
-            return paged_slot_decoder_init(cfg, 1, scfg.max_len, scfg.page_size, 1)
-        return slot_decoder_init(cfg, 1, scfg.max_len)
+            return paged_slot_decoder_init(
+                cfg, 1, scfg.max_len, scfg.page_size, 1, dcfg, spec_len
+            )
+        return slot_decoder_init(cfg, 1, scfg.max_len, dcfg, spec_len)
 
     adapter = SlotAdapter(
         cell="decoder",
@@ -217,5 +269,8 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
         pre_tick=pre_tick,
         walk_chunk=max(1, chunk),
         contiguous_replicas=not paged,
+        read_spec=(
+            (lambda dec: (dec["spec_out"], dec["spec_n"])) if spec else None
+        ),
     )
     return prog, adapter

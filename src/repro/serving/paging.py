@@ -283,6 +283,26 @@ def paged_surgery(
     into freshly-mapped pages."""
     vaxes = view_axes_of(axes)
 
+    # non-pool state entries may be NESTED (the speculative draft cache
+    # is a whole dense cache dict living beside the pool leaves), so the
+    # per-slot update/slice run leaf-wise over the subtree
+    def _put(dst, src, slot, ax):
+        return jax.tree.map(
+            lambda d, s, a: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), slot, axis=a
+            ),
+            dst,
+            src,
+            ax,
+        )
+
+    def _take(src, slot, ax):
+        return jax.tree.map(
+            lambda s, a: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=a),
+            src,
+            ax,
+        )
+
     def _install(st, ss, slot, rows):
         dec = st[cell]
         new = {}
@@ -300,9 +320,7 @@ def paged_surgery(
                     v, rows[None].astype(v.dtype), slot, axis=0
                 )
             else:
-                new[k] = jax.lax.dynamic_update_slice_in_dim(
-                    v, ss[k].astype(v.dtype), slot, axis=axes[k]
-                )
+                new[k] = _put(v, ss[k], slot, axes[k])
         return {**st, cell: new}
 
     def _scrub(st, slot):
@@ -319,9 +337,7 @@ def paged_surgery(
                     v, blank.astype(v.dtype), slot, axis=0
                 )
             else:
-                new[k] = jax.lax.dynamic_update_slice_in_dim(
-                    v, empty[k].astype(v.dtype), slot, axis=axes[k]
-                )
+                new[k] = _put(v, empty[k], slot, axes[k])
         return {**st, cell: new}
 
     def _copy_pool(pool, src_rows, dst_rows):
@@ -352,8 +368,7 @@ def paged_surgery(
                     v, dst_rows[None].astype(v.dtype), dst, axis=0
                 )
             else:
-                sv = jax.lax.dynamic_slice_in_dim(v, src, 1, axis=axes[k])
-                new[k] = jax.lax.dynamic_update_slice_in_dim(v, sv, dst, axis=axes[k])
+                new[k] = _put(v, _take(v, src, axes[k]), dst, axes[k])
         return {**st, cell: new}
 
     def _copy_pool_from(pool, other_pool, rows):
@@ -385,10 +400,7 @@ def paged_surgery(
                     v, rows[None].astype(v.dtype), slot, axis=0
                 )
             else:
-                sv = jax.lax.dynamic_slice_in_dim(odec[k], slot, 1, axis=axes[k])
-                new[k] = jax.lax.dynamic_update_slice_in_dim(
-                    v, sv.astype(v.dtype), slot, axis=axes[k]
-                )
+                new[k] = _put(v, _take(odec[k], slot, axes[k]), slot, axes[k])
         return {**st, cell: new}
 
     jit_install = jax.jit(_install)
@@ -461,20 +473,33 @@ def paged_surgery(
 # pre-tick demand growth
 # --------------------------------------------------------------------------
 def make_pre_tick(
-    table: PageTable, cell: str, batch: int, walk_chunk: int = 1
+    table: PageTable, cell: str, batch: int, walk_chunk: int = 1,
+    draft_len: int = 0
 ) -> Callable[[dict], dict]:
     """The engine's pre-tick hook for a paged program: before each
     resident transition, map pages covering every position the tick will
-    write (the decode append, or up to ``walk_chunk`` prefill-walk
-    tokens), charge them as page faults, and ZERO the newly-mapped pool
-    rows (clean-on-map — page reuse between requests leaves no stale
-    bytes, so replica fingerprints and paged-vs-dense parity hold).
+    write (the decode append, up to ``walk_chunk`` prefill-walk tokens,
+    or a ``k_eff + 1``-position speculative verify walk), charge them as
+    page faults, and ZERO the newly-mapped pool rows (clean-on-map —
+    page reuse between requests leaves no stale bytes, so replica
+    fingerprints and paged-vs-dense parity hold).
+
+    ``draft_len`` > 0 (speculative engines) makes the hook read the
+    per-slot ``spec_k``/``budget`` leaves and apply the SAME effective-
+    draft-length clamp as the in-graph walk
+    (``models/lm_cells.py:spec_k_eff``) — host and device must agree on
+    how far the tick writes, or a verify sub-step would land on an
+    unmapped page.  A rejected speculation rolls ``pos`` back but never
+    unmaps: the pages stay with the slot (they are inside its
+    reservation) and are simply re-written when decode reaches them.
 
     Runs BEFORE the engine snapshots the tick's input buffer, so a §IV
     replay sees the same page tables the live tick did."""
     # newly-mapped rows per tick is bounded: each active slot crosses at
-    # most ceil(walk_chunk/ps)+1 page boundaries
-    cap = batch * (-(-walk_chunk // table.page_size) + 1)
+    # most ceil(max_step/ps)+1 page boundaries
+    max_step = max(walk_chunk, draft_len + 1)
+    cap = batch * (-(-max_step // table.page_size) + 1)
+    max_len = table.pages_per_slot * table.page_size
 
     def grow(st, rows, grew, clean):
         dec = st[cell]
@@ -495,10 +520,11 @@ def make_pre_tick(
 
     def pre_tick(states):
         dec = states[cell]
-        host = jax.device_get(
-            (dec["active"], dec["cache"]["pos"], dec["p_head"], dec["p_len"])
-        )
-        act, pos, p_head, p_len = (np.asarray(x) for x in host)
+        leaves = [dec["active"], dec["cache"]["pos"], dec["p_head"], dec["p_len"]]
+        if draft_len > 0:
+            leaves += [dec["spec_k"], dec["budget"], dec["n_decoded"]]
+        host = [np.asarray(x) for x in jax.device_get(leaves)]
+        act, pos, p_head, p_len = host[:4]
         rows = np.full((batch, table.pages_per_slot), -1, np.int32)
         grew = np.zeros((batch,), bool)
         clean: list[int] = []
@@ -506,7 +532,21 @@ def make_pre_tick(
             if not act[s]:
                 continue
             r = int(p_len[s] - p_head[s])
-            step = min(walk_chunk, r) if r > 0 else 1
+            if r > 0:
+                step = min(walk_chunk, r)
+            elif draft_len > 0:
+                # host mirror of models/lm_cells.py:spec_k_eff — the two
+                # clamps must stay in lock-step, or the device verify
+                # walk writes a position this hook never mapped
+                spec_k, budget, n_dec = host[4], host[5], host[6]
+                room = min(
+                    int(budget[s]) - int(n_dec[s]) - 2,
+                    max_len - 1 - int(pos[s]),
+                )
+                k_eff = max(0, min(int(spec_k[s]), room, draft_len))
+                step = 1 + k_eff
+            else:
+                step = 1
             new = table.grow_to(s, int(pos[s]) + step, demand=True)
             if new:
                 clean.extend(new)

@@ -48,6 +48,12 @@ class Request:
                        unstarted; while running it is evicted with
                        partial output.
     stop_token      -- optional early-stop token id.
+    spec            -- optional speculative-decoding ask, interpreted by
+                       the adapter (LM: ``models.lm_cells.SpecConfig`` —
+                       its ``draft_len`` is the per-request draft
+                       length, clamped to the engine's resident draft).
+                       Output is bitwise-identical either way; spec only
+                       changes how many tokens one tick can commit.
     """
 
     prompt: Any
@@ -55,6 +61,7 @@ class Request:
     policy: RedundancyPolicy = NO_REDUNDANCY
     deadline: Optional[float] = None
     stop_token: Optional[int] = None
+    spec: Any = None
     id: Optional[str] = None
 
     def __post_init__(self):

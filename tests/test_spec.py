@@ -1,0 +1,282 @@
+"""Speculative decoding on replica slots (repro/serving + lm_cells).
+
+The load-bearing property is BITWISE GREEDY PARITY: a speculating
+request — draft proposals, interleaved verification, accept/rollback —
+emits exactly the tokens the plain one-token-per-tick greedy decode
+emits, for none/DMR/TMR policies, on both the dense and the paged cache
+layout, with or without faults striking mid-verify.  Speculation is a
+throughput optimization, never a sampling change.
+"""
+import dataclasses as dc
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api as miso
+from repro.models.lm_cells import ServeConfig, SpecConfig, slot_decoder_init
+from repro.serving import DONE, Request, ServingEngine
+from repro.serving.lm import lm_engine_parts
+
+
+def tiny_lm(**over):
+    from repro.configs import get_reduced
+
+    cfg = get_reduced("internlm2-1.8b")
+    cfg = dc.replace(
+        cfg, d_model=32, n_layers=2, d_ff=64, n_heads=2, n_kv_heads=1, vocab_size=128
+    )
+    return cfg, ServeConfig(batch=4, max_len=32, **over)
+
+
+def lm_engine(cfg, scfg):
+    prog, adapter = lm_engine_parts(cfg, scfg)
+    eng = ServingEngine(prog, adapter)
+    eng.start(jax.random.PRNGKey(0))
+    return eng
+
+
+def decoder_leaf_index(state_example: dict, leaf_name: str) -> int:
+    flat, _ = jax.tree_util.tree_flatten_with_path(state_example)
+    for i, (path, _) in enumerate(flat):
+        if any(getattr(p, "key", None) == leaf_name for p in path):
+            return i
+    raise KeyError(leaf_name)
+
+
+def greedy_ref(cfg, scfg, prompt, n, policy=None):
+    """Plain non-speculative greedy decode of one request (the parity
+    oracle; same engine params — the weights key split is cell-count
+    invariant)."""
+    eng = lm_engine(cfg, dc.replace(scfg, spec=None))
+    req = Request(
+        prompt=prompt, max_new_tokens=n, policy=policy or miso.RedundancyPolicy()
+    )
+    assert eng.submit(req)
+    eng.pump()
+    res = eng.result(req.id)
+    assert res["status"] == DONE
+    return res["tokens"]
+
+
+def spec_cfg(scfg, paged=False, **spec_kw):
+    sc = dc.replace(scfg, spec=SpecConfig(**spec_kw))
+    if paged:
+        sc = dc.replace(sc, paged=True, page_size=8)
+    return sc
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: none / DMR / TMR x dense / paged
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("level", [1, 2, 3])
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_bitwise_parity_with_greedy(level, paged):
+    """Self-speculation (draft == target): every proposal verifies, every
+    tick commits draft_len+1 tokens, and the emitted stream is bitwise
+    equal to plain greedy decode for none/DMR/TMR on both layouts."""
+    cfg, scfg = tiny_lm()
+    pol = miso.RedundancyPolicy(level=level)
+    prompt = (np.arange(5, dtype=np.int32) * 7 + 3) % cfg.vocab_size
+    # budget 11 = prefill token + two full draft_len+1 verify commits, so
+    # the final tick is not shrunk by the remaining-budget clamp
+    ref = greedy_ref(cfg, scfg, prompt, 11, pol)
+
+    eng = lm_engine(cfg, spec_cfg(scfg, paged=paged, draft_len=4))
+    req = Request(
+        prompt=prompt,
+        max_new_tokens=11,
+        policy=pol,
+        spec=SpecConfig(draft_len=4),
+    )
+    assert eng.submit(req)
+    eng.pump()
+    res = eng.result(req.id)
+    assert res["status"] == DONE and res["faults"] == 0
+    assert res["tokens"] == ref, "speculative decode diverged from greedy"
+    m = eng.metrics()
+    assert m["spec_tokens_per_tick"] == 5.0  # full acceptance: k+1
+    assert m["request_faults"] == {}
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_divergent_draft_rejections_keep_parity(paged):
+    """A draft with different params proposes wrong tokens: rejections
+    truncate at the first mismatch, the cache rolls back, and the output
+    is STILL bitwise equal to greedy — only the tokens-per-tick drop."""
+    cfg, scfg = tiny_lm()
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    ref = greedy_ref(cfg, scfg, prompt, 12)
+
+    eng = lm_engine(cfg, spec_cfg(scfg, paged=paged, draft_len=4, draft_param_seed=99))
+    req = Request(prompt=prompt, max_new_tokens=12, spec=SpecConfig(draft_len=4))
+    assert eng.submit(req)
+    eng.pump()
+    res = eng.result(req.id)
+    assert res["status"] == DONE
+    assert res["tokens"] == ref, "rollback after rejection leaked state"
+    m = eng.metrics()
+    assert m["spec_tokens_per_tick"] < 5.0  # real rejections happened
+    # a de-correlated draft misses its very first proposal on some tick:
+    # commit = 1 token = rejection at position 0 exercised
+    assert m["spec_min_commit"] == 1
+
+
+# ---------------------------------------------------------------------------
+# faults striking mid-verify
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("level", [2, 3])
+def test_strike_mid_verify_repairs_and_replays(level):
+    """A bit-flip landing in a replica's state DURING a verify tick is
+    detected, charged to the owner, and repaired (DMR: SIV third-
+    execution tie-break; TMR: majority) — the accept/rollback decision
+    replays bit-for-bit and the final tokens match clean greedy."""
+    cfg, scfg = tiny_lm()
+    pol = miso.RedundancyPolicy(level=level)
+    prompt = (np.arange(4, dtype=np.int32) * 5 + 1) % cfg.vocab_size
+    ref = greedy_ref(cfg, scfg, prompt, 10, pol)
+
+    eng = lm_engine(cfg, spec_cfg(scfg, draft_len=3))
+    req = Request(
+        prompt=prompt,
+        max_new_tokens=10,
+        policy=pol,
+        spec=SpecConfig(draft_len=3),
+    )
+    assert eng.submit(req)
+    eng.pump(max_ticks=1)  # admitted; next ticks verify
+    # the template must match the ENGINE's decoder state layout: self-
+    # speculating, draft_len=3 (spec leaves, no draft cache)
+    leaf_i = decoder_leaf_index(
+        slot_decoder_init(cfg, 2, scfg.max_len, None, 3), "tokens"
+    )
+    fault = miso.FaultSpec.at(
+        step=2,
+        cell_id=eng.exe.program.cell_id("decoder"),
+        leaf=leaf_i,
+        index=eng.requests[req.id].slots[-1],
+        bit=2,
+    )
+    eng.pump(faults=fault)  # strike lands mid-verify
+    res = eng.result(req.id)
+    assert res["status"] == DONE
+    assert res["faults"] == 1 and eng.ledger.totals[req.id]["events"] == 1.0
+    assert res["tokens"] == ref, "mid-verify strike corrupted the commit"
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+def test_draft_len_exceeding_remaining_budget_is_clamped():
+    """draft_len > remaining token budget: the per-slot k_eff clamp keeps
+    the commit inside the budget — the request finishes with EXACTLY
+    max_new_tokens tokens, bitwise equal to greedy, never over-emitting."""
+    cfg, scfg = tiny_lm()
+    prompt = (np.arange(3, dtype=np.int32) * 11 + 2) % cfg.vocab_size
+    for n in (1, 2, 3):
+        ref = greedy_ref(cfg, scfg, prompt, n)
+        eng = lm_engine(cfg, spec_cfg(scfg, draft_len=6))
+        req = Request(prompt=prompt, max_new_tokens=n, spec=SpecConfig(draft_len=6))
+        assert eng.submit(req)
+        eng.pump()
+        res = eng.result(req.id)
+        assert res["status"] == DONE and res["n_tokens"] == n
+        assert res["tokens"] == ref
+
+
+def test_spec_and_chunked_prefill_walk_share_a_tick():
+    """A slot walking its pending prompt tail and a slot verifying draft
+    tokens share the same resident tick (the walk and the verify are the
+    same sub-step machinery): both requests stay bitwise-parity clean."""
+    cfg, scfg = tiny_lm()
+    chunked = dc.replace(
+        spec_cfg(scfg, draft_len=3), prefill_chunk=2, prefill_bucket_min=2
+    )
+    rng = np.random.default_rng(5)
+    long_p = rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+    short_p = rng.integers(0, cfg.vocab_size, size=3).astype(np.int32)
+    ref_long = greedy_ref(cfg, scfg, long_p, 6)
+    ref_short = greedy_ref(cfg, scfg, short_p, 8)
+
+    eng = lm_engine(cfg, chunked)
+    spec_req = Request(
+        prompt=short_p, max_new_tokens=8, spec=SpecConfig(draft_len=3)
+    )
+    assert eng.submit(spec_req)
+    eng.pump(max_ticks=1)  # speculating steadily
+    walk_req = Request(prompt=long_p, max_new_tokens=6)
+    assert eng.submit(walk_req)  # 10 pending tokens: walks 5 ticks
+    eng.pump()
+    assert eng.result(spec_req.id)["tokens"] == ref_short
+    assert eng.result(walk_req.id)["tokens"] == ref_long
+    assert eng.metrics()["request_faults"] == {}
+
+
+def test_paged_page_fault_during_verify_keeps_parity():
+    """With tiny pages every verify walk crosses page boundaries: the
+    pre-tick hook demand-maps pages for the whole k_eff+1 write window
+    (host mirror of spec_k_eff), page faults are charged, and the tokens
+    stay bitwise equal to dense greedy."""
+    cfg, scfg = tiny_lm()
+    prompt = (np.arange(5, dtype=np.int32) * 3 + 4) % cfg.vocab_size
+    ref = greedy_ref(cfg, scfg, prompt, 12)
+
+    sc = dc.replace(scfg, spec=SpecConfig(draft_len=4), paged=True, page_size=4)
+    eng = lm_engine(cfg, sc)
+    req = Request(prompt=prompt, max_new_tokens=12, spec=SpecConfig(draft_len=4))
+    assert eng.submit(req)
+    eng.pump()
+    res = eng.result(req.id)
+    assert res["status"] == DONE
+    assert res["tokens"] == ref
+    m = eng.metrics()
+    assert m["page_faults"] > 0  # verify walks demand-mapped pages
+    assert m["spec_tokens_per_tick"] == 5.0
+
+
+def test_spec_request_on_plain_engine_degrades_to_greedy():
+    """A request asking for speculation on an engine built without a
+    resident draft silently decodes plain (same fallback pattern as the
+    paged/bucketing carve-outs) — tokens identical, one per tick."""
+    cfg, scfg = tiny_lm()
+    prompt = (np.arange(4, dtype=np.int32) * 9 + 5) % cfg.vocab_size
+    ref = greedy_ref(cfg, scfg, prompt, 6)
+    eng = lm_engine(cfg, scfg)  # no scfg.spec
+    req = Request(prompt=prompt, max_new_tokens=6, spec=SpecConfig(draft_len=4))
+    assert eng.submit(req)
+    eng.pump()
+    assert eng.result(req.id)["tokens"] == ref
+    assert "spec_tokens_per_tick" not in eng.metrics()
+
+
+def test_plain_request_on_spec_engine_decodes_one_per_tick():
+    """spec_k = 0 (request made no spec ask): the slot never enters the
+    verify walk — plain greedy, bitwise equal to a plain engine."""
+    cfg, scfg = tiny_lm()
+    prompt = (np.arange(6, dtype=np.int32) * 13 + 7) % cfg.vocab_size
+    ref = greedy_ref(cfg, scfg, prompt, 6)
+    eng = lm_engine(cfg, spec_cfg(scfg, draft_len=4))
+    req = Request(prompt=prompt, max_new_tokens=6)  # no spec ask
+    assert eng.submit(req)
+    eng.pump()
+    assert eng.result(req.id)["tokens"] == ref
+    assert eng.metrics()["spec_ticks"] == 0
+
+
+def test_draft_arch_mismatch_rejected_at_validation():
+    """One resident draft serves the engine: a request naming a DIFFERENT
+    draft arch is rejected at admission, not silently mis-served."""
+    cfg, scfg = tiny_lm()
+    eng = lm_engine(cfg, spec_cfg(scfg, draft_len=4))
+    req = Request(
+        prompt=np.arange(3, dtype=np.int32),
+        max_new_tokens=2,
+        spec=SpecConfig(draft_len=4, draft_arch="mamba2-2.7b"),
+    )
+    assert not eng.submit(req)
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(draft_len=0)

@@ -1,0 +1,92 @@
+"""Check relative links in the repo's markdown docs.
+
+Scans README.md, docs/*.md, ROADMAP.md, CHANGES.md, PAPER.md for
+markdown links ``[text](target)`` and fails (exit 1) when a RELATIVE
+target does not resolve to a file or directory in the repo.  External
+links (http/https/mailto) and pure in-page anchors (#...) are skipped;
+a relative target's ``#fragment`` suffix is stripped before the check
+(fragments are not validated).  Inline code spans and fenced code
+blocks are ignored, so example snippets can show link syntax freely.
+
+The CI docs gate runs this on every PR:
+
+    python tools/check_links.py            # from the repo root
+    python tools/check_links.py docs README.md   # explicit targets
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^(```|~~~)")
+CODE_SPAN = re.compile(r"`[^`]*`")
+
+DEFAULT_TARGETS = ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
+                   "PAPERS.md", "docs")
+
+
+def md_files(root: Path, targets: tuple[str, ...]) -> list[Path]:
+    out = []
+    for t in targets:
+        p = root / t
+        if p.is_dir():
+            out.extend(sorted(p.glob("**/*.md")))
+        elif p.is_file():
+            out.append(p)
+    return out
+
+
+def check_file(path: Path, root: Path) -> list[str]:
+    errors = []
+    in_fence = False
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), start=1):
+        if FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK.finditer(CODE_SPAN.sub("``", line)):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            try:
+                resolved.relative_to(root.resolve())
+            except ValueError:
+                errors.append(
+                    f"{path.relative_to(root)}:{lineno}: link "
+                    f"escapes the repo: {target}"
+                )
+                continue
+            if not resolved.exists():
+                errors.append(
+                    f"{path.relative_to(root)}:{lineno}: broken "
+                    f"relative link: {target}"
+                )
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(__file__).resolve().parent.parent
+    targets = tuple(argv) if argv else DEFAULT_TARGETS
+    files = md_files(root, targets)
+    if not files:
+        print(f"check_links: no markdown files under {targets}", file=sys.stderr)
+        return 1
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
