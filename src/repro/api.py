@@ -78,6 +78,7 @@ from repro.core.ir import compile_source  # noqa: F401
 from repro.core.program import MisoProgram  # noqa: F401
 from repro.core.redundancy import FaultLedger  # noqa: F401
 from repro.models.lm_cells import ServeConfig, SpecConfig  # noqa: F401
+from repro.obs import MetricsRegistry, Tracer  # noqa: F401
 
 
 def serve(program, adapter, **engine_opts):
@@ -90,8 +91,13 @@ def serve(program, adapter, **engine_opts):
                    cell (LM: ``repro.serving.lm.lm_engine_parts`` returns
                    program and adapter together).
     engine_opts -- ``backend`` (default "lockstep"; needs ``pure_step``),
-                   ``max_queue``, ``time_fn``, plus any ``compile()``
-                   option (``compare_every``, ``checkpoint_cb``/
+                   ``max_queue``, ``time_fn``, ``tracer`` (a
+                   ``miso.Tracer``: per-tick spans, request lifecycle,
+                   strike timelines — Perfetto-exportable; None = off and
+                   provably free), ``registry`` (a shared
+                   ``miso.MetricsRegistry``; the engine creates its own
+                   otherwise), plus any ``compile()`` option
+                   (``compare_every``, ``checkpoint_cb``/
                    ``checkpoint_every`` to snapshot resident state, ...).
 
     Returns the engine (call ``.start(key)`` before submitting).  Request
@@ -108,6 +114,7 @@ __all__ = [
     "Executor",
     "FaultLedger",
     "FaultSpec",
+    "MetricsRegistry",
     "MisoProgram",
     "MisoSemanticsError",
     "NO_REDUNDANCY",
@@ -115,6 +122,7 @@ __all__ = [
     "RunResult",
     "ServeConfig",
     "SpecConfig",
+    "Tracer",
     "available_backends",
     "compile",
     "compile_source",

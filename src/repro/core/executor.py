@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Callable, Iterator, Mapping, Optional
 
 import jax
@@ -180,12 +181,21 @@ class Executor:
         donate: bool = True,
         checkpoint_cb: Optional[Callable[[int, dict], None]] = None,
         checkpoint_every: int = 0,
+        on_event: Optional[Callable[[str, dict], None]] = None,
     ):
         self.program = program
         self.mesh = mesh
         self.sharding = sharding
         self.compare_every = compare_every or 1
         self.donate = donate
+        #: observability hook, sibling of swap/checkpoint_cb in the base
+        #: protocol: ``on_event(name, attrs)`` fires for executor-level
+        #: events — timed steps and scan segments (``dur_us`` in attrs),
+        #: checkpoints, replica-compare mismatches, §IV recoveries.  None
+        #: (the default) is genuinely free: every emission site is guarded,
+        #: so no event dicts are allocated and no clocks are read.
+        #: ``Tracer.executor_hook()`` adapts this into trace events.
+        self.on_event = on_event
         #: checkpointing is part of the base protocol: ``run``/``stream``
         #: hand the cb the consistent pre-step buffer every
         #: ``checkpoint_every`` steps (MISO's double buffering makes the
@@ -271,8 +281,25 @@ class Executor:
         collected = [] if collect is not None else None
         for t in range(start, start + n_steps, stride):
             self._maybe_checkpoint(t, states)
-            states, rep = self.step(
-                states, step_idx=t, fault=_fault_in_window(flist, t, stride))
+            if self.on_event is not None:
+                # bracket the dispatch AND the device work: the split
+                # tells host-bound from device-bound steps apart
+                t0 = time.perf_counter()
+                states, rep = self.step(
+                    states, step_idx=t,
+                    fault=_fault_in_window(flist, t, stride))
+                t1 = time.perf_counter()
+                jax.block_until_ready(states)
+                t2 = time.perf_counter()
+                self.on_event("step", {
+                    "step": t, "dur_us": (t2 - t0) * 1e6,
+                    "dispatch_us": (t1 - t0) * 1e6,
+                    "device_us": (t2 - t1) * 1e6,
+                })
+            else:
+                states, rep = self.step(
+                    states, step_idx=t,
+                    fault=_fault_in_window(flist, t, stride))
             totals = rep if totals is None else jax.tree.map(
                 lambda a, b: a + b, totals, rep)
             if collect is not None:
@@ -383,18 +410,64 @@ class Executor:
             "recoveries": list(self.recoveries),
         }
 
+    def export_metrics(self, registry) -> None:
+        """Publish this executor's statistics into a ``MetricsRegistry``
+        (obs/metrics.py) — typed instruments instead of the ad-hoc dict:
+        counters for steps/recoveries and per-cell fault totals, gauges
+        for flagged/suspect cells.  Idempotent per call (set, not inc)."""
+        registry.gauge(
+            "executor_steps",
+            "transitions executed by the resident executor").set(self._t)
+        registry.gauge(
+            "executor_recoveries_total",
+            "§IV tie-break recoveries performed").set(len(self.recoveries))
+        registry.gauge(
+            "executor_flagged_cells",
+            "cells currently flagged by the fault ledger").set(
+                len(self.ledger.flagged))
+        registry.gauge(
+            "executor_suspect_cells",
+            "cells suspected of a permanent fault").set(
+                len(self.ledger.permanent_fault_suspects()))
+        for cell, tot in self.ledger.totals.items():
+            safe = "".join(c if c.isalnum() else "_" for c in cell)
+            registry.gauge(
+                f"executor_fault_events_{safe}",
+                f"replica-compare mismatch events attributed to cell "
+                f"{cell}").set(float(tot["events"]))
+
     # -- shared internals -------------------------------------------------
     def _maybe_checkpoint(self, t: int, states: dict) -> None:
         if (self.checkpoint_cb is not None and self.checkpoint_every
                 and t % self.checkpoint_every == 0):
             # the pre-step buffer is immutable for the duration of the next
             # dispatch (double buffering) — a consistent snapshot for free
-            self.checkpoint_cb(t, states)
+            if self.on_event is not None:
+                t0 = time.perf_counter()
+                self.checkpoint_cb(t, states)
+                self.on_event("checkpoint", {
+                    "step": t,
+                    "dur_us": (time.perf_counter() - t0) * 1e6,
+                })
+            else:
+                self.checkpoint_cb(t, states)
 
     def _ledger_update(self, step: int, reports: dict) -> None:
         if _is_traced(reports):
             return  # inside an outer trace: no host-side accounting
-        self.ledger.update(step, jax.tree.map(jax.device_get, reports))
+        host = jax.tree.map(jax.device_get, reports)
+        self.ledger.update(step, host)
+        if self.on_event is not None:
+            self._emit_mismatches(step, host)
+
+    def _emit_mismatches(self, step: int, host_reports: dict) -> None:
+        """Surface replica-compare disagreements (caller guards on
+        ``on_event``) — one event per cell that detected any this step."""
+        for name, rep in host_reports.items():
+            ev = rep.get("events") if isinstance(rep, dict) else None
+            if ev is not None and int(ev) > 0:
+                self.on_event("compare_mismatch", {
+                    "step": int(step), "cell": name, "events": int(ev)})
 
     def _mesh_ctx(self):
         import contextlib
@@ -563,9 +636,16 @@ class LockstepExecutor(Executor):
             else:
                 n = start + n_steps - t
             self._maybe_checkpoint(t, states)
+            seg_t0 = time.perf_counter() if self.on_event is not None else 0.0
             states, summed, stacked, collected = self._scan_segment(
                 states, n, t, fault, collect,
                 self.donate and not cp)
+            if self.on_event is not None:
+                jax.block_until_ready(states)
+                self.on_event("scan_segment", {
+                    "start": t, "n_steps": n,
+                    "dur_us": (time.perf_counter() - seg_t0) * 1e6,
+                })
             totals = summed if totals is None else jax.tree.map(
                 lambda a, b: a + b, totals, summed)
             if collect is not None:
@@ -575,9 +655,10 @@ class LockstepExecutor(Executor):
             else:
                 host = jax.tree.map(jax.device_get, stacked)
                 for i in range(n // k):
-                    self.ledger.update(
-                        t + i * k + k - 1,
-                        jax.tree.map(lambda x, i=i: x[i], host))
+                    step_host = jax.tree.map(lambda x, i=i: x[i], host)
+                    self.ledger.update(t + i * k + k - 1, step_host)
+                    if self.on_event is not None:
+                        self._emit_mismatches(t + i * k + k - 1, step_host)
             t += n
         if not traced:
             self._t = start + n_steps
@@ -704,12 +785,26 @@ class HostExecutor(Executor):
             states, reports = self._step(prev, jnp.int32(t), fault)
         host_reports = jax.tree.map(jax.device_get, reports)
         self.ledger.update(t, host_reports)
+        if self.on_event is not None:
+            self._emit_mismatches(t, host_reports)
         # paper §IV: DMR mismatch -> third equal transition decides
         for name, rep in host_reports.items():
             cell = self.program.cells[name]
             if cell.redundancy.level == 2 and rep["events"] > 0:
-                states = dict(states)
-                states[name] = self._tiebreakers[name](prev, states[name])
+                if self.on_event is not None:
+                    t0 = time.perf_counter()
+                    states = dict(states)
+                    states[name] = self._tiebreakers[name](
+                        prev, states[name])
+                    jax.block_until_ready(states[name])
+                    self.on_event("dmr_recovery", {
+                        "step": t, "cell": name,
+                        "dur_us": (time.perf_counter() - t0) * 1e6,
+                    })
+                else:
+                    states = dict(states)
+                    states[name] = self._tiebreakers[name](
+                        prev, states[name])
                 self.recoveries.append((t, name))
         self._t = t + 1
         return states, host_reports
@@ -852,6 +947,12 @@ class WavefrontExecutor(Executor):
                     step_reports.setdefault(t, {}).update(reps)
                     clock[ui] = t + 1
                     self.trace.append((ui, t))
+                    if self.on_event is not None:
+                        # the barrier-free schedule is the observable:
+                        # emission order IS the wavefront execution order
+                        self.on_event("unit_step", {
+                            "unit": ui, "step": t,
+                            "lead": max(clock) - min(clock)})
                     progressed = True
         if any(c != n_steps for c in clock):
             raise RuntimeError(f"wavefront deadlock: clocks={clock}")
@@ -943,6 +1044,7 @@ def compile(
     donate: bool = True,
     checkpoint_cb: Optional[Callable[[int, dict], None]] = None,
     checkpoint_every: int = 0,
+    on_event: Optional[Callable[[str, dict], None]] = None,
     **backend_opts,
 ) -> Executor:
     """Compile a MisoProgram into an Executor — the single front door.
@@ -970,6 +1072,13 @@ def compile(
                      checkpoint boundaries; the wavefront back-end supports
                      it on ``stream`` only (its ``run`` has no globally
                      consistent mid-run cut).
+    on_event      -- ``(name, attrs) -> None`` observability hook, part of
+                     the base protocol alongside swap/checkpoint_cb: fires
+                     for timed steps, scan segments, checkpoints, compare
+                     mismatches, and §IV recoveries on every back-end.
+                     ``Tracer.executor_hook()`` (obs/trace.py) adapts it
+                     into Perfetto-loadable trace events.  None (default)
+                     allocates nothing and reads no clocks.
     backend_opts  -- forwarded to the back-end (host: ledger, jit;
                      wavefront: window, jit; lockstep_pallas: interpret,
                      block; spatial_lockstep: pod_axis).
@@ -1008,4 +1117,4 @@ def compile(
     return cls(program, mesh=mesh, sharding=sharding,
                compare_every=compare_every, donate=donate,
                checkpoint_cb=checkpoint_cb, checkpoint_every=checkpoint_every,
-               **backend_opts)
+               on_event=on_event, **backend_opts)

@@ -104,6 +104,14 @@ def main():
     ap.add_argument("--spec-arch", default="",
                     help="draft architecture for --spec-k (reduced "
                          "config name; empty = self-drafting)")
+    # observability
+    ap.add_argument("--trace-out", default="",
+                    help="attach a tracer and export the run as Chrome "
+                         "trace-event JSON to this path (open in "
+                         "ui.perfetto.dev; see docs/observability.md)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics-registry snapshot (JSON) to "
+                         "this path on exit")
     # static path
     ap.add_argument("--static", action="store_true",
                     help="fixed-batch reference path (no engine)")
@@ -138,7 +146,8 @@ def engine_main(cfg, args):
                        paged=args.paged, page_size=args.page_size,
                        spec=spec)
     prog, adapter = lm_engine_parts(cfg, scfg, LOCAL)
-    engine = miso.serve(prog, adapter)
+    tracer = miso.Tracer() if args.trace_out else None
+    engine = miso.serve(prog, adapter, tracer=tracer)
     engine.start(jax.random.PRNGKey(args.seed))
 
     rng = np.random.default_rng(args.seed + 1)
@@ -212,9 +221,15 @@ def engine_main(cfg, args):
     m = engine.metrics()
     print(f"engine: {m['done']}/{m['submitted']} requests done | "
           f"{m['tokens_out']} tokens in {wall:.2f}s "
-          f"({m['tokens_out'] / max(wall, 1e-9):.1f} tok/s) | "
+          f"({m['tokens_out'] / max(wall, 1e-9):.1f} tok/s wall, "
+          f"{m['tokens_per_s_busy']:.1f} tok/s busy, "
+          f"util={m['utilization']:.0%}) | "
           f"ttft p50={m.get('ttft_p50_s', 0):.3f}s "
           f"p99={m.get('ttft_p99_s', 0):.3f}s")
+    # the per-counter stats come straight from the metrics registry (the
+    # same instruments --metrics-json snapshots and Prometheus scrapes)
+    print("metrics:")
+    print(engine.registry.render("serving_"))
     print(f"prefill: {m['prefill_compiles']} compiles "
           f"(buckets={m['prefill_buckets']}, chunk={m['prefill_chunk']}) | "
           f"defrag moves={m['defrag_moves']}")
@@ -242,6 +257,26 @@ def engine_main(cfg, args):
             raise SystemExit("strike was not attributed to its request")
         print(f"strike: detected, attributed to {victim.id}, repaired "
               f"(events={m['fault_totals'][victim.id]['events']:.0f})")
+    if tracer is not None:
+        if args.strike:
+            # the dependability timeline must be IN the trace: the repair
+            # instant on the struck request's own track
+            evs = tracer.events()
+            vtid = tracer.tid(victim.id)
+            if not any(e.get("name") == "strike_repaired"
+                       and e["tid"] == vtid for e in evs):
+                raise SystemExit(
+                    "strike repair event missing from trace")
+        tracer.export(args.trace_out)
+        print(f"trace: {tracer.emitted} events "
+              f"({tracer.dropped} dropped) -> {args.trace_out}")
+    if args.metrics_json:
+        import json
+
+        engine.metrics()  # refresh gauges before snapshotting
+        with open(args.metrics_json, "w", encoding="utf-8") as f:
+            json.dump(engine.registry.snapshot(), f, indent=1)
+        print(f"metrics snapshot -> {args.metrics_json}")
 
 
 # ===========================================================================

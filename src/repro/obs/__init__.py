@@ -1,0 +1,33 @@
+"""Observability: structured tracing + metrics registry.
+
+``obs.trace`` — a bounded ring-buffer tracer exporting Chrome
+trace-event JSON (Perfetto-loadable) with engine ticks, request
+lifecycle spans, speculation verify walks, page faults, and the
+detect → attribute → repair dependability timeline.
+
+``obs.metrics`` — Counter / Gauge / Histogram instruments with
+Prometheus text exposition and JSON snapshots; streaming histograms
+back the engine's TTFT/latency percentiles.
+
+See docs/observability.md for the event taxonomy and metrics reference.
+"""
+
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    log_buckets,
+)
+from repro.obs.trace import Tracer
+
+__all__ = [
+    "Counter",
+    "DEFAULT_BUCKETS",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Tracer",
+    "log_buckets",
+]

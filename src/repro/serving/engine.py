@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import executor as _ex
 from repro.core.redundancy import FaultLedger
+from repro.obs import MetricsRegistry, Tracer
 
 from .request import (
     CANCELLED,
@@ -54,6 +55,21 @@ from .request import (
 from .slots import SlotManager, SlotSurgery, default_surgery
 
 Pytree = Any
+
+
+def _fence(x: Pytree) -> None:
+    """Block until ONE leaf of ``x`` is ready.
+
+    The traced paths bracket device work this way.  One leaf is a
+    sufficient fence for the outputs of a single compiled executable —
+    they become ready together — and descending to it is O(depth),
+    where ``jax.block_until_ready`` on the whole pytree walks (and
+    blocks) every leaf, which costs measurable per-tick time on
+    sub-millisecond ticks.
+    """
+    while isinstance(x, (dict, list, tuple)):
+        x = next(iter(x.values())) if isinstance(x, dict) else x[0]
+    jax.block_until_ready(x)
 
 
 # --------------------------------------------------------------------------
@@ -115,6 +131,11 @@ class SlotAdapter:
                    layout: the spatial-placement notch).  The paged
                    layout clears it — pages have no adjacency, so
                    replicated admissions never defragment.
+    attach_tracer -- optional ``(tracer) -> None``: hand the engine's
+                   tracer to adapter-side closures that emit their own
+                   events (the paged ``pre_tick`` traces demand-map page
+                   faults).  Called once by the engine when a tracer is
+                   attached; never called when tracing is off.
     """
 
     cell: str
@@ -131,6 +152,7 @@ class SlotAdapter:
     walk_chunk: int = 1
     contiguous_replicas: bool = True
     read_spec: Optional[Callable[[Pytree], tuple]] = None
+    attach_tracer: Optional[Callable[[Tracer], None]] = None
 
 
 @dataclasses.dataclass
@@ -152,6 +174,10 @@ class RequestRecord:
     #: has to consume before this request emits its first token (advances
     #: in lock-step with the device-side ``p_head`` cursor)
     prefill_remaining: int = 0
+    #: tracing only: a "prefill_walk" span is open on this request's
+    #: track (must be closed before the lifecycle span can end — B/E
+    #: events nest as a stack per track)
+    trace_walk_open: bool = False
 
     @property
     def id(self) -> str:
@@ -183,9 +209,25 @@ class ServingEngine:
         max_queue: int = 64,
         retain_results: int = 1024,
         time_fn: Callable[[], float] = time.monotonic,
+        tracer: Optional[Tracer] = None,
+        registry: Optional[MetricsRegistry] = None,
         **compile_opts,
     ):
         self.adapter = adapter
+        #: the observability pair.  ``tracer=None`` (default) is genuinely
+        #: free: every emission site is guarded, the harvest path never
+        #: allocates event objects, and tokens are bitwise-identical with
+        #: and without it (gated in tests/test_obs.py).  The registry is
+        #: always present — it IS the engine's counter storage.
+        self.tracer = tracer
+        self.registry = registry if registry is not None else MetricsRegistry()
+        if tracer is not None and "on_event" not in compile_opts:
+            # executor-level events (checkpoints, scan segments, compare
+            # mismatches) land on the tracer's "executor" track
+            compile_opts["on_event"] = tracer.executor_hook()
+        if tracer is not None and adapter.attach_tracer is not None:
+            # adapter closures (paged pre_tick page faults) emit too
+            adapter.attach_tracer(tracer)
         self.exe = _ex.compile(program, backend=backend, **compile_opts)
         if type(self.exe).pure_step is _ex.Executor.pure_step:
             raise ValueError(
@@ -205,22 +247,67 @@ class ServingEngine:
         #: Callers that want immediate reclamation call drop(rid).
         self.retain_results = retain_results
         self._finished: collections.deque[str] = collections.deque()
-        self._terminal_counts = {DONE: 0, CANCELLED: 0, EXPIRED: 0}
         self._states: Optional[dict] = None
         self._override: Optional[dict] = None
         self._tick_input: Optional[dict] = None
         self._tick_step: int = 0
-        self._ticks = 0
-        self._tokens_out = 0
-        self._submitted = 0
-        self._rejected_invalid = 0
-        self._defrag_moves = 0
+        #: counters live in the registry (typed instruments with
+        #: Prometheus/JSON exposition replace the old ad-hoc ints);
+        #: ``metrics()`` reads them back under the historical key names
+        R = self.registry
+        self._m_ticks = R.counter("serving_ticks_total", "engine ticks executed")
+        self._m_tokens = R.counter(
+            "serving_tokens_emitted_total", "tokens emitted to requests"
+        )
+        self._m_submitted = R.counter(
+            "serving_requests_submitted_total", "requests submitted"
+        )
+        self._m_rejected_invalid = R.counter(
+            "serving_requests_rejected_invalid_total",
+            "requests rejected by admission validation",
+        )
+        self._m_defrag = R.counter(
+            "serving_defrag_moves_total", "slot relocations by defrag"
+        )
+        self._m_strikes = R.counter(
+            "serving_strikes_detected_total",
+            "replica mismatches detected, attributed, and repaired",
+        )
+        self._m_terminal = {
+            DONE: R.counter("serving_requests_done_total", "requests completed"),
+            CANCELLED: R.counter(
+                "serving_requests_cancelled_total", "requests cancelled"
+            ),
+            EXPIRED: R.counter(
+                "serving_requests_expired_total", "requests past deadline"
+            ),
+        }
         #: speculative decoding: verify passes seen / tokens they
         #: committed / smallest single-pass commit (1 = some tick
         #: rejected the very first draft token)
-        self._spec_ticks = 0
-        self._spec_tokens = 0
+        self._m_spec_ticks = R.counter(
+            "serving_spec_verify_ticks_total", "speculative verify passes"
+        )
+        self._m_spec_tokens = R.counter(
+            "serving_spec_tokens_committed_total",
+            "tokens committed by speculative verify passes",
+        )
         self._spec_min_commit: Optional[int] = None
+        #: streaming TTFT/latency/tick-time distributions: observed at
+        #: emission/finish time over EVERY request ever served, so the
+        #: percentiles in ``metrics()`` are unbiased by the FIFO-bounded
+        #: record retention (the retain_results percentile-bias fix)
+        self._h_ttft = R.histogram(
+            "serving_ttft_seconds", "submit-to-first-token latency"
+        )
+        self._h_latency = R.histogram(
+            "serving_request_latency_seconds", "submit-to-terminal-status latency"
+        )
+        self._h_tick = R.histogram(
+            "serving_tick_seconds",
+            "wall time per engine tick (swap + dispatch + harvest); sum = busy_s",
+        )
+        self._trace_tick_ts0 = 0.0  # tracer-clock start of current tick
         self._t0: Optional[float] = None
 
         # the surgery bundle: dense whole-leaf ops by default, or the
@@ -251,9 +338,20 @@ class ServingEngine:
             reason = self.adapter.validate(req)
         rec = RequestRecord(req=req, status=QUEUED, submitted_at=self.time_fn())
         self.requests[req.id] = rec
-        self._submitted += 1
+        self._m_submitted.inc()
+        if self.tracer is not None:
+            # the request's lifecycle span: one track per request id,
+            # open from submission to terminal status (_finish_record)
+            self.tracer.begin(
+                "request",
+                req.id,
+                prompt_len=req.prompt_len,
+                level=req.policy.level,
+                max_new_tokens=req.max_new_tokens,
+            )
+            self.tracer.instant("queued", req.id)
         if reason is not None:
-            self._rejected_invalid += 1
+            self._m_rejected_invalid.inc()
             self._finish_record(rec, REJECTED)
             return False
         ok = self.queue.submit(req)
@@ -317,13 +415,44 @@ class ServingEngine:
         if not self.has_work():
             return 0
         ticks = 0
+        tr = self.tracer
         stream = self.exe.stream(self._states, swap=self._swap, faults=faults)
         try:
-            for states, _reports in stream:
+            while True:
+                tick_t0 = self.time_fn()
+                if tr is not None:
+                    ts0 = tr.now_us()
+                try:
+                    # one tick = swap (admit/join) + compiled step dispatch
+                    states, _reports = next(stream)
+                except StopIteration:
+                    break
+                if tr is not None:
+                    # host-dispatch vs device split: next() returns as
+                    # soon as the step is dispatched; the fence brackets
+                    # the device-side work.  Only done under a tracer —
+                    # the untraced engine never syncs here.
+                    ts1 = tr.now_us()
+                    _fence(states[self.adapter.cell])
+                    ts2 = tr.now_us()
+                    self._trace_tick_ts0 = ts0
                 states = self._postprocess(self._tick_step, states)
                 self._states = states
                 self._override = states
-                self._ticks += 1
+                self._m_ticks.inc()
+                self._h_tick.observe(self.time_fn() - tick_t0)
+                if tr is not None:
+                    ts3 = tr.now_us()
+                    tr.complete(
+                        "tick",
+                        "engine",
+                        ts0,
+                        ts3 - ts0,
+                        step=self._tick_step,
+                        dispatch_us=ts1 - ts0,
+                        device_us=ts2 - ts1,
+                        harvest_us=ts3 - ts2,
+                    )
                 ticks += 1
                 if max_ticks is not None and ticks >= max_ticks:
                     break
@@ -366,7 +495,12 @@ class ServingEngine:
             if not self.queue.take(req):
                 continue  # head expired underneath us: re-validate
             rec = self.requests[req.id]
-            out = self.adapter.prefill(req, states)
+            if self.tracer is not None:
+                with self.tracer.span("prefill", req.id, prompt_len=req.prompt_len):
+                    out = self.adapter.prefill(req, states)
+                    _fence(out[0])
+            else:
+                out = self.adapter.prefill(req, states)
             slot_state, first = out[0], out[1]
             pending = out[2] if len(out) > 2 else 0
             slots = self.slots.alloc(req.id, req.n_slots, contiguous=contig)
@@ -377,6 +511,14 @@ class ServingEngine:
             rec.status = RUNNING
             rec.started_at = now
             rec.prefill_remaining = int(pending)
+            if self.tracer is not None:
+                self.tracer.instant("admitted", req.id, step=t, slots=list(slots))
+                if pending:
+                    # chunked prefill: the in-transition walk consumes
+                    # the prompt tail over the next ticks; the span ends
+                    # when prefill_remaining drains (_postprocess)
+                    self.tracer.begin("prefill_walk", req.id, pending=int(pending))
+                    rec.trace_walk_open = True
             if pending == 0:
                 # the prefill's greedy continuation IS the first emitted
                 # token; with a pending tail the first token arrives when
@@ -397,7 +539,9 @@ class ServingEngine:
             rec = self.requests.get(rid)
             if rec is not None:  # engine's record copy
                 rec.slots[rec.slots.index(src)] = dst
-            self._defrag_moves += 1
+            self._m_defrag.inc()
+            if self.tracer is not None:
+                self.tracer.instant("defrag_move", "engine", src=src, dst=dst, rid=rid)
         return states
 
     # -- per-tick postprocessing: repair -> harvest -> evict ---------------
@@ -435,6 +579,9 @@ class ServingEngine:
                         if status is not None:
                             states = self._evict(states, rec, status)
                         continue
+                    if self.tracer is not None and rec.trace_walk_open:
+                        self.tracer.end(rec.id, "prefill_walk")
+                        rec.trace_walk_open = False
                     # the tick consuming the LAST prompt token produced
                     # the first real continuation token -> harvest it
                 slot = rec.slots[0]
@@ -446,13 +593,28 @@ class ServingEngine:
                     # they would have under plain decode (eviction
                     # mid-commit just truncates the surplus — the extra
                     # cache entries leave with the slot)
-                    self._spec_ticks += 1
-                    self._spec_tokens += n_commit
+                    self._m_spec_ticks.inc()
+                    self._m_spec_tokens.inc(n_commit)
                     self._spec_min_commit = (
                         n_commit
                         if self._spec_min_commit is None
                         else min(self._spec_min_commit, n_commit)
                     )
+                    if self.tracer is not None:
+                        # the verify walk ran inside this tick's compiled
+                        # step: span it over the tick so far, carrying
+                        # the accept count (committed = accepted drafts
+                        # + the verifier's own continuation token)
+                        ts0 = self._trace_tick_ts0
+                        self.tracer.complete(
+                            "verify_walk",
+                            rec.id,
+                            ts0,
+                            self.tracer.now_us() - ts0,
+                            step=t,
+                            committed=n_commit,
+                            accepted=n_commit - 1,
+                        )
                     status = None
                     for i in range(n_commit):
                         self._emit(rec, sout[slot, i : i + 1], now)
@@ -479,6 +641,15 @@ class ServingEngine:
             if all(eq) and (len(s) < 3 or np.array_equal(fps[s[1]], fps[s[2]])):
                 continue
             level = rec.req.policy.level
+            tr = self.tracer
+            fid = None
+            if tr is not None:
+                # the dependability timeline: detect -> attribute ->
+                # repair as ordered instants on the struck request's
+                # track, with a flow arrow from detection into repair
+                fid = tr.flow_id()
+                tr.instant("strike_detected", rec.id, step=t, level=level)
+                tr.flow_start(fid, rec.id, "strike")
             if level == 3:
                 pairs = [
                     (0, 1, np.array_equal(fps[s[0]], fps[s[1]])),
@@ -492,8 +663,19 @@ class ServingEngine:
                     # real damage: elements of the struck replica slot
                     # differing from a majority slot (pre-repair)
                     dmg = self._ops.damage(states, s[i], s[bad])
+                    if tr is not None:
+                        tr.instant(
+                            "strike_attributed",
+                            rec.id,
+                            step=t,
+                            replicas=[bad],
+                            damage_elems=float(dmg),
+                        )
                     states = self._ops.copy(states, s[i], s[bad])
                     self._attribute(rec, t, [bad], level, dmg)
+                    if tr is not None:
+                        tr.instant("strike_repaired", rec.id, step=t, repair="tmr_vote")
+                        tr.flow_end(fid, rec.id, "strike")
                     continue
                 bad = [0, 1, 2]  # triple divergence: fall through to replay
             else:
@@ -503,7 +685,12 @@ class ServingEngine:
                 # to decide between the two possible outcomes" — replay
                 # the tick (no armed fault) from the immutable pre-tick
                 # buffer; pure_step has no ledger/counter side effects
-                replay, _ = self.exe.pure_step(self._tick_input, t)
+                if tr is not None:
+                    with tr.span("dmr_replay", "engine", step=t):
+                        replay, _ = self.exe.pure_step(self._tick_input, t)
+                        _fence(replay[self.adapter.cell])
+                else:
+                    replay, _ = self.exe.pure_step(self._tick_input, t)
                 rfps = np.asarray(
                     jax.device_get(self._ops.fingerprints(replay[self.adapter.cell]))
                 )
@@ -512,9 +699,20 @@ class ServingEngine:
                     i for i, sl in enumerate(s) if not np.array_equal(fps[sl], rfps[sl])
                 ]
             dmg = sum(self._ops.damage_vs(states, replay, s[b]) for b in bad)
+            if tr is not None:
+                tr.instant(
+                    "strike_attributed",
+                    rec.id,
+                    step=t,
+                    replicas=list(bad),
+                    damage_elems=float(dmg),
+                )
             for sl in s:
                 states = self._ops.adopt(states, replay, sl)
             self._attribute(rec, t, bad, level, dmg)
+            if tr is not None:
+                tr.instant("strike_repaired", rec.id, step=t, repair="dmr_replay")
+                tr.flow_end(fid, rec.id, "strike")
         return states
 
     def _attribute(
@@ -530,6 +728,7 @@ class ServingEngine:
         (<=4) differing 128-bit fingerprint words.  ``per_replica`` is
         sized to the request's actual level (DMR -> 2 entries)."""
         rec.faults += 1
+        self._m_strikes.inc()
         per = [0.0] * level
         for b in bad:
             per[b] = 1.0
@@ -543,9 +742,14 @@ class ServingEngine:
     # -- emit / finish / evict --------------------------------------------
     def _emit(self, rec: RequestRecord, token: np.ndarray, now: float) -> None:
         rec.tokens.append(token)
-        self._tokens_out += 1
+        self._m_tokens.inc()
         if rec.ttft is None:
             rec.ttft = now - rec.submitted_at
+            # streamed at observation time: the TTFT percentiles survive
+            # record retention limits (every request ever served counts)
+            self._h_ttft.observe(rec.ttft)
+            if self.tracer is not None:
+                self.tracer.instant("first_token", rec.id, ttft_s=rec.ttft)
 
     def _should_finish(self, rec: RequestRecord, now: float) -> Optional[str]:
         if rec.cancel_requested:
@@ -575,8 +779,21 @@ class ServingEngine:
         rec.status = status
         rec.finished_at = self.time_fn()
         self.queue.status[rec.id] = status
-        if status in self._terminal_counts:
-            self._terminal_counts[status] += 1
+        if status in self._m_terminal:
+            self._m_terminal[status].inc()
+        self._h_latency.observe(rec.finished_at - rec.submitted_at)
+        if self.tracer is not None:
+            if rec.trace_walk_open:  # evicted mid-walk: close inner span
+                self.tracer.end(rec.id, "prefill_walk")
+                rec.trace_walk_open = False
+            self.tracer.instant(status, rec.id)
+            self.tracer.end(
+                rec.id,
+                "request",
+                status=status,
+                n_tokens=len(rec.tokens),
+                faults=rec.faults,
+            )
         self._finished.append(rec.id)
         while len(self._finished) > self.retain_results:
             self.drop(self._finished[0])
@@ -601,48 +818,78 @@ class ServingEngine:
 
     # -- the metrics / SLO surface ----------------------------------------
     def metrics(self) -> dict:
+        """The engine's SLO surface.  The historical keys are back-compat
+        views over the registry instruments; ``engine.registry`` holds
+        the same numbers as typed Counter/Gauge/Histogram instruments
+        with Prometheus/JSON exposition.
+
+        TTFT percentiles come from the streaming histogram (observed at
+        first-token time for EVERY request ever served) — unbiased by
+        the FIFO ``retain_results`` record retention, unlike the old
+        exact-over-retained-records computation.
+
+        ``busy_s`` is the tick-loop occupancy (sum of per-tick wall
+        times); ``tokens_per_s_busy`` divides by it, so engine
+        throughput under light load is not understated by idle gaps
+        between arrivals the way wall-clock ``tokens_per_s`` is.
+        """
         self._reconcile()
         recs = list(self.requests.values())
-        ttfts = sorted(r.ttft for r in recs if r.ttft is not None)
         wall = (self.time_fn() - self._t0) if self._t0 is not None else 0.0
+        busy = self._h_tick.sum
         running = sum(1 for r in recs if r.status == RUNNING)
+        tokens_out = int(self._m_tokens.value)
+        R = self.registry
+        R.gauge("serving_queue_depth", "requests waiting").set(self.queue.depth)
+        R.gauge("serving_active_requests", "requests resident").set(running)
+        R.gauge("serving_free_slots", "unoccupied batch slots").set(self.slots.free)
+        R.counter(
+            "serving_requests_rejected_queue_full_total",
+            "requests shed by queue back-pressure",
+        ).value = float(self.queue.rejected)
+        self.exe.export_metrics(R)
         m = {
             "backend": self.exe.name,
             "n_slots": self.adapter.n_slots,
-            "ticks": self._ticks,
+            "ticks": int(self._m_ticks.value),
             "queue_depth": self.queue.depth,
             "active_requests": running,
             "free_slots": self.slots.free,
             # cumulative over the engine's lifetime (records themselves are
             # retained only up to retain_results)
-            "submitted": self._submitted,
-            "done": self._terminal_counts[DONE],
-            "cancelled": self._terminal_counts[CANCELLED],
-            "expired": self._terminal_counts[EXPIRED],
+            "submitted": int(self._m_submitted.value),
+            "done": int(self._m_terminal[DONE].value),
+            "cancelled": int(self._m_terminal[CANCELLED].value),
+            "expired": int(self._m_terminal[EXPIRED].value),
             # back-pressure and bad input are different signals: a full
             # queue calls for shedding load, a validation failure for
             # fixing the client
             "rejected_queue_full": self.queue.rejected,
-            "rejected_invalid": self._rejected_invalid,
-            "rejected": self.queue.rejected + self._rejected_invalid,
-            "defrag_moves": self._defrag_moves,
-            "tokens_out": self._tokens_out,
+            "rejected_invalid": int(self._m_rejected_invalid.value),
+            "rejected": self.queue.rejected + int(self._m_rejected_invalid.value),
+            "defrag_moves": int(self._m_defrag.value),
+            "tokens_out": tokens_out,
             "wall_s": wall,
-            "tokens_per_s": self._tokens_out / wall if wall > 0 else 0.0,
+            "busy_s": busy,
+            "utilization": busy / wall if wall > 0 else 0.0,
+            "tokens_per_s": tokens_out / wall if wall > 0 else 0.0,
+            "tokens_per_s_busy": tokens_out / busy if busy > 0 else 0.0,
             "request_faults": {r.id: r.faults for r in recs if r.faults},
             "fault_totals": self.ledger.totals,
             "suspects": self.ledger.permanent_fault_suspects(),
         }
         if self.adapter.read_spec is not None:
-            m["spec_ticks"] = self._spec_ticks
-            m["spec_tokens"] = self._spec_tokens
+            spec_ticks = int(self._m_spec_ticks.value)
+            spec_tokens = int(self._m_spec_tokens.value)
+            m["spec_ticks"] = spec_ticks
+            m["spec_tokens"] = spec_tokens
             m["spec_min_commit"] = self._spec_min_commit
             m["spec_tokens_per_tick"] = (
-                self._spec_tokens / self._spec_ticks if self._spec_ticks else 0.0
+                spec_tokens / spec_ticks if spec_ticks else 0.0
             )
-        if ttfts:
-            m["ttft_p50_s"] = float(np.percentile(ttfts, 50))
-            m["ttft_p99_s"] = float(np.percentile(ttfts, 99))
+        if self._h_ttft.count:
+            m["ttft_p50_s"] = self._h_ttft.quantile(0.5)
+            m["ttft_p99_s"] = self._h_ttft.quantile(0.99)
         if self.adapter.stats is not None:
             m.update(self.adapter.stats())
         return m

@@ -255,6 +255,12 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
             )
         return slot_decoder_init(cfg, 1, scfg.max_len, dcfg, spec_len)
 
+    def attach_tracer(tracer) -> None:
+        # the paged pre-tick hook emits its own page_fault instants;
+        # dense engines have no adapter-side emitters (no-op)
+        if pre_tick is not None:
+            pre_tick.tracer = tracer
+
     adapter = SlotAdapter(
         cell="decoder",
         n_slots=scfg.batch,
@@ -272,5 +278,6 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
         read_spec=(
             (lambda dec: (dec["spec_out"], dec["spec_n"])) if spec else None
         ),
+        attach_tracer=attach_tracer,
     )
     return prog, adapter

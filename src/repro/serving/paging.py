@@ -552,6 +552,16 @@ def make_pre_tick(
                 clean.extend(new)
                 rows[s] = table.row_array(s)
                 grew[s] = True
+                if pre_tick.tracer is not None:
+                    # one instant per faulting slot: which pool pages
+                    # the demand-map just pulled in and for what position
+                    pre_tick.tracer.instant(
+                        "page_fault",
+                        "engine",
+                        slot=s,
+                        pages=[int(p) for p in new],
+                        pos=int(pos[s]) + step,
+                    )
         if not grew.any():
             return states
         carr = np.full((cap,), table.n_pages, np.int32)
@@ -559,4 +569,8 @@ def make_pre_tick(
         rows_d, grew_d, carr_d = map(jnp.asarray, (rows, grew, carr))
         return jit_grow(states, rows_d, grew_d, carr_d)
 
+    #: set by SlotAdapter.attach_tracer when the engine has a tracer —
+    #: a function attribute, so the closure stays picklable/simple and
+    #: the untraced path is one ``is not None`` check
+    pre_tick.tracer = None
     return pre_tick

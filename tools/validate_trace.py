@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Standalone Chrome trace-event JSON schema checker.
+
+Validates any exported trace (``Tracer.export`` output, or anything in
+the trace-event format) without importing the repo:
+
+  python tools/validate_trace.py trace.json [more.json ...]
+
+Checks (the invariants Perfetto's importer relies on, and the ones our
+exporter promises — see docs/observability.md):
+
+  * top level is a list of events or a dict with a ``traceEvents`` list;
+  * every event has ``ph``, ``pid``, ``tid``, and a numeric ``ts``
+    (metadata ``M`` events may omit ``ts``), with a known phase;
+  * ``X`` complete events carry a numeric ``dur`` >= 0;
+  * ``B``/``E`` duration events balance as a stack per (pid, tid);
+  * ``s``/``f`` flow events carry ids, and every flow id has both ends.
+
+Exit status 0 = valid; 1 = any violation (each printed).  CI runs this
+against the serving smoke's ``--trace-out`` artifact, and
+tests/test_obs.py imports ``validate_events`` to gate the exporter.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+KNOWN_PHASES = set("BEXisfMC")
+
+
+def validate_events(events) -> list[str]:
+    """Return a list of violation strings (empty = valid)."""
+    errors: list[str] = []
+    if not isinstance(events, list):
+        return [f"traceEvents is {type(events).__name__}, expected list"]
+    open_spans: dict[tuple, list[str]] = {}
+    flow_starts: dict = {}
+    flow_ends: dict = {}
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph is None:
+            errors.append(f"event {i}: missing ph")
+            continue
+        if ph not in KNOWN_PHASES:
+            errors.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        for field in ("pid", "tid"):
+            if field not in e:
+                errors.append(f"event {i} (ph={ph}): missing {field}")
+        ts = e.get("ts")
+        if ts is None:
+            if ph != "M":  # metadata may omit the timestamp
+                errors.append(f"event {i} (ph={ph}): missing ts")
+        elif not isinstance(ts, (int, float)):
+            errors.append(f"event {i} (ph={ph}): non-numeric ts {ts!r}")
+        key = (e.get("pid"), e.get("tid"))
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(
+                    f"event {i} (X {e.get('name')!r}): "
+                    f"dur must be a number >= 0, got {dur!r}"
+                )
+        elif ph == "B":
+            open_spans.setdefault(key, []).append(str(e.get("name")))
+        elif ph == "E":
+            stack = open_spans.get(key)
+            if not stack:
+                errors.append(f"event {i}: E with no open B on pid/tid {key}")
+            else:
+                stack.pop()
+        elif ph in ("s", "f"):
+            if "id" not in e:
+                errors.append(f"event {i} (ph={ph}): flow without id")
+            else:
+                side = flow_starts if ph == "s" else flow_ends
+                side.setdefault(e["id"], []).append(i)
+    for key, stack in open_spans.items():
+        if stack:
+            errors.append(
+                f"pid/tid {key}: {len(stack)} unclosed B span(s) "
+                f"({', '.join(stack[:4])})"
+            )
+    for fid in flow_starts:
+        if fid not in flow_ends:
+            errors.append(f"flow id {fid!r}: start (s) without finish (f)")
+    for fid in flow_ends:
+        if fid not in flow_starts:
+            errors.append(f"flow id {fid!r}: finish (f) without start (s)")
+    return errors
+
+
+def validate_file(path: str) -> list[str]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: cannot load JSON: {e}"]
+    if isinstance(doc, dict):
+        if "traceEvents" not in doc:
+            return [f"{path}: dict without a traceEvents key"]
+        events = doc["traceEvents"]
+    else:
+        events = doc
+    return [f"{path}: {err}" for err in validate_events(events)]
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    failed = False
+    for path in argv:
+        errors = validate_file(path)
+        if errors:
+            failed = True
+            for err in errors:
+                print(f"FAIL {err}")
+        else:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+            n = len(doc["traceEvents"] if isinstance(doc, dict) else doc)
+            print(f"ok   {path}: {n} events, schema valid")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
