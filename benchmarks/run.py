@@ -582,6 +582,79 @@ def bench_spatial() -> None:
 
 
 # ===========================================================================
+# serving (spatial placement): replica slots on mesh pods, parity-gated
+# ===========================================================================
+_SPATIAL_SERVE_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import dataclasses as dc
+import json
+import numpy as np
+import jax
+
+from repro import api as miso
+from repro.configs import get_reduced
+from repro.models.lm_cells import ServeConfig
+from repro.serving import Request
+from repro.serving.lm import lm_engine_parts
+from repro.serving.spatial import detect_wire_bytes
+
+SLOTS = 8
+PODS = 4
+DECODE = %(decode)d
+LEVELS = (1, 2, 3, 1)
+
+cfg = get_reduced("internlm2-1.8b")
+cfg = dc.replace(cfg, d_model=32, n_layers=2, d_ff=64, n_heads=2,
+                 n_kv_heads=1, vocab_size=128)
+
+def drive(placement):
+    mesh = (jax.make_mesh((PODS, 8 // PODS), ("pod", "data"))
+            if placement == "spatial" else None)
+    scfg = ServeConfig(batch=SLOTS, max_len=32, placement=placement)
+    prog, adapter = lm_engine_parts(cfg, scfg)
+    eng = miso.serve(prog, adapter,
+                     miso.EngineConfig(placement=placement, mesh=mesh))
+    eng.start(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    mk = lambda n: rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+    warm = Request(prompt=mk(4), max_new_tokens=2)
+    eng.submit(warm)
+    eng.pump()                      # warm: compile prefill + step + detect
+    busy0 = eng.metrics()["busy_s"]
+    reqs = []
+    for lv in LEVELS:
+        pol = miso.RedundancyPolicy(
+            level=lv,
+            placement="spatial" if (placement == "spatial" and lv > 1)
+            else "temporal")
+        reqs.append(Request(prompt=mk(4), max_new_tokens=DECODE, policy=pol))
+    for r in reqs:
+        eng.submit(r)
+    eng.pump()
+    toks = [eng.result(r.id)["tokens"] for r in reqs]
+    assert all(eng.result(r.id)["status"] == "done" for r in reqs)
+    tps = len(reqs) * DECODE / (eng.metrics()["busy_s"] - busy0)
+    return toks, tps
+
+t_toks, t_tps = drive("temporal")
+s_toks, s_tps = drive("spatial")
+assert s_toks == t_toks, "spatial/temporal token divergence"
+spp = SLOTS // PODS
+print("RESULT" + json.dumps({
+    "pods": PODS, "slots": SLOTS, "slots_per_pod": spp,
+    "levels": list(LEVELS),
+    "temporal_tokens_per_s": round(t_tps, 2),
+    "spatial_tokens_per_s": round(s_tps, 2),
+    "wire_bytes_per_tick_dmr": detect_wire_bytes(PODS, spp, False),
+    "wire_bytes_per_tick_tmr": detect_wire_bytes(PODS, spp, True),
+    "token_parity": True,
+}))
+"""
+
+
+# ===========================================================================
 # serving: continuous batcher under Poisson arrivals (tokens/s + TTFT SLO)
 # ===========================================================================
 def bench_serving() -> None:
@@ -616,7 +689,7 @@ def bench_serving() -> None:
 
     def new_engine():
         prog, adapter = lm_engine_parts(cfg, scfg)
-        eng = miso.serve(prog, adapter)
+        eng = miso.serve(prog, adapter, miso.EngineConfig())
         eng.start(jax.random.PRNGKey(0))
         return eng
 
@@ -691,7 +764,7 @@ def bench_serving() -> None:
     scfg_mix = ServeConfig(batch=slots, max_len=64,
                            prefill_chunk=8, prefill_bucket_min=8)
     prog, adapter = lm_engine_parts(cfg, scfg_mix)
-    eng = miso.serve(prog, adapter)
+    eng = miso.serve(prog, adapter, miso.EngineConfig())
     eng.start(jax.random.PRNGKey(0))
     n_mix = 12 if SMOKE else 50
     mix_lens = [2, 5, 9, 17, 23, 33]
@@ -742,7 +815,7 @@ def bench_serving() -> None:
 
     def run_budget(scfg_b):
         prog_b, adapter_b = lm_engine_parts(cfg, scfg_b)
-        eng_b = miso.serve(prog_b, adapter_b)
+        eng_b = miso.serve(prog_b, adapter_b, miso.EngineConfig())
         eng_b.start(jax.random.PRNGKey(0))
         clones = [Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens)
                   for r in budget_reqs]
@@ -802,7 +875,7 @@ def bench_serving() -> None:
 
     def run_spec(scfg_s, ask):
         prog_s, adapter_s = lm_engine_parts(cfg_spec, scfg_s)
-        eng_s = miso.serve(prog_s, adapter_s)
+        eng_s = miso.serve(prog_s, adapter_s, miso.EngineConfig())
         eng_s.start(jax.random.PRNGKey(0))
         warm = Request(prompt=spec_prompts[0], max_new_tokens=2, spec=ask)
         eng_s.submit(warm)
@@ -869,7 +942,8 @@ def bench_serving() -> None:
 
     def build_obs(tracer):
         prog_t, adapter_t = lm_engine_parts(tr_cfg, scfg_tr)
-        eng_t = miso.serve(prog_t, adapter_t, tracer=tracer)
+        eng_t = miso.serve(prog_t, adapter_t,
+                           miso.EngineConfig(tracer=tracer))
         eng_t.start(jax.random.PRNGKey(0))
         warm = Request(prompt=tr_prompts[0], max_new_tokens=2)
         eng_t.submit(warm)
@@ -933,6 +1007,38 @@ def bench_serving() -> None:
         f"{on_tps:.1f} traced vs {off_tps:.1f} untraced tok/s best-case, "
         "bitwise-equal tokens (gate: <5%)")
 
+    # -- spatial placement: replica slots on mesh pods ---------------------
+    # a DMR/TMR request's replicas occupy the SAME slot column on
+    # DIFFERENT pods; detection is the O(1)-wire fingerprint collective
+    # across the pod axis instead of the host-side slot walk.  jax pins
+    # the device count at first init, so the forced-8-device mesh run
+    # lives in a subprocess; the child asserts bitwise token parity with
+    # temporal replica-slot serving before reporting throughput.
+    import os
+    import subprocess
+    import sys
+
+    child = _SPATIAL_SERVE_CHILD % {"decode": 4 if SMOKE else 8}
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", child], env=env,
+                          capture_output=True, text=True, timeout=2400)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][-1]
+    spatial = json.loads(line[len("RESULT"):])
+    spatial["case"] = "spatial_placement"
+    row("serving", "spatial_tokens_per_s",
+        f"{spatial['spatial_tokens_per_s']} vs "
+        f"{spatial['temporal_tokens_per_s']} temporal",
+        f"{spatial['pods']} pods x {spatial['slots_per_pod']} slots/pod, "
+        "bitwise-equal tokens")
+    row("serving", "spatial_wire_B_per_tick",
+        f"dmr {spatial['wire_bytes_per_tick_dmr']} / "
+        f"tmr {spatial['wire_bytes_per_tick_tmr']}",
+        "cross-pod detect bytes per pod per tick (fingerprint collectives)")
+
     payload = {
         "bench": "serving",
         "jax": jax.__version__,
@@ -946,6 +1052,7 @@ def bench_serving() -> None:
         "fixed_budget": budget,
         "speculation": speculation,
         "tracing": tracing,
+        "spatial": spatial,
     }
     out = JSON_DIR / "BENCH_serving.json"
     out.write_text(json.dumps(payload, indent=2) + "\n")

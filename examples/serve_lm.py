@@ -42,11 +42,12 @@ ap.add_argument("--strike", action="store_true",
 args = ap.parse_args()
 
 cfg = get_reduced(args.arch)   # CPU-sized reduced config
-prog, adapter = lm_engine_parts(
+parts = lm_engine_parts(       # EngineParts: .program + .adapter
     cfg, ServeConfig(batch=args.slots, max_len=64,
                      prefill_chunk=args.prefill_chunk,
                      prefill_bucket_min=8))
-engine = miso.serve(prog, adapter)
+prog, adapter = parts
+engine = miso.serve(prog, adapter, miso.EngineConfig())
 engine.start(jax.random.PRNGKey(0))
 
 rng = np.random.default_rng(0)

@@ -100,6 +100,9 @@ def prefill(req, states):
     }, tok0
 
 
+# miso.EngineConfig is the typed engine surface (backend, placement +
+# mesh, queue depth, tracer, ...); the defaults are the temporal
+# lockstep engine this walkthrough wants
 engine = miso.serve(
     sprog,
     SlotAdapter(
@@ -110,6 +113,7 @@ engine = miso.serve(
         read_tokens=lambda d: d["tokens"],
         make_empty=lambda: slot_init(1),
     ),
+    miso.EngineConfig(),
 )
 engine.start(jax.random.PRNGKey(0))
 plain = Request(prompt=[3.0, 1.0], max_new_tokens=6)

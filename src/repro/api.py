@@ -79,9 +79,10 @@ from repro.core.program import MisoProgram  # noqa: F401
 from repro.core.redundancy import FaultLedger  # noqa: F401
 from repro.models.lm_cells import ServeConfig, SpecConfig  # noqa: F401
 from repro.obs import MetricsRegistry, Tracer  # noqa: F401
+from repro.serving.engine import EngineConfig, EngineParts  # noqa: F401
 
 
-def serve(program, adapter, **engine_opts):
+def serve(program, adapter, config=None, **engine_opts):
     """Compile ``program`` into a continuous-batching ``ServingEngine``.
 
     program     -- a MisoProgram with a slot-masked decoder cell (the LM
@@ -89,28 +90,31 @@ def serve(program, adapter, **engine_opts):
                    any program whose decoder state is per-slot).
     adapter     -- a ``repro.serving.SlotAdapter`` describing the slotted
                    cell (LM: ``repro.serving.lm.lm_engine_parts`` returns
-                   program and adapter together).
-    engine_opts -- ``backend`` (default "lockstep"; needs ``pure_step``),
-                   ``max_queue``, ``time_fn``, ``tracer`` (a
-                   ``miso.Tracer``: per-tick spans, request lifecycle,
-                   strike timelines — Perfetto-exportable; None = off and
-                   provably free), ``registry`` (a shared
-                   ``miso.MetricsRegistry``; the engine creates its own
-                   otherwise), plus any ``compile()`` option
-                   (``compare_every``, ``checkpoint_cb``/
-                   ``checkpoint_every`` to snapshot resident state, ...).
+                   ``EngineParts(program, adapter)``).
+    config      -- a ``miso.EngineConfig``: backend, placement (temporal
+                   replica rows vs spatial pod placement) + mesh,
+                   max_queue, compare cadence, checkpointing, tracer,
+                   registry — the typed replacement for the historical
+                   ``**engine_opts`` pass-through.
+    engine_opts -- DEPRECATED (one release, ``DeprecationWarning``): the
+                   old keyword surface (``backend``, ``max_queue``,
+                   ``tracer``, ``registry``, plus any ``compile()``
+                   option); honored only when ``config`` is None and
+                   behavior-identical to the equivalent EngineConfig.
 
     Returns the engine (call ``.start(key)`` before submitting).  Request
     lifecycle and per-request policy semantics: ``docs/serving.md``."""
     from repro.serving.engine import ServingEngine
 
-    return ServingEngine(program, adapter, **engine_opts)
+    return ServingEngine(program, adapter, config, **engine_opts)
 
 
 __all__ = [
     "BACKENDS",
     "CellType",
     "DependencyGraph",
+    "EngineConfig",
+    "EngineParts",
     "Executor",
     "FaultLedger",
     "FaultSpec",

@@ -58,7 +58,7 @@ from repro.distributed.collectives import (
 )
 from repro.kernels import ops
 
-from .executor import LockstepExecutor, register_backend
+from .executor import LockstepExecutor, compile_step, register_backend
 from .fault import FaultSpec, inject
 from .program import MisoProgram
 from .redundancy import (
@@ -179,6 +179,116 @@ def _spatial_transition(
     return jax.tree.map(lambda x: x[None], voted), report
 
 
+def _serve_local_fault(
+    fault: FaultSpec, my_pod: jax.Array, *, dec_cid: int,
+    leaf_shapes: list, leaf_axes: list, spp: int,
+) -> FaultSpec:
+    """The serve-mode fault as seen by one pod.
+
+    In serve mode the slot (batch) axis of the decoder cell is sharded
+    over pods, so a ``FaultSpec`` whose flat ``index`` addresses the
+    GLOBAL decoder leaf must be rebased: decompose the index against the
+    global leaf shape, pull out the slot coordinate at that leaf's slot
+    axis, and recompose against the pod-local shape (slot coordinate
+    mod ``spp``).  Only the owning pod (slot // spp) keeps the fault
+    armed — every other pod pushes the step out of range, same trick as
+    ``_pod_local_fault``.  ``fault.leaf`` is traced, so the candidate
+    (owner, local index) is computed for every leaf and selected with
+    ``where``.  Faults on other cells (replicated states) pass through
+    untouched and stay armed on all pods, keeping replication coherent.
+    """
+    owner = jnp.int32(0)
+    local = fault.index
+    for i, (shape, ax) in enumerate(zip(leaf_shapes, leaf_axes)):
+        rem = fault.index
+        coords = [None] * len(shape)
+        for d in reversed(range(len(shape))):
+            coords[d] = rem % shape[d]
+            rem = rem // shape[d]
+        slot = coords[ax]
+        own_i = slot // spp
+        coords[ax] = slot % spp
+        lshape = list(shape)
+        lshape[ax] = spp
+        flat = jnp.int32(0)
+        for d in range(len(shape)):
+            flat = flat * lshape[d] + coords[d]
+        sel = fault.leaf == i
+        owner = jnp.where(sel, own_i, owner)
+        local = jnp.where(sel, flat, local)
+    is_dec = fault.cell_id == dec_cid
+    keep = jnp.logical_or(~is_dec, owner == my_pod)
+    return dataclasses.replace(
+        fault,
+        index=jnp.where(is_dec, local, fault.index),
+        step=jnp.where(keep, fault.step, jnp.int32(-(2**30))),
+    )
+
+
+def compile_step_spatial_serve(
+    program: MisoProgram, mesh, *, pod_axis: str = "pod",
+    with_compare: bool = True,
+):
+    """Serve-mode step: the UNMODIFIED temporal ``compile_step`` wrapped
+    in one ``shard_map`` that splits the decoder cell's slot axis over
+    ``pod_axis``.
+
+    The serving engine's spatial placement puts a request's replica
+    slots at the same slot COLUMN on different pods (pod p owns global
+    slots ``[p*spp, (p+1)*spp)``), so the per-pod computation is just
+    the ordinary slot-masked decode over the local ``spp`` rows — no
+    collectives in the step at all; cross-pod detect/vote live in
+    ``repro.serving.spatial`` and run as a separate post-tick call,
+    matching the temporal engine's post-tick host compare timing.  The
+    program itself is byte-identical to temporal serving (the
+    ``spatial_serve`` marker carries only placement metadata), which is
+    what makes bitwise token parity a meaningful gate.
+    """
+    serve = program.spatial_serve
+    dec = serve["cell"]
+    axes = serve["axes"]
+    n_pods = mesh.shape[pod_axis]
+    spp = serve["n_slots"] // n_pods
+    names = list(program.cells)
+    dec_cid = names.index(dec)
+
+    g_state = jax.eval_shape(
+        lambda: program.cells[dec].init(jax.random.PRNGKey(0)))
+    g_leaves, tdef = jax.tree.flatten(g_state)
+    leaf_shapes = [l.shape for l in g_leaves]
+    leaf_axes = jax.tree.leaves(axes)
+
+    base = compile_step(program, with_compare=with_compare)
+
+    def local_step(states: dict, step_idx, fault):
+        my_pod = jax.lax.axis_index(pod_axis)
+        fault = _serve_local_fault(
+            fault, my_pod, dec_cid=dec_cid, leaf_shapes=leaf_shapes,
+            leaf_axes=leaf_axes, spp=spp)
+        return base(states, step_idx, fault)
+
+    def leaf_spec(ax):
+        return P(*((None,) * ax + (pod_axis,)))
+
+    state_specs = {
+        name: jax.tree.map(leaf_spec, axes) if name == dec else P()
+        for name in names
+    }
+    report_specs = {name: P() for name in names}
+    mapped = shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(state_specs, P(), P()),
+        out_specs=(state_specs, report_specs),
+        check_vma=False,
+    )
+
+    def step(states: dict, step_idx, fault):
+        return mapped(states, step_idx, fault)
+
+    return step
+
+
 def compile_step_spatial(
     program: MisoProgram, mesh, *, pod_axis: str = "pod",
     with_compare: bool = True,
@@ -291,11 +401,21 @@ class SpatialLockstepExecutor(LockstepExecutor):
                 f"mesh has no {pod_axis!r} axis (axes: {mesh.axis_names}); "
                 "spatial replicas need the pod axis to live on")
         spatial = spatial_cells(program)
-        if not spatial:
+        serve = getattr(program, "spatial_serve", None)
+        if not spatial and serve is None:
             raise ValueError(
                 "program has no placement='spatial' replicated cells; "
                 "use backend='lockstep' for temporal redundancy")
         n_pods = mesh.shape[pod_axis]
+        if serve is not None:
+            # serve mode (repro.serving): the slot axis is sharded over
+            # pods and replication lives at the SLOT level in the engine,
+            # so there are no per-cell level checks — only an even split.
+            if serve["n_slots"] % n_pods:
+                raise ValueError(
+                    f"spatial serving needs n_slots={serve['n_slots']} "
+                    f"divisible by the {pod_axis!r} mesh axis "
+                    f"({n_pods} pods)")
         for name, cell in spatial.items():
             if cell.redundancy.level != n_pods:
                 raise ValueError(
@@ -310,9 +430,15 @@ class SpatialLockstepExecutor(LockstepExecutor):
                     "has nothing to place across pods")
         self.pod_axis = pod_axis
         self._spatial = spatial
+        self._serve = serve
         super().__init__(program, **kw)
 
     def _compile_step(self, *, with_compare: bool):
+        if self._serve is not None:
+            return compile_step_spatial_serve(
+                self.program, self.mesh, pod_axis=self.pod_axis,
+                with_compare=with_compare,
+            )
         return compile_step_spatial(
             self.program, self.mesh, pod_axis=self.pod_axis,
             with_compare=with_compare,
@@ -320,18 +446,33 @@ class SpatialLockstepExecutor(LockstepExecutor):
 
     def init(self, key: jax.Array) -> dict:
         """Initialize and *place*: spatial cells' replica axes shard over
-        the pod axis, everything else is replicated across the mesh."""
+        the pod axis, everything else is replicated across the mesh.  In
+        serve mode the decoder cell's SLOT axis shards instead (per-leaf
+        axis from the ``spatial_serve`` marker)."""
         states = self.program.init_states(key)
         sharding = self.sharding
         if sharding is None:
             rep = NamedSharding(self.mesh, P())
-            pod = NamedSharding(self.mesh, P(self.pod_axis))
-            sharding = {
-                name: jax.tree.map(
-                    lambda _: pod if name in self._spatial else rep,
-                    states[name])
-                for name in states
-            }
+            if self._serve is not None:
+                dec, axes = self._serve["cell"], self._serve["axes"]
+                mesh, pod_axis = self.mesh, self.pod_axis
+                sharding = {
+                    name: jax.tree.map(
+                        lambda ax: NamedSharding(
+                            mesh, P(*((None,) * ax + (pod_axis,)))),
+                        axes)
+                    if name == dec
+                    else jax.tree.map(lambda _: rep, states[name])
+                    for name in states
+                }
+            else:
+                pod = NamedSharding(self.mesh, P(self.pod_axis))
+                sharding = {
+                    name: jax.tree.map(
+                        lambda _: pod if name in self._spatial else rep,
+                        states[name])
+                    for name in states
+                }
         states = jax.device_put(states, sharding)
         self._t = 0
         return states
@@ -341,4 +482,6 @@ class SpatialLockstepExecutor(LockstepExecutor):
         m["placement"] = "spatial"
         m["pod_axis"] = self.pod_axis
         m["n_pods"] = int(self.mesh.shape[self.pod_axis])
+        if self._serve is not None:
+            m["slots_per_pod"] = self._serve["n_slots"] // m["n_pods"]
         return m

@@ -82,6 +82,15 @@ def main():
     ap.add_argument("--strike", action="store_true",
                     help="inject one bit flip into the first DMR "
                          "request's replica slot and verify attribution")
+    ap.add_argument("--placement", default="temporal",
+                    choices=["temporal", "spatial"],
+                    help="where replica slots live: temporal = batch "
+                         "rows (host compare), spatial = the same slot "
+                         "column on different mesh pods (O(1)-wire "
+                         "cross-pod detect; needs >= --pods devices)")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="mesh pods for --placement spatial (0 = one "
+                         "pod per device, capped at 4)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: bound the out-of-band prefill "
                          "to this many tokens; the prompt tail walks "
@@ -140,24 +149,46 @@ def engine_main(cfg, args):
         from repro.models.lm_cells import SpecConfig
 
         spec = SpecConfig(draft_len=args.spec_k, draft_arch=args.spec_arch)
+    spatial = args.placement == "spatial"
+    mesh = None
+    if spatial:
+        n_dev = jax.device_count()
+        pods = args.pods or min(4, n_dev)
+        if n_dev % pods:
+            raise SystemExit(
+                f"--pods {pods} does not divide {n_dev} devices")
+        if args.slots % pods:
+            raise SystemExit(
+                f"--slots {args.slots} must be a multiple of --pods {pods}")
+        mesh = jax.make_mesh((pods, n_dev // pods), ("pod", "data"))
     scfg = ServeConfig(batch=args.slots, max_len=args.max_len,
                        prefill_chunk=args.prefill_chunk,
                        prefill_bucket_min=args.prefill_bucket_min,
                        paged=args.paged, page_size=args.page_size,
-                       spec=spec)
+                       spec=spec, placement=args.placement)
     prog, adapter = lm_engine_parts(cfg, scfg, LOCAL)
     tracer = miso.Tracer() if args.trace_out else None
-    engine = miso.serve(prog, adapter, tracer=tracer)
+    engine = miso.serve(prog, adapter, miso.EngineConfig(
+        placement=args.placement, mesh=mesh, tracer=tracer))
     engine.start(jax.random.PRNGKey(args.seed))
+    if spatial:
+        print(f"placement: spatial ({engine.pods} pods x "
+              f"{args.slots // engine.pods} slots, "
+              f"backend={engine.exe.name})")
 
     rng = np.random.default_rng(args.seed + 1)
     mix = [m.strip() for m in args.mix.split(",") if m.strip()]
+    policies = POLICIES
+    if spatial:
+        policies = {k: RedundancyPolicy(level=p.level, placement="spatial")
+                    if p.level > 1 else p
+                    for k, p in POLICIES.items()}
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(2, max(3, args.prompt_len + 1)))
         prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new_tokens=args.decode,
-                            policy=POLICIES[mix[i % len(mix)]],
+                            policy=policies[mix[i % len(mix)]],
                             spec=spec))
 
     # staggered submission: half now, half after a few ticks, so requests

@@ -301,6 +301,14 @@ class ServeConfig:
     #: multi-codebook — ``spec_serving_supported``) silently fall back
     #: to plain decode, mirroring the paged fallback above.
     spec: SpecConfig | None = None
+    #: where a DMR/TMR request's replica slots live: "temporal" keeps
+    #: them as batch rows of one device group (host fingerprint compare),
+    #: "spatial" places the same slot COLUMN on different mesh pods under
+    #: shard_map, so a hardware strike is confined to one pod and detect
+    #: is an O(1)-wire cross-pod collective.  The serve *program* is
+    #: identical either way — the placement only stamps a marker the
+    #: spatial executor keys on.
+    placement: str = "temporal"
 
 
 def prefill_bucket_ladder(scfg: "ServeConfig") -> tuple:
@@ -805,6 +813,19 @@ def make_slot_serve_program(
     prog = MisoProgram()
     prog.add(weights)
     prog.add(decoder)
+    if scfg.placement == "spatial":
+        if paged:
+            # the paged pool is one shared global table; splitting it
+            # across pods needs per-pod page accounting (ROADMAP item).
+            raise ValueError(
+                "placement='spatial' does not support paged=True yet; "
+                "use the dense cache for spatial serving")
+        # marker keyed on by SpatialLockstepExecutor's serve mode: the
+        # program itself is byte-identical to temporal serving — only
+        # the executor wraps the step in shard_map over the slot axis.
+        prog.spatial_serve = {
+            "cell": "decoder", "axes": axes, "n_slots": scfg.batch,
+        }
     return prog
 
 

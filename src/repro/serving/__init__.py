@@ -16,7 +16,13 @@ Layers:
     pull in the transformer stack.
 """
 
-from .engine import RequestRecord, ServingEngine, SlotAdapter  # noqa: F401
+from .engine import (  # noqa: F401
+    EngineConfig,
+    EngineParts,
+    RequestRecord,
+    ServingEngine,
+    SlotAdapter,
+)
 from .paging import (  # noqa: F401
     PageTable,
     infer_paged_axes,
@@ -51,6 +57,8 @@ __all__ = [
     "CANCELLED",
     "DONE",
     "EXPIRED",
+    "EngineConfig",
+    "EngineParts",
     "PageTable",
     "QUEUED",
     "REJECTED",

@@ -33,7 +33,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+import warnings
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import numpy as np
@@ -70,6 +71,73 @@ def _fence(x: Pytree) -> None:
     while isinstance(x, (dict, list, tuple)):
         x = next(iter(x.values())) if isinstance(x, dict) else x[0]
     jax.block_until_ready(x)
+
+
+# --------------------------------------------------------------------------
+# the typed engine configuration (replaces the old kwargs pass-through)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything ``ServingEngine`` needs beyond the program + adapter,
+    as one typed value instead of the historical ``**engine_opts`` /
+    ``**compile_opts`` double pass-through (which silently swallowed
+    typos and made the executor surface invisible at the call site).
+
+    backend          -- executor backend name (``miso.serve`` compiles
+                        the program onto it).  With
+                        ``placement="spatial"`` a plain ``"lockstep"``
+                        auto-upgrades to ``"spatial_lockstep"``.
+    placement        -- where a DMR/TMR request's replica slots live:
+                        ``"temporal"`` = batch rows of one device group
+                        (host fingerprint compare), ``"spatial"`` = the
+                        same slot column on different mesh pods under
+                        ``shard_map`` (O(1)-wire cross-pod detect).
+    mesh / pod_axis  -- the device mesh (required for spatial placement)
+                        and the axis replica slots are placed along.
+    max_queue        -- bounded admission queue depth (back-pressure).
+    retain_results   -- finished records kept for ``result()`` pickup.
+    compare_every    -- executor compare cadence (None = backend default).
+    checkpoint_cb/checkpoint_every -- executor checkpoint segmentation.
+    tracer / registry -- the observability pair (obs/).
+    compile_opts     -- escape hatch: extra kwargs for the executor
+                        (``donate``, ``sharding``, ``policies``, ...).
+    """
+
+    backend: str = "lockstep"
+    placement: str = "temporal"
+    mesh: Any = None
+    pod_axis: str = "pod"
+    max_queue: int = 64
+    retain_results: int = 1024
+    compare_every: Optional[int] = None
+    checkpoint_cb: Optional[Callable] = None
+    checkpoint_every: int = 0
+    tracer: Optional[Tracer] = None
+    registry: Optional[MetricsRegistry] = None
+    compile_opts: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.placement not in ("temporal", "spatial"):
+            raise ValueError(
+                f"placement={self.placement!r}: must be 'temporal' or 'spatial'"
+            )
+        if self.placement == "spatial":
+            if self.mesh is None:
+                raise ValueError(
+                    "placement='spatial' places replica slots across mesh "
+                    "pods: EngineConfig(mesh=...) is required"
+                )
+            if self.backend == "lockstep":
+                object.__setattr__(self, "backend", "spatial_lockstep")
+
+
+class EngineParts(NamedTuple):
+    """Named return of ``lm_engine_parts``: the compiled-against program
+    and its slot adapter.  Tuple-unpackable, so the historical
+    ``prog, adapter = lm_engine_parts(...)`` keeps working."""
+
+    program: Any
+    adapter: "SlotAdapter"
 
 
 # --------------------------------------------------------------------------
@@ -170,6 +238,9 @@ class RequestRecord:
     finished_at: Optional[float] = None
     faults: int = 0
     cancel_requested: bool = False
+    #: replica slots placed spatially (same column on different pods):
+    #: checked by the cross-pod collective instead of the host compare
+    spatial: bool = False
     #: chunked prefill: prompt-tail tokens the resident transition still
     #: has to consume before this request emits its first token (advances
     #: in lock-step with the device-side ``p_head`` cursor)
@@ -200,27 +271,80 @@ class ServingEngine:
         engine.metrics()               # tokens/s, TTFT p50/p99, ledger
     """
 
+    #: legacy kwargs the deprecation shim lifts into EngineConfig fields
+    #: (anything else lands in ``compile_opts``, exactly as before)
+    _LEGACY_FIELDS = (
+        "backend",
+        "placement",
+        "mesh",
+        "pod_axis",
+        "max_queue",
+        "retain_results",
+        "compare_every",
+        "checkpoint_cb",
+        "checkpoint_every",
+        "tracer",
+        "registry",
+    )
+
     def __init__(
         self,
         program,
         adapter: SlotAdapter,
+        config: Optional[EngineConfig] = None,
         *,
-        backend: str = "lockstep",
-        max_queue: int = 64,
-        retain_results: int = 1024,
         time_fn: Callable[[], float] = time.monotonic,
-        tracer: Optional[Tracer] = None,
-        registry: Optional[MetricsRegistry] = None,
-        **compile_opts,
+        **legacy,
     ):
+        if legacy:
+            # one-release shim: old kwargs keep working, loudly
+            if config is not None:
+                raise TypeError(
+                    "pass EngineConfig OR the legacy keyword options, not both"
+                )
+            warnings.warn(
+                "ServingEngine(program, adapter, backend=..., "
+                "**compile_opts) is deprecated; pass "
+                "config=EngineConfig(...) instead (legacy kwargs are "
+                "honored for one release)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            fields = {
+                k: legacy.pop(k) for k in list(legacy) if k in self._LEGACY_FIELDS
+            }
+            config = EngineConfig(**fields, compile_opts=legacy)
+        self.config = cfg = config if config is not None else EngineConfig()
         self.adapter = adapter
+        #: spatial placement: replica slots live at one column across
+        #: ``pods`` mesh pods; 1 = the temporal engine, bit for bit
+        self.pods = 1
+        if cfg.placement == "spatial":
+            self.pods = int(cfg.mesh.shape[cfg.pod_axis])
+            if adapter.n_slots % self.pods:
+                raise ValueError(
+                    f"spatial serving needs n_slots={adapter.n_slots} "
+                    f"divisible by the {cfg.pod_axis!r} mesh axis "
+                    f"({self.pods} pods)"
+                )
         #: the observability pair.  ``tracer=None`` (default) is genuinely
         #: free: every emission site is guarded, the harvest path never
         #: allocates event objects, and tokens are bitwise-identical with
         #: and without it (gated in tests/test_obs.py).  The registry is
         #: always present — it IS the engine's counter storage.
-        self.tracer = tracer
-        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer = cfg.tracer
+        self.registry = cfg.registry if cfg.registry is not None else MetricsRegistry()
+        compile_opts = dict(cfg.compile_opts)
+        if cfg.mesh is not None:
+            compile_opts.setdefault("mesh", cfg.mesh)
+        if cfg.compare_every is not None:
+            compile_opts.setdefault("compare_every", cfg.compare_every)
+        if cfg.checkpoint_cb is not None:
+            compile_opts.setdefault("checkpoint_cb", cfg.checkpoint_cb)
+        if cfg.checkpoint_every:
+            compile_opts.setdefault("checkpoint_every", cfg.checkpoint_every)
+        if cfg.placement == "spatial":
+            compile_opts.setdefault("pod_axis", cfg.pod_axis)
         if tracer is not None and "on_event" not in compile_opts:
             # executor-level events (checkpoints, scan segments, compare
             # mismatches) land on the tracer's "executor" track
@@ -228,17 +352,25 @@ class ServingEngine:
         if tracer is not None and adapter.attach_tracer is not None:
             # adapter closures (paged pre_tick page faults) emit too
             adapter.attach_tracer(tracer)
-        self.exe = _ex.compile(program, backend=backend, **compile_opts)
+        self.exe = _ex.compile(program, backend=cfg.backend, **compile_opts)
         if type(self.exe).pure_step is _ex.Executor.pure_step:
+            with_replay = sorted(
+                name
+                for name, klass in _ex.BACKENDS.items()
+                if klass.pure_step is not _ex.Executor.pure_step
+            )
             raise ValueError(
                 f"backend {self.exe.name!r} has no pure_step replay; the "
-                "engine needs it for DMR tie-breaks (use a lockstep "
-                "flavor or 'host')"
+                "engine needs it for DMR tie-breaks (backends with "
+                f"replay: {', '.join(with_replay)})"
             )
-        self.queue = RequestQueue(max_depth=max_queue, time_fn=time_fn)
-        self.slots = SlotManager(adapter.n_slots)
+        self.queue = RequestQueue(
+            max_depth=cfg.max_queue, time_fn=time_fn, on_expire=self._on_queue_expire
+        )
+        self.slots = SlotManager(adapter.n_slots, pods=self.pods)
         self.ledger = FaultLedger()  # keyed by REQUEST id, not cell name
         self.time_fn = time_fn
+        retain_results = cfg.retain_results
         self.requests: dict[str, RequestRecord] = {}
         #: finished records are retained for result() pickup, bounded so a
         #: long-running server's host memory stays flat: beyond
@@ -312,15 +444,34 @@ class ServingEngine:
 
         # the surgery bundle: dense whole-leaf ops by default, or the
         # adapter's own (paged: page-table-routed)
-        self._ops = adapter.surgery or default_surgery(
+        self._base_ops = adapter.surgery or default_surgery(
             adapter.cell, adapter.slot_axes, adapter.make_empty
         )
+        self._ops = self._base_ops
+        #: spatial detect collectives, compiled lazily per variant
+        #: (DMR-only vs mixed-TMR) and cached for the engine's lifetime
+        self._detect: dict[bool, Callable] = {}
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, key: jax.Array) -> None:
-        """Initialize the resident states (weights + empty slots)."""
+        """Initialize the resident states (weights + empty slots).  Under
+        spatial placement, also capture the canonical shardings and pin
+        every surgery result back onto them — a host-side join that came
+        back differently laid out would otherwise reshard on the wire
+        (or recompile) at the shard_map boundary every tick."""
         self._states = self.exe.init(key)
+        if self.pods > 1:
+            from .spatial import pin_surgery
+
+            canon = jax.tree.map(lambda x: x.sharding, self._states)
+            self._ops = pin_surgery(self._base_ops, canon)
         self._t0 = self.time_fn()
+
+    def _on_queue_expire(self, req: Request) -> None:
+        """Queue expiry-sweep hook: make queued-deadline drops visible in
+        the trace (the lifecycle span itself closes at ``_reconcile``)."""
+        if self.tracer is not None:
+            self.tracer.instant("request_expired", req.id)
 
     def submit(self, req: Request) -> bool:
         """Admission control + enqueue.  False = rejected (queue full,
@@ -334,6 +485,12 @@ class ServingEngine:
                 f"policy needs {req.n_slots} slots, engine has "
                 f"{self.adapter.n_slots}"
             )
+        elif (
+            self.pods > 1
+            and req.policy.placement == "spatial"
+            and req.n_slots > self.pods
+        ):
+            reason = f"spatial policy needs {req.n_slots} pods, mesh has {self.pods}"
         elif self.adapter.validate is not None:
             reason = self.adapter.validate(req)
         rec = RequestRecord(req=req, status=QUEUED, submitted_at=self.time_fn())
@@ -487,11 +644,24 @@ class ServingEngine:
             cap = self.adapter.has_capacity
             if cap is not None and not cap(req):
                 break  # paged: not enough free pages for its worst case
-            contig = self.adapter.contiguous_replicas and req.n_slots > 1
-            if contig and self.slots.find_run(req.n_slots) is None:
+            spatial_req = (
+                self.pods > 1 and req.n_slots > 1 and req.policy.placement == "spatial"
+            )
+            contig = (
+                not spatial_req and self.adapter.contiguous_replicas and req.n_slots > 1
+            )
+            if spatial_req:
+                # spatial groups take one slot COLUMN across pods; there
+                # is nothing to defragment (pinned tenants never move),
+                # so a missing column just holds the FIFO head
+                if self.slots.find_column(req.n_slots) is None:
+                    break
+            elif contig and self.slots.find_run(req.n_slots) is None:
                 # capacity exists but no adjacent run: defragment instead
                 # of rejecting/stalling the replicated admission
                 states = self._defrag(states, req.n_slots)
+                if self.slots.find_run(req.n_slots) is None:
+                    break  # pinned spatial tenants block every window
             if not self.queue.take(req):
                 continue  # head expired underneath us: re-validate
             rec = self.requests[req.id]
@@ -503,11 +673,14 @@ class ServingEngine:
                 out = self.adapter.prefill(req, states)
             slot_state, first = out[0], out[1]
             pending = out[2] if len(out) > 2 else 0
-            slots = self.slots.alloc(req.id, req.n_slots, contiguous=contig)
+            slots = self.slots.alloc(
+                req.id, req.n_slots, contiguous=contig, spatial=spatial_req
+            )
             for s in slots:
                 states = self._ops.join(states, slot_state, s, req=req)
             now = self.time_fn()
             rec.slots = slots
+            rec.spatial = spatial_req
             rec.status = RUNNING
             rec.started_at = now
             rec.prefill_remaining = int(pending)
@@ -531,8 +704,10 @@ class ServingEngine:
 
     def _defrag(self, states: dict, n: int) -> dict:
         """Relocate running requests' slots (bitwise copy + scrub) until
-        an ``n``-slot adjacent free run exists."""
-        for src, dst in self.slots.defrag_plan(n):
+        an ``n``-slot adjacent free run exists (or no movable window is
+        left — pinned spatial tenants are never relocated)."""
+        plan = self.slots.defrag_plan(n)
+        for src, dst in plan or ():
             states = self._ops.copy(states, src, dst)
             states = self._ops.scrub(states, src)
             rid = self.slots.relocate(src, dst)  # manager's bookkeeping
@@ -548,8 +723,12 @@ class ServingEngine:
     def _postprocess(self, t: int, states: dict) -> dict:
         running = [r for r in self.requests.values() if r.status == RUNNING]
         replicated = [r for r in running if r.req.policy.level > 1]
-        if replicated:
-            states = self._check_replicas(t, states, replicated)
+        temporal = [r for r in replicated if not r.spatial]
+        spatial = [r for r in replicated if r.spatial]
+        if temporal:
+            states = self._check_replicas(t, states, temporal)
+        if spatial:
+            states = self._check_spatial(t, states, spatial)
         if running:
             toks = np.asarray(
                 jax.device_get(self.adapter.read_tokens(states[self.adapter.cell]))
@@ -715,6 +894,111 @@ class ServingEngine:
                 tr.flow_end(fid, rec.id, "strike")
         return states
 
+    def _get_detect(self, tmr: bool) -> Callable:
+        key = bool(tmr)
+        if key not in self._detect:
+            from .spatial import make_detect
+
+            self._detect[key] = make_detect(
+                self.config.mesh,
+                self.adapter.slot_axes,
+                pod_axis=self.config.pod_axis,
+                tmr=key,
+            )
+        return self._detect[key]
+
+    def _check_spatial(self, t: int, states: dict, recs: list[RequestRecord]) -> dict:
+        """Cross-pod detect for spatially-placed replica groups.
+
+        One O(1)-wire collective over the resident decoder state replaces
+        the host fingerprint walk: ``lvl`` carries the level of the group
+        anchored at each slot column, the collective compares the SAME
+        128-bit per-slot fingerprints the temporal engine fetches to the
+        host, and a TMR majority verdict comes back as the struck pod
+        (replica index == pod index, so attribution names the pod).
+        Repair reuses the temporal paths verbatim — TMR: copy a majority
+        slot over the minority; DMR/triple-divergence: §IV replay and
+        adopt — so the ledger entries are bitwise-identical to temporal
+        replica-slot serving.
+        """
+        lvl = np.zeros(self.slots.per_pod, np.int32)
+        for rec in recs:
+            lvl[rec.slots[0]] = rec.req.policy.level  # slots[0] == column
+        tmr = any(r.req.policy.level >= 3 for r in recs)
+        events, struck = (
+            np.asarray(jax.device_get(x))
+            for x in self._get_detect(tmr)(states[self.adapter.cell], lvl)
+        )
+        fps = rfps = replay = None  # lazy: one replay serves every event
+        for rec in recs:
+            col = rec.slots[0]
+            if not events[col]:
+                continue
+            s = rec.slots
+            level = rec.req.policy.level
+            tr = self.tracer
+            fid = None
+            if tr is not None:
+                fid = tr.flow_id()
+                tr.instant("strike_detected", rec.id, step=t, level=level)
+                tr.flow_start(fid, rec.id, "strike")
+            if level == 3 and struck[col] >= 0:
+                # majority verdict already replicated from the collective;
+                # same pair precedence as the temporal [(0,1),(0,2),(1,2)]
+                bad = int(struck[col])
+                good = 0 if bad != 0 else 1
+                dmg = self._ops.damage(states, s[good], s[bad])
+                if tr is not None:
+                    tr.instant(
+                        "strike_attributed",
+                        rec.id,
+                        step=t,
+                        replicas=[bad],
+                        pod=bad,
+                        damage_elems=float(dmg),
+                    )
+                states = self._ops.copy(states, s[good], s[bad])
+                self._attribute(rec, t, [bad], level, dmg)
+                if tr is not None:
+                    tr.instant("strike_repaired", rec.id, step=t, repair="tmr_vote")
+                    tr.flow_end(fid, rec.id, "strike")
+                continue
+            # DMR (symmetric) or TMR triple divergence: the §IV replay
+            # decides, exactly as in _check_replicas
+            if replay is None:
+                if tr is not None:
+                    with tr.span("dmr_replay", "engine", step=t):
+                        replay, _ = self.exe.pure_step(self._tick_input, t)
+                        _fence(replay[self.adapter.cell])
+                else:
+                    replay, _ = self.exe.pure_step(self._tick_input, t)
+                fps = np.asarray(
+                    jax.device_get(self._ops.fingerprints(states[self.adapter.cell]))
+                )
+                rfps = np.asarray(
+                    jax.device_get(self._ops.fingerprints(replay[self.adapter.cell]))
+                )
+            bad = [
+                i for i, sl in enumerate(s) if not np.array_equal(fps[sl], rfps[sl])
+            ]
+            dmg = sum(self._ops.damage_vs(states, replay, s[b]) for b in bad)
+            if tr is not None:
+                tr.instant(
+                    "strike_attributed",
+                    rec.id,
+                    step=t,
+                    replicas=list(bad),
+                    pods=list(bad),
+                    damage_elems=float(dmg),
+                )
+            for sl in s:
+                states = self._ops.adopt(states, replay, sl)
+            self._attribute(rec, t, bad, level, dmg)
+            if tr is not None:
+                tr.instant("strike_repaired", rec.id, step=t, repair="dmr_replay")
+                tr.flow_end(fid, rec.id, "strike")
+        return states
+
     def _attribute(
         self, rec: RequestRecord, t: int, bad: list[int], level: int, damage: float
     ) -> None:
@@ -850,6 +1134,8 @@ class ServingEngine:
         self.exe.export_metrics(R)
         m = {
             "backend": self.exe.name,
+            "placement": self.config.placement,
+            "pods": self.pods,
             "n_slots": self.adapter.n_slots,
             "ticks": int(self._m_ticks.value),
             "queue_depth": self.queue.depth,

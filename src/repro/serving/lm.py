@@ -49,14 +49,16 @@ from repro.models.lm_cells import (
     spec_serving_supported,
 )
 
-from .engine import SlotAdapter
+from .engine import EngineParts, SlotAdapter
 from .request import Request
 from .slots import infer_slot_axes
 
 
 def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
-    """(program, adapter) for ``miso.serve``: the resident slot-masked LM
-    serve program plus the glue the engine needs to run it."""
+    """``EngineParts(program, adapter)`` for ``miso.serve``: the resident
+    slot-masked LM serve program plus the glue the engine needs to run
+    it.  (A NamedTuple — the historical ``prog, adapter = ...`` unpack
+    keeps working.)"""
     prog = make_slot_serve_program(cfg, scfg, ctx)
     # paged KV: same gate the program builder uses — unsupported archs
     # silently keep the dense cache (mirrors the bucket carve-outs below)
@@ -280,4 +282,4 @@ def lm_engine_parts(cfg: ModelConfig, scfg: ServeConfig, ctx: ShardCtx = LOCAL):
         ),
         attach_tracer=attach_tracer,
     )
-    return prog, adapter
+    return EngineParts(prog, adapter)

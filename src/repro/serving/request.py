@@ -86,10 +86,14 @@ class RequestQueue:
     """Bounded FIFO admission queue with deadlines and cancellation."""
 
     def __init__(
-        self, max_depth: int = 64, time_fn: Callable[[], float] = time.monotonic
+        self,
+        max_depth: int = 64,
+        time_fn: Callable[[], float] = time.monotonic,
+        on_expire: Optional[Callable[[Request], None]] = None,
     ):
         self.max_depth = max_depth
         self.time_fn = time_fn
+        self.on_expire = on_expire  # called per request dropped by expiry
         self._q: collections.deque[Request] = collections.deque()
         self.status: dict[str, str] = {}
         self.rejected = 0
@@ -150,6 +154,8 @@ class RequestQueue:
                 self.status[r.id] = EXPIRED
                 self.expired += 1
                 self._deadlines -= 1
+                if self.on_expire is not None:
+                    self.on_expire(r)
             else:
                 live.append(r)
         self._q = live

@@ -212,22 +212,44 @@ class SlotManager:
 
     Replica slots are allocated CONTIGUOUS (``alloc(..., contiguous=
     True)``) so a replicated request occupies one aligned run of batch
-    rows — the layout the spatial-placement next notch (replica slots on
-    pods) needs.  Churn fragments the free list; rather than rejecting a
+    rows.  Churn fragments the free list; rather than rejecting a
     replicated admission that fits by count but not by adjacency,
     ``defrag_plan``/``relocate`` let the engine compact: a running
     request's slot is moved with the existing ``copy_slot`` + scrub
     machinery (bitwise-transparent to its owner — the slot-position
     invariance tested in tests/test_serving.py), so fragmentation never
     blocks an admission the batch has capacity for.
+
+    SPATIAL placement (``pods > 1``): the global slot space is the
+    concatenation of ``pods`` per-pod row blocks — pod ``p`` owns global
+    slots ``[p*spp, (p+1)*spp)`` where ``spp = n_slots // pods`` (the
+    mesh shards the decoder's slot axis over the pod axis in exactly
+    this blocked layout).  ``alloc(..., spatial=True)`` reserves the
+    SAME column on pods ``0..n-1`` — one replica slot per pod, so a
+    hardware strike on one pod hits exactly one replica — and there is
+    no adjacency requirement at all: spatial admissions never
+    defragment, and spatial tenants are pinned (``defrag_plan`` never
+    relocates them, which would tear a replica off its pod).  Temporal
+    runs and defrag windows are confined to a single pod's block, and
+    unreplicated requests fill from the HIGHEST pod down so low-pod
+    columns stay clear for spatial groups (level-1 traffic uses pods as
+    plain data parallelism).
     """
 
     n_slots: int
+    pods: int = 1
 
     def __post_init__(self):
+        if self.pods < 1 or self.n_slots % self.pods:
+            raise ValueError(
+                f"n_slots={self.n_slots} must be a positive multiple of "
+                f"pods={self.pods} (the mesh splits the slot axis evenly)"
+            )
+        self.per_pod = self.n_slots // self.pods
         self._free: list[int] = list(range(self.n_slots))
         self._slots_of: dict[str, list[int]] = {}
         self._owner: dict[int, str] = {}
+        self._pinned: set[int] = set()  # spatial tenants: never relocated
 
     @property
     def free(self) -> int:
@@ -243,22 +265,45 @@ class SlotManager:
     def owner(self, slot: int) -> Optional[str]:
         return self._owner.get(slot)
 
-    def alloc(self, rid: str, n: int, contiguous: bool = False) -> Optional[list[int]]:
+    def alloc(
+        self,
+        rid: str,
+        n: int,
+        contiguous: bool = False,
+        spatial: bool = False,
+    ) -> Optional[list[int]]:
         """n free slots for request ``rid``; None if the batch can't fit
         it right now.  ``contiguous=True`` (replicated requests) requires
         one adjacent run of n slots — run ``defrag_plan``/``relocate``
-        first if ``find_run`` comes up empty."""
+        first if ``find_run`` comes up empty.  ``spatial=True`` instead
+        reserves one slot PER POD at a shared column (``find_column``) —
+        no adjacency, no defrag; the returned list is ordered by pod, so
+        replica index i lives on pod i."""
         if rid in self._slots_of:
             raise ValueError(f"request {rid!r} already holds slots")
         if n > len(self._free):
             return None
-        if contiguous and n > 1:
+        if spatial and n > 1:
+            if n > self.pods:
+                return None
+            col = self.find_column(n)
+            if col is None:
+                return None
+            got = [p * self.per_pod + col for p in range(n)]
+            for s in got:
+                self._free.remove(s)
+            self._pinned.update(got)
+        elif contiguous and n > 1:
             start = self.find_run(n)
             if start is None:
                 return None
             got = list(range(start, start + n))
             for s in got:
                 self._free.remove(s)
+        elif self.pods > 1:
+            # unreplicated / unconstrained: fill from the highest pod
+            # down, keeping low-pod columns open for spatial groups
+            got = [self._free.pop() for _ in range(n)]
         else:
             got = [self._free.pop(0) for _ in range(n)]
         self._slots_of[rid] = got
@@ -267,11 +312,25 @@ class SlotManager:
         return list(got)  # caller-owned copy: relocate() mutates ours
 
     def find_run(self, n: int) -> Optional[int]:
-        """Start index of the leftmost run of ``n`` adjacent free slots."""
+        """Start index of the leftmost run of ``n`` adjacent free slots
+        (confined to one pod's block when ``pods > 1`` — a run crossing
+        a pod boundary is not adjacent on any device)."""
         free = set(self._free)
         for start in range(self.n_slots - n + 1):
+            if start // self.per_pod != (start + n - 1) // self.per_pod:
+                continue
             if all(start + i in free for i in range(n)):
                 return start
+        return None
+
+    def find_column(self, n: int) -> Optional[int]:
+        """Lowest column ``c`` whose slot is free on pods ``0..n-1`` —
+        the spatial-placement allocation unit (one replica per pod at a
+        shared column index)."""
+        free = set(self._free)
+        for c in range(self.per_pod):
+            if all(p * self.per_pod + c in free for p in range(n)):
+                return c
         return None
 
     def defrag_plan(self, n: int) -> Optional[list[tuple[int, int]]]:
@@ -287,6 +346,12 @@ class SlotManager:
         n - free_inside`` free slots outside it.  (When every window
         overlaps a replicated tenant, one is evacuated and loses
         adjacency — correctness is unaffected, the run layout degrades.)
+
+        Windows never cross a pod boundary (a cross-pod run is not
+        adjacent on any device) and never overlap a PINNED (spatial)
+        tenant — relocating one would tear a replica off its pod — so
+        with spatial tenants resident the plan can come back None even
+        when free capacity exists; the admission then simply waits.
         """
         if n > len(self._free):
             return None
@@ -297,12 +362,22 @@ class SlotManager:
             repl = sum(1 for s in occ if len(self._slots_of[self._owner[s]]) > 1)
             return (repl, len(occ)), occ
 
-        best_cost, best_start, best_occ = (n + 1, n + 1), 0, list(range(n))
+        best_cost, best_start, best_occ = None, None, None
         for start in range(self.n_slots - n + 1):
+            if start // self.per_pod != (start + n - 1) // self.per_pod:
+                continue
+            if any(s in self._pinned for s in range(start, start + n)):
+                continue
             c, occ = cost(start)
-            if c < best_cost:
+            if best_cost is None or c < best_cost:
                 best_cost, best_start, best_occ = c, start, occ
-        dsts = [s for s in sorted(free) if s < best_start or s >= best_start + n]
+        if best_start is None:
+            return None
+        dsts = [
+            s
+            for s in sorted(free)
+            if (s < best_start or s >= best_start + n) and s not in self._pinned
+        ]
         return list(zip(best_occ, dsts))
 
     def relocate(self, src: int, dst: int) -> str:
@@ -322,6 +397,7 @@ class SlotManager:
         got = self._slots_of.pop(rid, [])
         for s in got:
             del self._owner[s]
+            self._pinned.discard(s)
             self._free.append(s)
         self._free.sort()  # deterministic reuse order
         return got

@@ -210,6 +210,94 @@ def test_slot_manager_replica_alloc_release():
     assert sm.free == 3 and sm.alloc("next", 2) == [0, 1]
 
 
+def test_slot_manager_spatial_per_pod_accounting():
+    """Spatial groups reserve one slot PER POD at a shared column — no
+    contiguous run — and stay pinned through defrag; singles fill from
+    the high pods down so low-pod columns stay open for spatial tenants."""
+    sm = SlotManager(8, pods=4)                   # 2 columns per pod
+    assert sm.per_pod == 2
+    assert sm.alloc("dmr", 2, spatial=True) == [0, 2]      # col 0, pods 0-1
+    assert sm.alloc("tmr", 3, spatial=True) == [1, 3, 5]   # col 1, pods 0-2
+    assert sm.alloc("one", 1) == [7]              # singles: highest pod first
+    assert sm.alloc("two", 1) == [6]
+    assert sm.find_column(2) is None              # pod 0 exhausted
+    assert sm.alloc("dmr2", 2, spatial=True) is None
+    # release frees the column on every member pod; it is reused as-is
+    assert sorted(sm.release("dmr")) == [0, 2]
+    assert sm.alloc("dmr3", 2, spatial=True) == [0, 2]
+    # churn: per-pod accounting stays exact across interleaved traffic
+    sm.release("tmr"), sm.release("one")
+    assert sm.alloc("tmr2", 3, spatial=True) == [1, 3, 5]
+    assert sm.active == 6 and sm.free == 2        # {4, 7} free
+    assert sm.owner(3) == "tmr2" and sm.owner(2) == "dmr3"
+    # defrag never relocates a pinned spatial member and a window never
+    # crosses a pod boundary: the only candidate window is pod 3's [6, 7],
+    # evacuating the unpinned single into slot 4
+    assert sm.find_run(2) is None
+    assert sm.defrag_plan(2) == [(6, 4)]
+    assert sm.relocate(6, 4) == "two"
+    assert sm.alloc("pair", 2, contiguous=True) == [6, 7]
+    # spatial members survived all of it on their original pods
+    assert sm.slots_of("tmr2") == [1, 3, 5]
+
+
+def test_slot_manager_pods_must_divide_slots():
+    with pytest.raises(ValueError, match="pods"):
+        SlotManager(6, pods=4)
+
+
+def test_engine_config_deprecation_shim():
+    """The historical ``ServingEngine(prog, adapter, backend=..., **kw)``
+    kwarg surface warns but behaves identically to the equivalent
+    ``EngineConfig`` for one release."""
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        old = ServingEngine(*toy_parts(4), backend="lockstep", max_queue=7)
+    new = ServingEngine(*toy_parts(4),
+                        config=miso.EngineConfig(backend="lockstep",
+                                                 max_queue=7))
+    assert old.config == new.config               # same resolved config
+    toks = []
+    for eng in (old, new):
+        eng.start(jax.random.PRNGKey(0))
+        req = Request(prompt=[3.0, 1.0, 4.0], max_new_tokens=6,
+                      policy=miso.RedundancyPolicy(level=2))
+        assert eng.submit(req)
+        eng.pump()
+        assert eng.result(req.id)["status"] == DONE
+        toks.append(eng.result(req.id)["tokens"])
+        assert eng.queue.max_depth == 7
+    assert toks[0] == toks[1]                     # behavior-identical
+    # mixing the two surfaces is an error, not a silent merge
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(*toy_parts(4), config=miso.EngineConfig(), max_queue=3)
+
+
+def test_engine_config_validates_placement():
+    with pytest.raises(ValueError, match="placement"):
+        miso.EngineConfig(placement="sideways")
+    with pytest.raises(ValueError, match="mesh"):
+        miso.EngineConfig(placement="spatial")    # spatial needs a mesh
+
+
+def test_queue_expiry_emits_trace_event():
+    """The engine's queue-expiry sweep surfaces as a ``request_expired``
+    instant on the request's trace track."""
+    from repro.obs import Tracer
+
+    tracer = Tracer(capacity=64)
+    clock = [0.0]
+    eng = toy_engine(2, config=miso.EngineConfig(tracer=tracer),
+                     time_fn=lambda: clock[0])
+    doomed = Request(prompt=[1.0], max_new_tokens=2, deadline=1.0)
+    live = Request(prompt=[2.0], max_new_tokens=2)
+    assert eng.submit(doomed) and eng.submit(live)
+    clock[0] = 2.0                    # doomed expires in the queue
+    eng.pump()
+    assert eng.result(doomed.id)["status"] == EXPIRED
+    names = [e["name"] for e in tracer.events()]
+    assert "request_expired" in names
+
+
 def test_infer_slot_axes_mixed_ranks():
     axes = infer_slot_axes(lambda b: {
         "a": jnp.zeros((b,)), "b": jnp.zeros((3, b, 5)),
