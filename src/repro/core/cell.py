@@ -119,6 +119,24 @@ def state_spec(state: Pytree) -> Pytree:
     )
 
 
+def undeclared_read_error(
+    cell: CellType, key: object, available: tuple[str, ...]
+) -> MisoSemanticsError:
+    """The diagnostic for a transition touching a state it never declared:
+    names the offending cell, the undeclared read, and the declared +
+    available set, and points at the static analyzer — which reports the
+    same violation as diagnostic MISO001 without executing anything."""
+    return MisoSemanticsError(
+        f"cell {cell.name!r}: transition reads undeclared cell {key!r}.\n"
+        f"  declared reads: {list(cell.reads)} (self-reads are implicit)\n"
+        f"  available states: {sorted(available)}\n"
+        f"  fix: add {key!r} to CellType(name={cell.name!r}, reads=...), or "
+        f"delete the access.\n"
+        f"  hint: `python -m repro.analysis <program>` reports this "
+        f"statically (MISO001) before any trace runs."
+    )
+
+
 def check_single_output(
     cell: CellType, prev_specs: Mapping[str, Pytree]
 ) -> None:
@@ -131,8 +149,8 @@ def check_single_output(
     try:
         out = jax.eval_shape(cell.transition, restricted)
     except KeyError as e:  # read of an undeclared cell
-        raise MisoSemanticsError(
-            f"cell {cell.name!r}: transition reads undeclared cell {e}"
+        raise undeclared_read_error(
+            cell, e.args[0] if e.args else e, tuple(restricted)
         ) from None
     own_flat, own_def = jax.tree.flatten(own)
     out_flat, out_def = jax.tree.flatten(out)

@@ -88,17 +88,14 @@ class MisoProgram:
             specs[name] = s
         return specs
 
-    # -- validation ----------------------------------------------------------
-    def validate(self, key: Optional[jax.Array] = None) -> None:
-        """Check the MISO §II contract for every cell:
-        * declared reads exist (graph construction checks this),
-        * transitions touch only declared states (KeyError -> semantics error),
-        * single-output invariant: state structure is transition-invariant.
+    def state_specs(self, key: Optional[jax.Array] = None) -> dict:
+        """Abstract per-transition state specs: ShapeDtypeStruct skeletons of
+        every cell's state as a *transition* sees it (replica axes stripped).
+        Pure abstract eval — no FLOPs, no device buffers.  This is the view
+        the static analyzer (``repro.analysis``) traces transitions against.
         """
-        self.graph()  # validates read targets
         key = key if key is not None else jax.random.PRNGKey(0)
         states = jax.eval_shape(lambda k: self.init_states(k), key)
-        # strip replica axes for the per-transition view
         specs = {}
         for name, cell in self.cells.items():
             s = states[name]
@@ -107,5 +104,16 @@ class MisoProgram:
                     lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), s
                 )
             specs[name] = s
+        return specs
+
+    # -- validation ----------------------------------------------------------
+    def validate(self, key: Optional[jax.Array] = None) -> None:
+        """Check the MISO §II contract for every cell:
+        * declared reads exist (graph construction checks this),
+        * transitions touch only declared states (KeyError -> semantics error),
+        * single-output invariant: state structure is transition-invariant.
+        """
+        self.graph()  # validates read targets
+        specs = self.state_specs(key)
         for cell in self.cells.values():
             check_single_output(cell, specs)

@@ -30,7 +30,7 @@ from typing import Any, Mapping, Optional
 import jax
 import jax.numpy as jnp
 
-from .cell import CellType, restrict_reads
+from .cell import CellType, restrict_reads, undeclared_read_error
 from .fault import FaultSpec, bitcast_back, bitcast_uint, inject
 
 Pytree = Any
@@ -203,7 +203,12 @@ def replicated_transition(
     compare/vote epilogue — so both paths are bitwise-identical up to it."""
     canon = _canonical_reads(cell, prevs, levels)
     axes = _replica_in_axes(cell, {k: levels.get(k, 1) for k in canon})
-    new = jax.vmap(cell.transition, in_axes=(axes,))(canon)
+    try:
+        new = jax.vmap(cell.transition, in_axes=(axes,))(canon)
+    except KeyError as e:  # read of an undeclared cell, mid-trace
+        raise undeclared_read_error(
+            cell, e.args[0] if e.args else e, tuple(canon)
+        ) from None
     if fault is not None:
         new = inject(fault, cell_id=cell_id, step=step, replicated_state=new)
     return new
@@ -228,7 +233,13 @@ def run_transition(
     R = policy.level
 
     if R == 1:
-        new = cell.transition(_canonical_reads(cell, prevs, levels))
+        canon = _canonical_reads(cell, prevs, levels)
+        try:
+            new = cell.transition(canon)
+        except KeyError as e:  # read of an undeclared cell, mid-trace
+            raise undeclared_read_error(
+                cell, e.args[0] if e.args else e, tuple(canon)
+            ) from None
         if fault is not None:
             # unprotected cells are still physically strikeable — the flip
             # simply goes undetected (the paper's motivating failure mode)

@@ -1,0 +1,411 @@
+"""The MISO static analyzer: soundness, lints, DAG export, CLI gating."""
+
+import json
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    CODES,
+    analyze_program,
+    lint_source,
+    registry,
+    trace_cell,
+)
+from repro.analysis.cli import main as cli_main
+from repro.core import CellType, MisoProgram, RedundancyPolicy, run_scan
+from repro.core.cell import restrict_reads
+
+
+# ---------------------------------------------------------------------------
+# randomized program generator
+# ---------------------------------------------------------------------------
+
+
+def _rand_transition(name, used, rng):
+    """A transition consuming exactly ``used`` (plus self), with a
+    little per-cell arithmetic variety."""
+    coeffs = {d: rng.uniform(0.1, 0.9) for d in used}
+
+    def transition(prev):
+        out = prev[name]["x"] * 0.5 + prev[name]["y"].sum()
+        for d, c in coeffs.items():
+            out = out + c * jnp.tanh(prev[d]["x"])
+        return {"x": out, "y": prev[name]["y"] * 0.9}
+
+    return transition
+
+
+def _rand_program(seed):
+    """2-6 cells; declared reads are a superset of consumed reads, so
+    some declared reads are dead on purpose."""
+    rng = random.Random(seed)
+    n = rng.randint(2, 6)
+    names = [f"c{i}" for i in range(n)]
+    prog = MisoProgram()
+    dead_truth = {}
+    for i, name in enumerate(names):
+        declared = tuple(m for m in names[:i] if rng.random() < 0.6)
+        used = tuple(m for m in declared if rng.random() < 0.6)
+        dead_truth[name] = set(declared) - set(used)
+        prog.add(
+            CellType(
+                name,
+                init=lambda k: {
+                    "x": jax.random.normal(k, (3,)),
+                    "y": jnp.ones(2),
+                },
+                transition=_rand_transition(name, used, rng),
+                reads=declared,
+            )
+        )
+    return prog, dead_truth
+
+
+# ---------------------------------------------------------------------------
+# read-set soundness (acceptance criterion: >= 20 randomized programs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(24))
+def test_read_sets_sound_and_dead_reads_exact(seed):
+    """Every leaf the analyzer marks read is permitted by
+    restrict_reads, and the analyzer's dead reads match ground truth."""
+    prog, dead_truth = _rand_program(seed)
+    specs = prog.state_specs()
+    for name, cell in prog.cells.items():
+        access = trace_cell(cell, specs)
+        allowed = restrict_reads(cell, specs)
+        # soundness: reads only from the restricted view
+        for read_cell in access.reads:
+            assert read_cell in allowed, (
+                f"analyzer marked {name}->{read_cell} read, but "
+                f"restrict_reads does not permit it"
+            )
+        assert not access.undeclared
+        assert set(access.dead_reads) == dead_truth[name]
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_deleting_dead_reads_is_bitwise_identical(seed):
+    """Dropping every analyzer-reported dead read from the declared
+    reads leaves multi-step execution bitwise identical."""
+    prog, _ = _rand_program(seed + 1000)
+    specs = prog.state_specs()
+    dead = {
+        name: trace_cell(cell, specs).dead_reads
+        for name, cell in prog.cells.items()
+    }
+    if not any(dead.values()):
+        pytest.skip("no dead reads generated for this seed")
+
+    import dataclasses
+
+    pruned = MisoProgram()
+    for name, cell in prog.cells.items():
+        keep = tuple(r for r in cell.reads if r not in dead[name])
+        pruned.add(dataclasses.replace(cell, reads=keep))
+
+    states = prog.init_states(jax.random.PRNGKey(seed))
+    a, _, _ = run_scan(prog, states, 5)
+    b, _, _ = run_scan(pruned, states, 5)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# diagnostics
+# ---------------------------------------------------------------------------
+
+
+def _undeclared_prog():
+    a = CellType(
+        "a",
+        init=lambda k: {"x": jnp.zeros(3)},
+        transition=lambda p: {"x": p["a"]["x"] + 1},
+    )
+    b = CellType(
+        "b",
+        init=lambda k: {"y": jnp.zeros(3)},
+        transition=lambda p: {"y": p["a"]["x"] * 2},
+    )
+    return MisoProgram().add(a).add(b)
+
+
+def _const_key_dmr_prog():
+    c = CellType(
+        "noisy",
+        init=lambda k: {"x": jnp.zeros(4)},
+        transition=lambda p: {
+            "x": p["noisy"]["x"]
+            + jax.random.normal(jax.random.PRNGKey(0), (4,))
+        },
+        redundancy=RedundancyPolicy(level=2),
+    )
+    return MisoProgram().add(c)
+
+
+DOUBLE_WRITE = """
+cell Acc {
+  var s: Float = 0;
+  transition {
+    s = s + 1;
+    s = s * 2;
+  }
+}
+acc = new Acc(4)
+"""
+
+
+def test_undeclared_read_is_miso001():
+    result = analyze_program(_undeclared_prog(), name="bad")
+    codes = [d.code for d in result.diagnostics]
+    assert "MISO001" in codes
+    d = next(d for d in result.diagnostics if d.code == "MISO001")
+    assert d.cell == "b" and d.severity == "error"
+
+
+def test_const_key_replicated_is_miso101():
+    result = analyze_program(_const_key_dmr_prog(), name="bad")
+    assert [d.code for d in result.diagnostics] == ["MISO101"]
+    assert result.diagnostics[0].severity == "error"
+
+
+def test_threaded_key_replicated_is_clean():
+    def transition(p):
+        k0, k1 = jax.random.split(p["noisy"]["key"])
+        return {
+            "x": p["noisy"]["x"] + jax.random.normal(k1, (4,)),
+            "key": k0,
+        }
+
+    c = CellType(
+        "noisy",
+        init=lambda k: {"x": jnp.zeros(4), "key": jax.random.PRNGKey(0)},
+        transition=transition,
+        redundancy=RedundancyPolicy(level=3),
+    )
+    result = analyze_program(MisoProgram().add(c), name="ok")
+    assert not [d for d in result.diagnostics if d.code == "MISO101"]
+
+
+def test_const_key_unreplicated_is_allowed():
+    # The data pipeline's constant bigram table is the blessed in-repo
+    # example: deterministic draws are fine without replicas.
+    c = CellType(
+        "table",
+        init=lambda k: {"x": jnp.zeros(4)},
+        transition=lambda p: {
+            "x": p["table"]["x"]
+            + jax.random.normal(jax.random.PRNGKey(7), (4,))
+        },
+    )
+    result = analyze_program(MisoProgram().add(c), name="ok")
+    assert not [d for d in result.diagnostics if d.code == "MISO101"]
+
+
+def test_scatter_add_in_replicated_cell_is_miso102():
+    def transition(p):
+        idx = jnp.zeros((4, 1), jnp.int32)  # all collide on index 0
+        return {"x": p["acc"]["x"].at[idx[:, 0]].add(1.0)}
+
+    c = CellType(
+        "acc",
+        init=lambda k: {"x": jnp.zeros(4)},
+        transition=transition,
+        redundancy=RedundancyPolicy(level=2),
+    )
+    result = analyze_program(MisoProgram().add(c), name="bad")
+    assert "MISO102" in [d.code for d in result.diagnostics]
+
+
+def test_dtype_drift_is_miso103():
+    c = CellType(
+        "drift",
+        init=lambda k: {"x": jnp.zeros(3, jnp.float32)},
+        transition=lambda p: {
+            "x": p["drift"]["x"].astype(jnp.bfloat16).astype(jnp.float16)
+        },
+    )
+    result = analyze_program(MisoProgram().add(c), name="bad")
+    assert "MISO103" in [d.code for d in result.diagnostics]
+
+
+def test_carried_leaf_is_miso003_info():
+    result = analyze_program(registry()["serve:gqa"].build(), name="serve")
+    carried = [d for d in result.diagnostics if d.code == "MISO003"]
+    assert carried and carried[0].cell == "weights"
+    assert carried[0].severity == "info"
+
+
+def test_ir_double_write_is_miso110():
+    diags = lint_source(DOUBLE_WRITE, program="dw")
+    assert [d.code for d in diags] == ["MISO110"]
+
+
+def test_ir_undeclared_slot_write_is_miso111():
+    src = """
+    cell C {
+      var s: Float = 0;
+      transition { q = s + 1; }
+    }
+    c = new C(2)
+    """
+    diags = lint_source(src, program="t")
+    assert [d.code for d in diags] == ["MISO111"]
+
+
+def test_ir_unknown_instance_read_is_miso112():
+    src = """
+    cell C {
+      var s: Float = 0;
+      transition { s = s + ghost(this.pos).s; }
+    }
+    c = new C(2)
+    """
+    diags = lint_source(src, program="t")
+    assert [d.code for d in diags] == ["MISO112"]
+
+
+def test_all_codes_documented_in_taxonomy():
+    for code, (slug, severity, title) in CODES.items():
+        assert code.startswith("MISO") and len(code) == 7
+        assert severity in ("info", "warning", "error")
+        assert slug and title
+
+
+# ---------------------------------------------------------------------------
+# DAG export
+# ---------------------------------------------------------------------------
+
+
+def _diamond_prog():
+    def c(name, reads=()):
+        def transition(prev, _n=name, _r=tuple(reads)):
+            out = prev[_n]["x"] + 1.0
+            for d in _r:
+                out = out + prev[d]["x"]
+            return {"x": out}
+
+        return CellType(
+            name,
+            init=lambda k: {"x": jnp.zeros(2)},
+            transition=transition,
+            reads=tuple(reads),
+        )
+
+    return (
+        MisoProgram()
+        .add(c("src"))
+        .add(c("left", reads=("src",)))
+        .add(c("right", reads=("src",)))
+        .add(c("sink", reads=("left", "right")))
+    )
+
+
+def test_diamond_metrics_and_roundtrip():
+    prog = _diamond_prog()
+    result = analyze_program(prog, name="diamond")
+    assert result.dag is not None
+    m = result.dag.metrics()
+    assert m["critical_path"] == 3  # src -> {left,right} -> sink
+    assert m["width"] == 2  # left / right in parallel
+    assert m["n_cells"] == 4
+    assert m["n_cell_edges"] == 4 and m["n_dead_edges"] == 0
+
+    doc = json.loads(result.dag.to_json())
+    assert doc["schema"] == "miso-analysis-dag/v1"
+    sccs, edges = prog.graph().condensation()
+    assert doc["condensation"]["sccs"] == [list(c) for c in sccs]
+    assert doc["condensation"]["edges"] == {
+        str(i): sorted(js) for i, js in edges.items()
+    }
+
+    dot = result.dag.to_dot()
+    assert dot.startswith("digraph miso {")
+    assert '"src" -> "left"' in dot and '"right" -> "sink"' in dot
+
+
+def test_dag_condensation_matches_core_on_registry_programs():
+    for name in ("serve:gqa", "ir:pingpong", "ir:heat"):
+        spec = registry()[name]
+        prog = spec.build()
+        result = analyze_program(prog, name=name)
+        assert result.dag is not None
+        doc = json.loads(result.dag.to_json())
+        sccs, edges = prog.graph().condensation()
+        assert doc["condensation"]["sccs"] == [list(c) for c in sccs]
+        assert doc["condensation"]["edges"] == {
+            str(i): sorted(js) for i, js in edges.items()
+        }
+
+
+def test_validate_dag_tool_accepts_exports_and_rejects_corruption(tmp_path):
+    import importlib.util
+    import pathlib
+
+    tool = pathlib.Path(__file__).resolve().parents[1] / "tools" / "validate_dag.py"
+    spec = importlib.util.spec_from_file_location("validate_dag", tool)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    result = analyze_program(_diamond_prog(), name="diamond")
+    doc = json.loads(result.dag.to_json())
+    assert mod.validate_doc(doc) == []
+
+    broken = json.loads(result.dag.to_json())
+    broken["refined_reads"]["sink"].append("ghost")
+    assert mod.validate_doc(broken)
+
+    broken2 = json.loads(result.dag.to_json())
+    broken2["metrics"]["critical_path"] = 7
+    assert any("critical_path" in e for e in mod.validate_doc(broken2))
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_nonzero_on_undeclared_read():
+    assert cli_main(["test_analysis:_undeclared_prog"]) == 1
+
+
+def test_cli_exit_nonzero_on_const_key_dmr():
+    assert cli_main(["test_analysis:_const_key_dmr_prog"]) == 1
+
+
+def test_cli_exit_nonzero_on_ir_double_write(tmp_path):
+    p = tmp_path / "dw.miso"
+    p.write_text(DOUBLE_WRITE)
+    assert cli_main([str(p)]) == 1
+
+
+def test_cli_exit_zero_on_clean_programs(tmp_path):
+    rc = cli_main(["serve:gqa", "ir:listing1", "--json", "--dag-out", str(tmp_path)])
+    assert rc == 0
+    assert (tmp_path / "serve_gqa.json").exists()
+    assert (tmp_path / "ir_listing1.dot").exists()
+    doc = json.loads((tmp_path / "serve_gqa.json").read_text())
+    assert doc["schema"] == "miso-analysis-dag/v1"
+
+
+def test_cli_unknown_program_errors():
+    with pytest.raises(SystemExit):
+        cli_main(["no-such-program"])
+
+
+# ---------------------------------------------------------------------------
+# satellite: the in-repo programs are dead-read free (CI assertion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["serve:gqa", "serve:mamba", "ir:listing1", "ir:heat"])
+def test_registry_program_has_no_dead_reads(name):
+    spec = registry()[name]
+    result = analyze_program(spec.build(), name=name)
+    assert not [d for d in result.diagnostics if d.code == "MISO002"]
+    assert not [d for d in result.diagnostics if d.severity == "error"]

@@ -1,0 +1,132 @@
+"""core/graph.py edge cases + analyzer/graph subgraph properties."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import analyze_program, build_dag, trace_cell
+from repro.core import CellType, MisoProgram
+from repro.core.graph import DependencyGraph
+
+
+def _cell(name, reads=(), deps=None):
+    """A cell whose transition really consumes each cell in ``deps``
+    (defaults to ``reads``), so declared and actual reads coincide."""
+    deps = tuple(reads) if deps is None else tuple(deps)
+
+    def transition(prev, _name=name, _deps=deps):
+        out = prev[_name]["x"] + 1.0
+        for d in _deps:
+            out = out + 0.1 * prev[d]["x"]
+        return {"x": out}
+
+    return CellType(
+        name,
+        init=lambda k: {"x": jnp.zeros(2)},
+        transition=transition,
+        reads=tuple(reads),
+    )
+
+
+# -- DependencyGraph edge cases ---------------------------------------------
+
+
+def test_empty_program_graph():
+    g = DependencyGraph.from_cells({})
+    assert g.nodes == ()
+    assert g.sccs() == []
+    sccs, edges = g.condensation()
+    assert sccs == [] and edges == {}
+    assert g.topo_stages() == []
+    assert g.independent_groups() == []
+
+
+def test_single_self_reading_cell():
+    # Self-reads are implicit and never appear as graph edges.
+    prog = MisoProgram().add(_cell("solo", reads=("solo",)))
+    assert prog.cells["solo"].reads == ()  # normalized away
+    g = prog.graph()
+    assert g.sccs() == [("solo",)]
+    assert g.topo_stages() == [("solo",)]
+    assert g.readers_of("solo") == ()
+
+
+def test_two_disjoint_sccs():
+    # a <-> b and c <-> d: two 2-cycles with no edges between them.
+    prog = (
+        MisoProgram()
+        .add(_cell("a", reads=("b",)))
+        .add(_cell("b", reads=("a",)))
+        .add(_cell("c", reads=("d",)))
+        .add(_cell("d", reads=("c",)))
+    )
+    g = prog.graph()
+    assert sorted(g.sccs()) == [("a", "b"), ("c", "d")]
+    assert g.independent_groups() == [("a", "b"), ("c", "d")]
+    sccs, edges = g.condensation()
+    assert all(not e for e in edges.values())
+    # Both SCCs collapse into one wavefront stage each, at depth 0.
+    assert len(g.topo_stages()) == 1
+
+
+def test_condensation_deterministic():
+    def build():
+        return (
+            MisoProgram()
+            .add(_cell("w"))
+            .add(_cell("x", reads=("w",)))
+            .add(_cell("y", reads=("w", "x")))
+            .add(_cell("z", reads=("y", "x")))
+        )
+
+    results = [build().graph().condensation() for _ in range(5)]
+    first_sccs, first_edges = results[0]
+    for sccs, edges in results[1:]:
+        assert sccs == first_sccs
+        assert edges == first_edges
+    # producers-first topological order
+    order = {c[0]: i for i, c in enumerate(first_sccs)}
+    assert order["w"] < order["x"] < order["y"] < order["z"]
+
+
+# -- analyzer leaf graph vs declared graph ----------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_refined_graph_is_subgraph_of_declared(seed):
+    """Property: the analyzer's leaf-level graph, collapsed to cell
+    names, is a subgraph of the declared DependencyGraph (when the
+    program honors its contract, i.e. actual deps <= declared reads)."""
+    import random
+
+    rng = random.Random(seed)
+    names = [f"c{i}" for i in range(rng.randint(2, 6))]
+    prog = MisoProgram()
+    for i, n in enumerate(names):
+        declared = tuple(m for m in names[:i] if rng.random() < 0.6)  # DAG-shaped
+        # consume a random subset of the declared reads: the rest are dead
+        used = tuple(m for m in declared if rng.random() < 0.7)
+        prog.add(_cell(n, reads=declared, deps=used))
+    declared_graph = prog.graph()
+
+    analysis = analyze_program(prog, name=f"rand{seed}")
+    assert analysis.dag is not None
+    refined = analysis.dag.graph()
+    assert set(refined.nodes) == set(declared_graph.nodes)
+    for cell, reads in refined.reads.items():
+        assert set(reads) <= set(declared_graph.reads[cell])
+    for edge in analysis.dag.leaf_edges:
+        assert edge.cell in declared_graph.reads[edge.reader]
+
+
+def test_refined_condensation_matches_core_when_no_dead_reads():
+    # With every declared read consumed, refined == declared exactly.
+    prog = (
+        MisoProgram()
+        .add(_cell("a"))
+        .add(_cell("b", reads=("a",)))
+        .add(_cell("c", reads=("a",)))
+        .add(_cell("d", reads=("b", "c")))
+    )
+    accesses = {n: trace_cell(c, prog.state_specs()) for n, c in prog.cells.items()}
+    dag = build_dag(prog, accesses, name="diamond")
+    assert dag.graph().condensation() == prog.graph().condensation()

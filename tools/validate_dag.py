@@ -1,0 +1,233 @@
+#!/usr/bin/env python
+"""Standalone checker for analyzer DAG exports (miso-analysis-dag/v1).
+
+Validates ``python -m repro.analysis --dag-out`` JSON artifacts without
+importing jax or the repo:
+
+  python tools/validate_dag.py dags/*.json
+
+Checks (the invariants the future taskgraph backend relies on — see
+docs/analysis.md for the schema):
+
+  * schema tag is ``miso-analysis-dag/v1`` and required keys exist;
+  * every edge endpoint (leaf edges, refined/declared/dead reads) names
+    a cell in ``cells``;
+  * refined reads are a subset of declared reads, and disjoint from the
+    dead reads (refined + dead = declared, per reader);
+  * every refined edge is witnessed by at least one leaf edge;
+  * the condensation partitions the cells exactly once, its edges index
+    real SCCs, and it is topologically ordered producers-first;
+  * metrics are consistent: n_cells, edge counts, and critical_path and
+    width recomputed from the refined reads match the exported values.
+
+Exit status 0 = all files valid; 1 = any violation (each printed).  The
+CI ``analysis`` lane runs this over every exported program DAG.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_KEYS = (
+    "schema",
+    "program",
+    "cells",
+    "leaf_edges",
+    "refined_reads",
+    "declared_reads",
+    "dead_reads",
+    "condensation",
+    "metrics",
+)
+
+
+def _sccs(names, reads):
+    """Iterative Tarjan over the cell read graph (standalone mirror of
+    core/graph.py, so the validator needs no repo imports)."""
+    names = sorted(names)
+    index: dict[str, int] = {}
+    low: dict[str, int] = {}
+    on_stack: set[str] = set()
+    stack: list[str] = []
+    out: list[frozenset] = []
+    counter = [0]
+    for root in names:
+        if root in index:
+            continue
+        work = [(root, 0)]
+        while work:
+            node, pi = work[-1]
+            if pi == 0:
+                index[node] = low[node] = counter[0]
+                counter[0] += 1
+                stack.append(node)
+                on_stack.add(node)
+            recursed = False
+            succs = [r for r in reads.get(node, []) if r != node]
+            for i in range(pi, len(succs)):
+                w = succs[i]
+                if w not in index:
+                    work[-1] = (node, i + 1)
+                    work.append((w, 0))
+                    recursed = True
+                    break
+                if w in on_stack:
+                    low[node] = min(low[node], index[w])
+            if recursed:
+                continue
+            if low[node] == index[node]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    comp.append(w)
+                    if w == node:
+                        break
+                out.append(frozenset(comp))
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+    return out
+
+
+def _stages(names, reads):
+    """Wavefront stages (cycles collapse via the SCC condensation),
+    mirroring DependencyGraph.topo_stages without importing it."""
+    comps = _sccs(names, reads)
+    comp_of = {n: i for i, comp in enumerate(comps) for n in comp}
+    depth: dict[int, int] = {}
+    for i, comp in enumerate(comps):  # Tarjan emits reads-first
+        preds = {comp_of[r] for n in comp for r in reads.get(n, []) if comp_of[r] != i}
+        depth[i] = 1 + max((depth[j] for j in preds), default=-1)
+    stages: dict[int, set] = {}
+    for i, comp in enumerate(comps):
+        stages.setdefault(depth[i], set()).update(comp)
+    return [stages[d] for d in sorted(stages)]
+
+
+def validate_doc(doc) -> list[str]:
+    """Return a list of violation strings (empty = valid)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level is {type(doc).__name__}, expected object"]
+    for key in REQUIRED_KEYS:
+        if key not in doc:
+            errors.append(f"missing key {key!r}")
+    if errors:
+        return errors
+    if doc["schema"] != "miso-analysis-dag/v1":
+        errors.append(f"unknown schema {doc['schema']!r}")
+
+    cells = {c.get("name") for c in doc["cells"]}
+    if None in cells:
+        errors.append("a cells[] entry has no name")
+        cells.discard(None)
+
+    for e in doc["leaf_edges"]:
+        for end in ("reader", "cell"):
+            if e.get(end) not in cells:
+                errors.append(f"leaf edge {e} references unknown {end}")
+
+    refined = doc["refined_reads"]
+    declared = doc["declared_reads"]
+    dead = doc["dead_reads"]
+    for mapping, label in (
+        (refined, "refined_reads"),
+        (declared, "declared_reads"),
+        (dead, "dead_reads"),
+    ):
+        for reader, reads in mapping.items():
+            if reader not in cells:
+                errors.append(f"{label} reader {reader!r} unknown")
+            for r in reads:
+                if r not in cells:
+                    errors.append(f"{label}[{reader!r}] -> unknown {r!r}")
+
+    witnessed = {(e["reader"], e["cell"]) for e in doc["leaf_edges"]}
+    for reader in cells:
+        ref = set(refined.get(reader, []))
+        dec = set(declared.get(reader, []))
+        dd = set(dead.get(reader, []))
+        if not ref <= dec:
+            errors.append(f"{reader!r}: refined reads exceed declared")
+        if ref & dd:
+            errors.append(f"{reader!r}: dead reads overlap refined")
+        if ref | dd != dec:
+            errors.append(f"{reader!r}: refined + dead != declared")
+        for r in ref:
+            if (reader, r) not in witnessed:
+                errors.append(f"refined edge {reader!r}->{r!r} has no leaf witness")
+
+    cond = doc["condensation"]
+    seen: set = set()
+    for comp in cond["sccs"]:
+        for n in comp:
+            if n in seen:
+                errors.append(f"condensation repeats cell {n!r}")
+            seen.add(n)
+    if seen != cells:
+        errors.append("condensation does not partition the cells")
+    n_sccs = len(cond["sccs"])
+    for i_str, js in cond["edges"].items():
+        i = int(i_str)
+        if not 0 <= i < n_sccs:
+            errors.append(f"condensation edge source {i} out of range")
+        for j in js:
+            if not 0 <= j < n_sccs:
+                errors.append(f"condensation edge target {j} out of range")
+            elif j >= i:
+                errors.append(f"condensation not producers-first: {i} reads {j}")
+
+    m = doc["metrics"]
+    if m["n_cells"] != len(cells):
+        errors.append(f"metrics.n_cells {m['n_cells']} != {len(cells)}")
+    if m["n_leaf_edges"] != len(doc["leaf_edges"]):
+        errors.append("metrics.n_leaf_edges mismatch")
+    n_cell_edges = sum(len(r) for r in refined.values())
+    if m["n_cell_edges"] != n_cell_edges:
+        errors.append("metrics.n_cell_edges mismatch")
+    stages = _stages(cells, refined)
+    depth = len(stages)
+    width = max((len(s) for s in stages), default=0)
+    if cells and m["critical_path"] != depth:
+        errors.append(
+            f"metrics.critical_path {m['critical_path']} != recomputed "
+            f"{depth}"
+        )
+    if cells and m["width"] != width:
+        errors.append(f"metrics.width {m['width']} != recomputed {width}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: validate_dag.py dag.json [more.json ...]")
+        return 2
+    bad = False
+    for path in argv:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable: {e}")
+            bad = True
+            continue
+        errors = validate_doc(doc)
+        for err in errors:
+            print(f"{path}: {err}")
+        if errors:
+            bad = True
+        else:
+            m = doc.get("metrics", {})
+            print(
+                f"{path}: ok ({m.get('n_cells')} cells, "
+                f"critical path {m.get('critical_path')}, "
+                f"width {m.get('width')})"
+            )
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
